@@ -1,0 +1,104 @@
+"""Render the EXPERIMENTS.md roofline tables from the dry-run artifacts.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline_table [--dir benchmarks/results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(dirname: str, mesh: str):
+    recs = []
+    for f in sorted(glob.glob(f"{dirname}/*__{mesh}.json")):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+def render(dirname: str) -> str:
+    out = []
+    recs = load(dirname, "16x16")
+    out.append(
+        "| arch | shape | kind | mem/chip GB | fits | compute ms | memory ms | "
+        "collective ms | bottleneck | useful-FLOPs ratio |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], shape_order.get(r["shape"], 9)))
+    for r in recs:
+        if "skipped" in r:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                f"skip (full attn @500k) | — |"
+            )
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['analytic_memory']['total']/1e9:.2f} | "
+            f"{'Y' if r['fits_hbm'] else 'N'} | "
+            f"{fmt_ms(t['compute_s'])} | {fmt_ms(t['memory_s'])} | "
+            f"{fmt_ms(t['collective_s'])} | {t['bottleneck'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} |"
+        )
+    # multi-pod pass summary
+    mrecs = [r for r in load(dirname, "2x16x16") if "skipped" not in r]
+    ok = sum(1 for r in mrecs if "error" not in r)
+    out.append("")
+    out.append(
+        f"Multi-pod (2x16x16 = 512 chips) pass: {ok}/{len(mrecs)} cells "
+        "lower+compile successfully (the pod axis shards batch jointly with data)."
+    )
+    return "\n".join(out)
+
+
+def render_compare(base_dir: str, opt_dir: str) -> str:
+    """Baseline vs optimized table (step lower bounds and dominant terms)."""
+    base = {(r["arch"], r["shape"]): r for r in load(base_dir, "16x16") if "roofline" in r}
+    opt = {(r["arch"], r["shape"]): r for r in load(opt_dir, "16x16") if "roofline" in r}
+    out = [
+        "| arch | shape | baseline bound (ms) | optimized bound (ms) | speedup | "
+        "baseline bottleneck | optimized bottleneck |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    speedups = []
+    for key in sorted(base, key=lambda k: (k[0], shape_order.get(k[1], 9))):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        bb = b["roofline"]["step_s_lower_bound"]
+        ob = o["roofline"]["step_s_lower_bound"]
+        sp = bb / ob if ob else float("inf")
+        speedups.append(sp)
+        out.append(
+            f"| {key[0]} | {key[1]} | {bb*1e3:.2f} | {ob*1e3:.2f} | "
+            f"**{sp:.2f}x** | {b['roofline']['bottleneck'].replace('_s','')} | "
+            f"{o['roofline']['bottleneck'].replace('_s','')} |"
+        )
+    if speedups:
+        import numpy as np
+
+        out.append("")
+        out.append(
+            f"Geomean speedup of the step-time lower bound over "
+            f"{len(speedups)} cells: **{float(np.exp(np.mean(np.log(speedups)))):.2f}x** "
+            f"(max {max(speedups):.1f}x)."
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--compare", default=None, help="optimized results dir")
+    args = ap.parse_args()
+    if args.compare:
+        print(render_compare(args.dir, args.compare))
+    else:
+        print(render(args.dir))

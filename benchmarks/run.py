@@ -1,0 +1,124 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Kernel micro-benches and the
+roofline report (from the dry-run artifacts) are appended when available.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def kernel_microbench():
+    """Interpret-mode allclose + timing of each Pallas kernel vs oracle."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.belief import empty_log_belief, log_weight
+    from repro.core.mc import sample_pool_responses
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    theta, L, K, C = 4096, 12, 4, 8
+    p = rng.uniform(0.4, 0.95, L).astype(np.float32)
+    resp = sample_pool_responses(jax.random.key(0), jnp.asarray(p), K, theta)
+    masks = (rng.random((C, L)) < 0.6).astype(np.float32)
+    w = jnp.asarray(log_weight(p, K), jnp.float32)
+    empty = jnp.float32(empty_log_belief(p))
+    t0 = time.time()
+    got = ops.mc_correctness(resp, jnp.asarray(masks), w, empty, K)
+    t_k = time.time() - t0
+    want = ref.mc_correctness_ref(resp, jnp.asarray(masks), w, empty, K)
+    err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+    rows.append(("kernel_mc_correctness", t_k * 1e6, f"max_err={err:.1e}"))
+
+    B, M = 256, 12
+    responses = rng.integers(-1, K, (B, M)).astype(np.int32)
+    bw = rng.uniform(0.3, 3.0, (B, M)).astype(np.float32)
+    t0 = time.time()
+    gb, gp = ops.belief_aggregate(jnp.asarray(responses), jnp.asarray(bw), empty, K)
+    t_k = time.time() - t0
+    wb, wp = ref.belief_aggregate_ref(jnp.asarray(responses), jnp.asarray(bw), empty, K)
+    err = float(np.max(np.abs(np.asarray(gb) - np.asarray(wb))))
+    rows.append(("kernel_belief_aggregate", t_k * 1e6 / B, f"max_err={err:.1e}"))
+
+    q = jnp.asarray(rng.normal(0, 1, (1, 256, 4, 64)), jnp.float32)
+    kv = jnp.asarray(rng.normal(0, 1, (1, 256, 2, 64)), jnp.float32)
+    t0 = time.time()
+    got = ops.flash_attention(q, kv, kv, causal=True, block_q=64, block_kv=64)
+    t_k = time.time() - t0
+    want = ref.flash_attention_ref(q, kv, kv, causal=True)
+    err = float(np.max(np.abs(np.asarray(got, np.float32) - np.asarray(want, np.float32))))
+    rows.append(("kernel_flash_attention", t_k * 1e6, f"max_err={err:.1e}"))
+
+    la = -np.abs(rng.normal(0, 0.5, (2, 128, 256))).astype(np.float32)
+    u = rng.normal(0, 1, (2, 128, 256)).astype(np.float32)
+    h0 = np.zeros((2, 256), np.float32)
+    t0 = time.time()
+    gh, gl = ops.rglru_scan(la, u, h0)
+    t_k = time.time() - t0
+    wh, wl = ref.rglru_scan_ref(jnp.asarray(la), jnp.asarray(u), jnp.asarray(h0))
+    err = float(np.max(np.abs(np.asarray(gh) - np.asarray(wh))))
+    rows.append(("kernel_rglru_scan", t_k * 1e6, f"max_err={err:.1e}"))
+    return rows
+
+
+def roofline_report():
+    """Summarize the dry-run roofline table (if artifacts exist)."""
+    import glob
+    import json
+
+    import numpy as np
+
+    recs = []
+    for f in sorted(glob.glob("benchmarks/results/dryrun/*__16x16.json")):
+        r = json.load(open(f))
+        if "roofline" in r:
+            recs.append(r)
+    if not recs:
+        return [("roofline_report", 0.0, "no dry-run artifacts (run repro.launch.dryrun --all)")]
+    n_fit = sum(r["fits_hbm"] for r in recs)
+    bottl = {}
+    for r in recs:
+        bottl[r["roofline"]["bottleneck"]] = bottl.get(r["roofline"]["bottleneck"], 0) + 1
+    ratios = [r["useful_flops_ratio"] for r in recs if r["kind"] == "train"]
+    return [(
+        "roofline_summary", 0.0,
+        f"cells={len(recs)};fits={n_fit};bottlenecks={bottl};"
+        f"train_useful_flops_ratio_mean={np.mean(ratios):.2f}",
+    )]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on bench name")
+    args = ap.parse_args()
+
+    from benchmarks.paper_benches import ALL
+
+    print("name,us_per_call,derived")
+    for name, fn in ALL:
+        if args.only and args.only not in name:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}")
+        sys.stdout.flush()
+    if not args.only or "kernel" in args.only:
+        for name, us, derived in kernel_microbench():
+            print(f"{name},{us:.1f},{derived}")
+    if not args.only or "roofline" in args.only:
+        for name, us, derived in roofline_report():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

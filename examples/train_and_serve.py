@@ -1,0 +1,123 @@
+"""End-to-end driver: TRAIN a pool of real JAX models (~2M-60M params,
+a few hundred steps each), CALIBRATE their success probabilities on a
+historical split, then SERVE batched classification queries through the
+ThriftLLM router with per-query budgets — the paper's Figure-1 pipeline
+with live models, plus checkpoint/restart fault tolerance.
+
+Run:  PYTHONPATH=src python examples/train_and_serve.py [--steps 300]
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.estimation import SuccessProbEstimator
+from repro.data import DataPipeline, make_token_task
+from repro.models import LM, ModelConfig
+from repro.serving import LMArm, PoolEngine, ThriftRouter
+from repro.training import OptimizerConfig, init_train_state, make_train_step
+
+K = 8          # classes
+SEQ = 64
+VOCAB = 512
+
+
+ARMS = [
+    # (name, d_model, layers, heads, train_steps)
+    ("nano", 32, 1, 2, 120),
+    ("micro", 48, 2, 4, 200),
+    ("tiny", 64, 2, 4, 300),
+    ("small", 96, 3, 4, 300),
+]
+
+
+def train_arm(name, d_model, layers, heads, steps, data, ckpt_dir, batch=32):
+    cfg = ModelConfig(
+        name=name, family="dense", num_layers=layers, d_model=d_model,
+        num_heads=heads, num_kv_heads=max(1, heads // 2), d_ff=2 * d_model,
+        vocab_size=VOCAB, dtype="float32", remat=False, tie_embeddings=True,
+    )
+    model = LM(cfg)
+    params, opt = init_train_state(model, jax.random.key(hash(name) % 2**31))
+    step_fn = jax.jit(
+        make_train_step(model, OptimizerConfig(lr=6e-3, warmup_steps=20, total_steps=steps))
+    )
+    mgr = CheckpointManager(os.path.join(ckpt_dir, name), keep_last=2)
+
+    toks = data["tokens"]
+    n = toks.shape[0]
+
+    def make_batch(s):
+        i = (s * batch) % (n - batch)
+        return {"tokens": toks[i : i + batch]}
+
+    pipe = DataPipeline(make_batch, prefetch=2)
+    start, losses = 0, []
+    t0 = time.time()
+    restored_step, state = mgr.restore_latest({"params": params, "opt": opt})
+    if restored_step is not None:
+        params, opt = state["params"], state["opt"]
+        start = restored_step + 1
+        print(f"  [{name}] resumed from checkpoint step {restored_step}")
+    for s in range(start, steps):
+        b = next(pipe)
+        params, opt, m = step_fn(params, opt, {"tokens": jnp.asarray(b["tokens"])})
+        losses.append(float(m["loss"]))
+        if s % 100 == 0 and s:
+            mgr.save(s, {"params": params, "opt": opt})
+    pipe.close()
+    print(
+        f"  [{name}] {cfg.param_count()/1e6:.2f}M params, {steps} steps in "
+        f"{time.time()-t0:.1f}s, loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}"
+    )
+    return LMArm(name, model, params, data["class_token_ids"], tokens_per_query=SEQ)
+
+
+def embed_queries(tokens):
+    return np.stack([np.bincount(t, minlength=VOCAB) for t in tokens]).astype(float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=0, help="override per-arm steps")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpts")
+    args = ap.parse_args()
+
+    print("== 1. train the model pool ==")
+    data = make_token_task(K, SEQ, VOCAB, n=4096, seed=0)
+    arms = []
+    for name, d, l, h, steps in ARMS:
+        arms.append(
+            train_arm(name, d, l, h, args.steps or steps, data, args.ckpt)
+        )
+    engine = PoolEngine(arms)
+
+    print("\n== 2. calibrate success probabilities (Section 3.1) ==")
+    hist = make_token_task(K, SEQ, VOCAB, n=1024, seed=1)
+    T = np.zeros((1024, len(arms)))
+    for a, arm in enumerate(arms):
+        T[:, a] = arm.classify_batch(hist["tokens"]) == hist["labels"]
+    for arm, acc in zip(arms, T.mean(0)):
+        print(f"  {arm.name:6s} acc={acc:.3f} cost={arm.cost:.3e} USD/query")
+    est = SuccessProbEstimator(T, embed_queries(hist["tokens"]), np.zeros(1024, np.int64))
+
+    print("\n== 3. serve with ThriftLLM under per-query budgets ==")
+    router = ThriftRouter(engine, est, num_classes=K)
+    test = make_token_task(K, SEQ, VOCAB, n=512, seed=2)
+    temb = embed_queries(test["tokens"])
+    print(f"{'budget':>12} {'accuracy':>9} {'mean cost':>11} {'saving':>7}")
+    for mult in [1.2, 2.5, 5.0, 100.0]:
+        budget = float(np.sort(engine.costs)[0]) * mult
+        res = router.route_batch(test["tokens"], temb, budget)
+        acc = (res.predictions == test["labels"]).mean()
+        saving = 1 - res.costs.sum() / max(res.planned_costs.sum(), 1e-15)
+        assert (res.costs <= budget + 1e-15).all()
+        print(f"{budget:12.3e} {acc:9.3f} {res.costs.mean():11.3e} {saving:6.1%}")
+
+
+if __name__ == "__main__":
+    main()

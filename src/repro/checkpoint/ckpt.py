@@ -1,0 +1,101 @@
+"""Shard-aware checkpointing (npz-based, no orbax).
+
+Layout: ``<dir>/step_<n>/shard_<host>.npz`` + ``meta.json``; writes go to a
+``.tmp`` sibling then atomic-rename, so a crash mid-save can never corrupt
+the latest checkpoint. ``restore_latest`` walks steps downward until a
+complete checkpoint is found — the restart path after a node failure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        leaves.append(np.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, [l for _, l in zip(paths, leaves)])
+
+
+class CheckpointManager:
+    """Periodic checkpointing with retention GC and crash-safe writes."""
+
+    def __init__(self, directory: str, keep_last: int = 3, host_id: int = 0,
+                 num_hosts: int = 1):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra_meta: Optional[Dict] = None):
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"shard_{self.host_id}.npz"), **_flatten(state))
+        if self.host_id == 0:
+            meta = {"step": step, "num_hosts": self.num_hosts}
+            meta.update(extra_meta or {})
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+        # single-host: rename is the commit point
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, template: Any) -> Any:
+        path = os.path.join(self.dir, f"step_{step:09d}", f"shard_{self.host_id}.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten_into(template, flat)
+
+    def restore_latest(self, template: Any) -> Tuple[Optional[int], Any]:
+        """Returns (step, state) of the newest complete checkpoint, or
+        (None, template) when none exists."""
+        for step in reversed(self.list_steps()):
+            try:
+                return step, self.restore(step, template)
+            except Exception:
+                continue  # incomplete/corrupt: fall back to the previous one
+        return None, template

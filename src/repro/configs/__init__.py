@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` resolves through here.
+
+Every assigned architecture has a module exporting ``CONFIG`` (the exact
+published configuration) and ``SMOKE`` (a reduced same-family config for CPU
+tests). ``thrift_pool`` builds the paper's LLM-operator pool over these.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "internvl2-2b": "internvl2_2b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "starcoder2-7b": "starcoder2_7b",
+    "smollm-135m": "smollm_135m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE

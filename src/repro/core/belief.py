@@ -1,0 +1,173 @@
+"""Response aggregation by maximum likelihood (paper Section 3.2).
+
+Given responses R(l) of an ensemble S on a K-class query, the belief of
+class C_k is (Eq. 4):
+
+    h(C_k | phi) = prod_{l in S(C_k)} p_l (K-1) / (1 - p_l)
+
+and the aggregated prediction is argmax_k h (Fact 1). We work in log space:
+``log_weight(p) = log(p) + log(K-1) - log(1-p)`` and beliefs are sums of the
+weights of the arms that voted for each class. Classes with no votes receive
+the paper's heuristic belief ``p_min / (2 (1 - p_min))``.
+
+Everything here has two forms: a numpy scalar-path for the control plane and
+a JAX batched path (one-hot matmul, MXU-friendly) for the serving data plane.
+The Pallas kernel in ``repro.kernels.belief_aggregate`` implements the same
+contraction with explicit VMEM tiling; ``ref.py`` there delegates to
+:func:`aggregate_log_beliefs_batch`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import P_FLOOR, clip_probs
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+
+def log_weight(p: np.ndarray, num_classes: int, floor: float = P_FLOOR) -> np.ndarray:
+    """log of p(K-1)/(1-p), the per-arm multiplicative belief weight."""
+    p = clip_probs(p, floor)
+    return np.log(p) + np.log(num_classes - 1.0) - np.log1p(-p)
+
+
+def empty_log_belief(p_all: np.ndarray, floor: float = P_FLOOR) -> float:
+    """Paper heuristic for classes with no votes: p_min / (2 (1 - p_min))."""
+    p_min = float(np.min(clip_probs(p_all, floor)))
+    return float(np.log(p_min) - np.log(2.0) - np.log1p(-p_min))
+
+
+def log_weight_jnp(p: jnp.ndarray, num_classes: int, floor: float = P_FLOOR) -> jnp.ndarray:
+    p = jnp.clip(p.astype(jnp.float32), floor, 1.0 - floor)
+    return jnp.log(p) + jnp.log(num_classes - 1.0) - jnp.log1p(-p)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation: numpy control-plane path
+# ---------------------------------------------------------------------------
+
+
+def aggregate_log_beliefs(
+    responses: np.ndarray,
+    weights: np.ndarray,
+    num_classes: int,
+    empty_belief: float,
+) -> np.ndarray:
+    """(m,) responses + (m,) log-weights -> (K,) log-beliefs.
+
+    Empty classes (no votes) get ``empty_belief``.
+    """
+    responses = np.asarray(responses, np.int64)
+    beliefs = np.zeros(num_classes, np.float64)
+    counts = np.zeros(num_classes, np.int64)
+    np.add.at(beliefs, responses, np.asarray(weights, np.float64))
+    np.add.at(counts, responses, 1)
+    beliefs[counts == 0] = empty_belief
+    return beliefs
+
+
+def predict_from_beliefs(
+    beliefs: np.ndarray, rng: Optional[np.random.Generator] = None, tol: float = 1e-9
+) -> Tuple[int, int]:
+    """argmax with random tie-break; returns (class, n_ties)."""
+    mx = float(np.max(beliefs))
+    ties = np.flatnonzero(beliefs >= mx - tol)
+    if len(ties) == 1 or rng is None:
+        return int(ties[0]), len(ties)
+    return int(rng.choice(ties)), len(ties)
+
+
+def aggregate_predict(
+    responses: np.ndarray,
+    probs: np.ndarray,
+    num_classes: int,
+    method: str = "ml",
+    rng: Optional[np.random.Generator] = None,
+    p_all: Optional[np.ndarray] = None,
+) -> int:
+    """Full aggregation pipeline for one query.
+
+    Args:
+      responses: (m,) class ids predicted by the invoked arms.
+      probs: (m,) success probabilities of those arms on this query class.
+      method: ``"ml"`` (paper, Eq. 4) | ``"weighted"`` (sum of p as vote
+        weight) | ``"majority"`` (unweighted) -- the Fig. 14 ablation.
+      p_all: pool-wide probs for the empty-class heuristic (defaults to
+        ``probs``).
+    """
+    if len(responses) == 0:
+        return int(rng.integers(num_classes)) if rng is not None else 0
+    probs = np.asarray(probs, np.float64)
+    if method == "ml":
+        w = log_weight(probs, num_classes)
+        empty = empty_log_belief(probs if p_all is None else p_all)
+    elif method == "weighted":
+        w = probs
+        empty = 0.0
+    elif method == "majority":
+        w = np.ones_like(probs)
+        empty = 0.0
+    else:
+        raise ValueError(f"unknown aggregation method: {method}")
+    beliefs = aggregate_log_beliefs(responses, w, num_classes, empty)
+    pred, _ = predict_from_beliefs(beliefs, rng)
+    return pred
+
+
+def top2_beliefs(beliefs: np.ndarray) -> Tuple[float, float, int]:
+    """Return (H1, H2, argmax) of a (K,) log-belief vector (Algorithm 3)."""
+    order = np.argsort(beliefs)
+    h1 = float(beliefs[order[-1]])
+    h2 = float(beliefs[order[-2]]) if len(beliefs) > 1 else -np.inf
+    return h1, h2, int(order[-1])
+
+
+# ---------------------------------------------------------------------------
+# Aggregation: JAX batched data-plane path
+# ---------------------------------------------------------------------------
+
+
+def aggregate_log_beliefs_batch(
+    responses: jnp.ndarray,      # (B, m) int32 class ids; -1 = arm not invoked
+    log_weights: jnp.ndarray,    # (m,) or (B, m) float32
+    num_classes: int,
+    empty_belief: jnp.ndarray | float,  # scalar or (B,)
+) -> jnp.ndarray:
+    """Batched belief aggregation as a one-hot contraction.
+
+    Returns (B, K) float32 log-beliefs. Arms flagged ``-1`` contribute
+    nothing (masked). Votes accumulate as ``onehot(resp) @ diag(w)`` which
+    lowers to an MXU matmul on TPU; this function is also the oracle for the
+    ``belief_aggregate`` Pallas kernel.
+    """
+    responses = responses.astype(jnp.int32)
+    valid = (responses >= 0)
+    safe = jnp.where(valid, responses, 0)
+    onehot = jax.nn.one_hot(safe, num_classes, dtype=jnp.float32)      # (B, m, K)
+    onehot = onehot * valid[..., None].astype(jnp.float32)
+    w = jnp.asarray(log_weights, jnp.float32)
+    if w.ndim == 1:
+        w = jnp.broadcast_to(w[None, :], responses.shape)
+    beliefs = jnp.einsum("bm,bmk->bk", w, onehot)                       # (B, K)
+    counts = jnp.einsum("bm,bmk->bk", valid.astype(jnp.float32), onehot)
+    empty = jnp.asarray(empty_belief, jnp.float32)
+    if empty.ndim == 0:
+        empty = jnp.broadcast_to(empty, (responses.shape[0],))
+    return jnp.where(counts > 0, beliefs, empty[:, None])
+
+
+def predict_batch(
+    responses: jnp.ndarray,
+    log_weights: jnp.ndarray,
+    num_classes: int,
+    empty_belief: jnp.ndarray | float,
+) -> jnp.ndarray:
+    """Batched argmax-belief prediction; deterministic first-index tie-break."""
+    beliefs = aggregate_log_beliefs_batch(responses, log_weights, num_classes, empty_belief)
+    return jnp.argmax(beliefs, axis=-1).astype(jnp.int32)

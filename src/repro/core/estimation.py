@@ -1,0 +1,202 @@
+"""Success-probability estimation from historical data (Section 3.1 + 4.4).
+
+Pipeline: embed historical queries -> cluster (K-means / DBSCAN) -> per-cluster
+per-arm accuracy means p-hat with confidence intervals (Hoeffding / Wilson)
+-> optional median-boosting of the interval failure probability (Lemma 5)
+-> at query time, map a test embedding to the nearest cluster and read its
+p-hat vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .types import QueryClass
+
+
+# ---------------------------------------------------------------------------
+# Confidence intervals
+# ---------------------------------------------------------------------------
+
+
+def hoeffding_interval(p_hat: np.ndarray, n: int, delta: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Two-sided Hoeffding CI at confidence 1 - delta."""
+    if n <= 0:
+        return np.zeros_like(p_hat), np.ones_like(p_hat)
+    half = math.sqrt(math.log(2.0 / delta) / (2.0 * n))
+    return np.clip(p_hat - half, 0.0, 1.0), np.clip(p_hat + half, 0.0, 1.0)
+
+
+def wilson_interval(p_hat: np.ndarray, n: int, delta: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Wilson score interval — tighter than Hoeffding at small n."""
+    if n <= 0:
+        return np.zeros_like(p_hat), np.ones_like(p_hat)
+    # two-sided normal quantile via inverse erf
+    from scipy.special import erfinv
+
+    z = math.sqrt(2.0) * float(erfinv(1.0 - delta))
+    denom = 1.0 + z * z / n
+    center = (p_hat + z * z / (2 * n)) / denom
+    half = z * np.sqrt(p_hat * (1 - p_hat) / n + z * z / (4 * n * n)) / denom
+    return np.clip(center - half, 0.0, 1.0), np.clip(center + half, 0.0, 1.0)
+
+
+def median_boost_rounds(num_arms: int, delta: float, delta_l: float) -> int:
+    """Lemma 5 repetition count: Lambda_l = 6 log(L/delta) / (1-2 delta_l)^2."""
+    if delta_l >= 0.5:
+        raise ValueError("median boosting needs delta_l < 1/2")
+    return max(1, int(math.ceil(6.0 * math.log(num_arms / delta) / (1.0 - 2.0 * delta_l) ** 2)))
+
+
+def median_boosted_interval(
+    table: np.ndarray,            # (n, L) boolean outcomes for one cluster
+    delta: float,
+    delta_l: float = 0.25,
+    subsample_frac: float = 0.5,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Median-of-repetitions interval (Lemma 5).
+
+    Repeats the base estimator Lambda times on bootstrap subsamples and takes
+    the interval whose center is the median estimate, driving the failure
+    probability down to exp(-Lambda (1-2 delta_l)^2 / 2).
+
+    Returns (p_hat, lo, hi), each (L,).
+    """
+    n, L = table.shape
+    rounds = median_boost_rounds(L, delta, delta_l)
+    rng = np.random.default_rng(seed)
+    sub_n = max(1, int(n * subsample_frac))
+    ests = np.empty((rounds, L))
+    los = np.empty((rounds, L))
+    his = np.empty((rounds, L))
+    for r in range(rounds):
+        idx = rng.choice(n, size=sub_n, replace=True)
+        p_hat = table[idx].mean(axis=0)
+        lo, hi = hoeffding_interval(p_hat, sub_n, delta_l)
+        ests[r], los[r], his[r] = p_hat, lo, hi
+    med = np.argsort(ests, axis=0)[rounds // 2]
+    cols = np.arange(L)
+    return ests[med, cols], los[med, cols], his[med, cols]
+
+
+# ---------------------------------------------------------------------------
+# Historical-table estimation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    """Per-cluster success-probability estimates over the pool."""
+
+    centroid: np.ndarray          # (d,) embedding centroid
+    p_hat: np.ndarray             # (L,)
+    lo: np.ndarray                # (L,)
+    hi: np.ndarray                # (L,)
+    count: int
+
+
+class SuccessProbEstimator:
+    """Section 3.1 estimator: cluster historical queries, average accuracy.
+
+    Args:
+      table: (N, L) boolean historical response-correctness matrix T.
+      embeddings: (N, d) query embeddings.
+      cluster_ids: (N,) precomputed cluster assignment (from
+        ``repro.core.clustering``).
+      delta: per-arm interval failure probability target.
+      boost: apply Lemma-5 median boosting to the intervals.
+    """
+
+    def __init__(
+        self,
+        table: np.ndarray,
+        embeddings: np.ndarray,
+        cluster_ids: np.ndarray,
+        delta: float = 0.01,
+        boost: bool = False,
+        min_cluster_size: int = 3,
+    ):
+        table = np.asarray(table, np.float64)
+        embeddings = np.asarray(embeddings, np.float64)
+        cluster_ids = np.asarray(cluster_ids, np.int64)
+        self.num_arms = table.shape[1]
+        self.clusters: Dict[int, ClusterStats] = {}
+        self._global_p = table.mean(axis=0)
+
+        for cid in np.unique(cluster_ids):
+            if cid < 0:  # DBSCAN noise: folded into the global estimate
+                continue
+            idx = np.flatnonzero(cluster_ids == cid)
+            if idx.size < min_cluster_size:
+                continue
+            sub = table[idx]
+            if boost:
+                p_hat, lo, hi = median_boosted_interval(sub, delta)
+            else:
+                p_hat = sub.mean(axis=0)
+                lo, hi = hoeffding_interval(p_hat, idx.size, delta)
+            self.clusters[int(cid)] = ClusterStats(
+                centroid=embeddings[idx].mean(axis=0),
+                p_hat=p_hat,
+                lo=lo,
+                hi=hi,
+                count=int(idx.size),
+            )
+        if not self.clusters:  # degenerate: one global cluster
+            lo, hi = hoeffding_interval(self._global_p, table.shape[0], delta)
+            self.clusters[0] = ClusterStats(
+                centroid=embeddings.mean(axis=0),
+                p_hat=self._global_p,
+                lo=lo,
+                hi=hi,
+                count=table.shape[0],
+            )
+        self._centroids = np.stack([c.centroid for c in self.clusters.values()])
+        self._cids = np.asarray(list(self.clusters.keys()))
+
+    def lookup(self, embedding: np.ndarray) -> ClusterStats:
+        """Nearest-centroid mapping of a test query to a historical cluster
+        (the paper's semantic-similarity mapping, App. B)."""
+        d = np.linalg.norm(self._centroids - embedding[None, :], axis=1)
+        return self.clusters[int(self._cids[int(np.argmin(d))])]
+
+    def lookup_batch(self, embeddings: np.ndarray) -> np.ndarray:
+        """(B, d) -> (B,) cluster ids."""
+        d = ((embeddings[:, None, :] - self._centroids[None, :, :]) ** 2).sum(-1)
+        return self._cids[np.argmin(d, axis=1)]
+
+    def update(
+        self, cluster_id: int, outcomes: np.ndarray, delta: float = 0.01
+    ) -> ClusterStats:
+        """Online recalibration: fold a batch of observed per-arm correctness
+        outcomes (n, L) into the cluster's running estimate — the production
+        analogue of the paper's growing historical table. Counts accumulate
+        exactly (streaming mean) and the CI tightens with n."""
+        st = self.clusters[int(cluster_id)]
+        outcomes = np.atleast_2d(np.asarray(outcomes, np.float64))
+        n_new = outcomes.shape[0]
+        total = st.count + n_new
+        st.p_hat = (st.p_hat * st.count + outcomes.sum(axis=0)) / total
+        st.count = int(total)
+        st.lo, st.hi = hoeffding_interval(st.p_hat, st.count, delta)
+        return st
+
+    def query_class(
+        self, embedding: np.ndarray, num_classes: int, alpha: Optional[float] = None
+    ) -> QueryClass:
+        """Build a QueryClass for a test query; ``alpha`` optionally overrides
+        the interval width (the Table 6 ablation: lo = p - a/2, hi = p + a/2)."""
+        st = self.lookup(embedding)
+        if alpha is not None:
+            lo = np.clip(st.p_hat - alpha / 2, 0.0, 1.0)
+            hi = np.clip(st.p_hat + alpha / 2, 0.0, 1.0)
+        else:
+            lo, hi = st.lo, st.hi
+        return QueryClass(
+            probs=st.p_hat, num_classes=num_classes, lo=lo, hi=hi,
+            meta={"count": st.count},
+        )

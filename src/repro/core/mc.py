@@ -1,0 +1,127 @@
+"""Monte-Carlo estimation of the correctness probability (Lemma 4).
+
+The estimator draws ``theta`` synthetic observations of the *whole pool* once
+(common random numbers) and evaluates any candidate subset as a masked belief
+contraction over those shared draws. CRN pairs the greedy comparisons, which
+substantially reduces the variance of marginal-gain rankings and means one
+``sample + one-hot`` materialization serves an entire SurGreedyLLM run.
+
+The masked evaluation is a dense ``(C, L) x (theta, L, K)`` contraction — the
+TPU hot-spot of the selector. ``repro.kernels.mc_correctness`` implements it
+as a Pallas kernel with theta-tiling; :func:`xi_from_responses` is its oracle.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .belief import empty_log_belief, log_weight
+from .types import clip_probs
+
+TIE_TOL = 1e-6
+
+
+def theta_for(eps: float, delta: float, p_star: float, num_arms: int) -> int:
+    """theta = (8 + 2 eps) / (eps^2 p*) * ln(2 L^2 / delta)  (Algorithm 3)."""
+    p_star = max(p_star, 1e-6)
+    theta = (8.0 + 2.0 * eps) / (eps * eps * p_star) * math.log(2.0 * num_arms * num_arms / delta)
+    return int(math.ceil(theta))
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "theta"))
+def sample_pool_responses(
+    key: jax.Array, p: jnp.ndarray, num_classes: int, theta: int
+) -> jnp.ndarray:
+    """(theta, L) int32 responses of every arm, ground truth = class 0.
+
+    Arm i answers 0 w.p. p_i, else uniformly one of the K-1 wrong classes.
+    """
+    num_arms = p.shape[0]
+    ku, kc = jax.random.split(key)
+    u = jax.random.uniform(ku, (theta, num_arms))
+    wrong = jax.random.randint(kc, (theta, num_arms), 1, num_classes)
+    return jnp.where(u < p[None, :], 0, wrong).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def xi_from_responses(
+    responses: jnp.ndarray,     # (theta, L) int32
+    masks: jnp.ndarray,         # (C, L) float32 subset indicators
+    log_weights: jnp.ndarray,   # (L,) float32
+    empty_belief: jnp.ndarray,  # scalar float32
+    num_classes: int,
+) -> jnp.ndarray:
+    """Estimate xi for C candidate subsets from shared response draws.
+
+    Returns (C,) float32. Fractional tie credit reproduces random
+    tie-breaking in expectation. This function is the pure-jnp oracle of the
+    ``mc_correctness`` Pallas kernel.
+    """
+    onehot = jax.nn.one_hot(responses, num_classes, dtype=jnp.float32)  # (T, L, K)
+    mw = masks * log_weights[None, :]                                   # (C, L)
+    beliefs = jnp.einsum("cl,tlk->ctk", mw, onehot)                     # (C, T, K)
+    counts = jnp.einsum("cl,tlk->ctk", masks, onehot)
+    beliefs = jnp.where(counts > 0, beliefs, empty_belief)
+    mx = jnp.max(beliefs, axis=-1, keepdims=True)
+    is_max = (beliefs >= mx - TIE_TOL).astype(jnp.float32)
+    ties = jnp.sum(is_max, axis=-1)
+    credit = is_max[:, :, 0] / ties
+    return jnp.mean(credit, axis=-1)
+
+
+class McXiEstimator:
+    """Stateful CRN estimator bound to one (pool, query-class) pair.
+
+    Usage::
+
+        est = McXiEstimator(key, p, K, theta)
+        vals = est(masks)          # (C,) numpy
+        x    = est.xi(indices)     # scalar
+    """
+
+    def __init__(
+        self,
+        key: jax.Array,
+        p: np.ndarray,
+        num_classes: int,
+        theta: int,
+        p_all: Optional[np.ndarray] = None,
+        use_kernel: bool = False,
+    ):
+        self.p = clip_probs(p)
+        self.num_arms = int(self.p.size)
+        self.num_classes = int(num_classes)
+        self.theta = int(theta)
+        self.use_kernel = use_kernel
+        self._w = jnp.asarray(log_weight(self.p, self.num_classes), jnp.float32)
+        self._empty = jnp.float32(
+            empty_log_belief(self.p if p_all is None else p_all)
+        )
+        self._responses = sample_pool_responses(
+            key, jnp.asarray(self.p, jnp.float32), self.num_classes, self.theta
+        )
+
+    def __call__(self, masks: np.ndarray) -> np.ndarray:
+        masks = jnp.asarray(np.atleast_2d(masks), jnp.float32)
+        if self.use_kernel:
+            from repro.kernels import ops as kernel_ops  # lazy: optional dep
+
+            vals = kernel_ops.mc_correctness(
+                self._responses, masks, self._w, self._empty, self.num_classes
+            )
+        else:
+            vals = xi_from_responses(
+                self._responses, masks, self._w, self._empty, self.num_classes
+            )
+        return np.asarray(vals)
+
+    def xi(self, indices) -> float:
+        mask = np.zeros(self.num_arms, np.float32)
+        if len(indices):
+            mask[np.asarray(indices, np.int64)] = 1.0
+        return float(self(mask[None, :])[0])

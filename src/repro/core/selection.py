@@ -1,0 +1,259 @@
+"""LLM ensemble selection: GreedyLLM (Alg. 1), SurGreedyLLM (Alg. 2) and the
+adaptive ThriftLLM loop (Alg. 3).
+
+The selector is control-plane code: pools are small (L ~ 12-16), so the outer
+loops are numpy; every xi evaluation inside the greedy is batched through the
+jit'd CRN Monte-Carlo estimator (one device call per greedy iteration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .belief import (
+    aggregate_log_beliefs,
+    empty_log_belief,
+    log_weight,
+    top2_beliefs,
+)
+from .correctness import gamma
+from .mc import McXiEstimator, theta_for
+from .types import InvocationResult, SelectionResult, clip_probs
+
+# Continue invoking on near-ties so Prop. 4 (prediction equality) holds
+# deterministically; costs at most the paper's condition, never more than S*.
+STOP_MARGIN = 1e-9
+RATIO_TIE_RTOL = 1e-9
+
+
+def greedy(
+    p: np.ndarray,
+    b: np.ndarray,
+    budget: float,
+    value_batch_fn: Callable[[np.ndarray], np.ndarray],
+    empty_value: float,
+) -> Tuple[List[int], float]:
+    """GreedyLLM (Algorithm 1) on an arbitrary set function.
+
+    Each iteration evaluates *all* affordable candidates in one batched call
+    and adds the arm with the best marginal-gain / cost ratio; ties broken by
+    the p/b ratio (Alg. 1 line 4). Returns (chosen order, final value).
+    """
+    p = np.asarray(p, np.float64)
+    b = np.asarray(b, np.float64)
+    L = p.size
+    chosen: List[int] = []
+    chosen_mask = np.zeros(L, np.float32)
+    in_pool = np.ones(L, bool)
+    spent = 0.0
+    current = float(empty_value)
+
+    while True:
+        afford = np.flatnonzero(in_pool & (b <= budget - spent + 1e-15))
+        if afford.size == 0:
+            break
+        cand = np.repeat(chosen_mask[None, :], afford.size, axis=0)
+        cand[np.arange(afford.size), afford] = 1.0
+        vals = np.asarray(value_batch_fn(cand), np.float64)
+        ratios = (vals - current) / b[afford]
+        best = float(np.max(ratios))
+        tied = np.flatnonzero(np.isclose(ratios, best, rtol=RATIO_TIE_RTOL, atol=1e-15))
+        if tied.size > 1:  # tie-break by success-prob / cost ratio
+            pb = p[afford[tied]] / b[afford[tied]]
+            tied = tied[np.argmax(pb)]
+        else:
+            tied = tied[0]
+        pick = int(afford[int(tied)])
+        chosen.append(pick)
+        chosen_mask[pick] = 1.0
+        in_pool[pick] = False
+        spent += b[pick]
+        current = float(vals[list(afford).index(pick)])  # vals aligned with afford
+    return chosen, current
+
+
+def gamma_value_batch(p: np.ndarray) -> Callable[[np.ndarray], np.ndarray]:
+    """Batched closed-form gamma over candidate masks."""
+    log1m = np.log1p(-clip_probs(p))
+
+    def fn(masks: np.ndarray) -> np.ndarray:
+        return 1.0 - np.exp(masks @ log1m)
+
+    return fn
+
+
+def sur_greedy(
+    p: np.ndarray,
+    b: np.ndarray,
+    budget: float,
+    num_classes: int,
+    key: jax.Array,
+    theta: int,
+    p_all: Optional[np.ndarray] = None,
+    use_kernel: bool = False,
+) -> SelectionResult:
+    """SurGreedyLLM (Algorithm 2) with CRN Monte-Carlo xi estimation.
+
+    Returns the best of {best affordable single arm, greedy-on-xi,
+    greedy-on-gamma} together with the Theorem 3 diagnostics.
+    """
+    p = clip_probs(p)
+    b = np.asarray(b, np.float64)
+    K = int(num_classes)
+    est = McXiEstimator(key, p, K, theta, p_all=p_all, use_kernel=use_kernel)
+
+    afford = np.flatnonzero(b <= budget + 1e-15)
+    if afford.size == 0:
+        return SelectionResult(
+            chosen=np.zeros(0, np.int64), xi_est=1.0 / K, cost=0.0, budget=budget
+        )
+    l_star = int(afford[np.argmax(p[afford])])
+    p_star = float(p[l_star])
+
+    s1, _ = greedy(p, b, budget, est, empty_value=1.0 / K)
+    s2, _ = greedy(p, b, budget, gamma_value_batch(p), empty_value=0.0)
+
+    # Evaluate the three candidates with the *same* CRN draws.
+    masks = np.zeros((3, p.size), np.float32)
+    masks[0, l_star] = 1.0
+    if s1:
+        masks[1, np.asarray(s1)] = 1.0
+    if s2:
+        masks[2, np.asarray(s2)] = 1.0
+    xi_vals = est(masks)
+    cands = [np.asarray([l_star]), np.asarray(s1, np.int64), np.asarray(s2, np.int64)]
+    pick = int(np.argmax(xi_vals))
+    chosen = cands[pick]
+    return SelectionResult(
+        chosen=chosen,
+        xi_est=float(xi_vals[pick]),
+        cost=float(b[chosen].sum()) if chosen.size else 0.0,
+        budget=budget,
+        s1=cands[1],
+        s2=cands[2],
+        l_star=l_star,
+        xi_s1=float(xi_vals[1]),
+        xi_s2=float(xi_vals[2]),
+        p_star=p_star,
+        gamma_s2=gamma(p[np.asarray(s2, np.int64)]) if s2 else 0.0,
+    )
+
+
+def adaptive_invoke(
+    selection: Sequence[int],
+    p: np.ndarray,
+    num_classes: int,
+    invoke_fn: Callable[[int], int],
+    p_all: Optional[np.ndarray] = None,
+    rng: Optional[np.random.Generator] = None,
+    costs: Optional[np.ndarray] = None,
+) -> InvocationResult:
+    """Adaptive invocation (Algorithm 3 lines 3-11).
+
+    Invokes arms of ``selection`` in decreasing-p order and early-stops when
+    the residual potential belief F(T*) can no longer change the prediction:
+    ``F(T*) * H2(phi) <= H1(phi)`` (Prop. 4 guarantees prediction equality
+    with the full set).
+
+    Args:
+      invoke_fn: ``arm_index -> class_id`` — runs the real model (or oracle).
+    """
+    p = clip_probs(p)
+    K = int(num_classes)
+    w = log_weight(p, K)
+    empty = empty_log_belief(p if p_all is None else p_all)
+    sel = sorted(selection, key=lambda i: -p[i])
+    remaining = list(sel)
+
+    used: List[int] = []
+    responses: List[int] = []
+    beliefs = np.full(K, empty, np.float64)
+    counts = np.zeros(K, np.int64)
+
+    while remaining:
+        log_f = float(np.sum(w[remaining]))
+        h1, h2, _ = top2_beliefs(beliefs)
+        if not (log_f + h2 > h1 - STOP_MARGIN):
+            break  # residual arms cannot flip the prediction (Prop. 4)
+        arm = remaining.pop(0)
+        r = int(invoke_fn(arm))
+        used.append(arm)
+        responses.append(r)
+        if counts[r] == 0:
+            beliefs[r] = w[arm]
+        else:
+            beliefs[r] += w[arm]
+        counts[r] += 1
+
+    h1, _, pred = top2_beliefs(beliefs)
+    if rng is not None:
+        ties = np.flatnonzero(beliefs >= h1 - 1e-9)
+        if ties.size > 1:
+            pred = int(rng.choice(ties))
+    cost_vec = np.asarray(costs, np.float64) if costs is not None else np.zeros(p.size)
+    return InvocationResult(
+        prediction=int(pred),
+        used=np.asarray(used, np.int64),
+        responses=np.asarray(responses, np.int64),
+        cost=float(cost_vec[used].sum()) if used else 0.0,
+        planned_cost=float(cost_vec[list(sel)].sum()) if len(sel) else 0.0,
+        log_beliefs=beliefs,
+    )
+
+
+@dataclasses.dataclass
+class ThriftLLM:
+    """End-to-end selector (Algorithm 3): SurGreedy selection + adaptive
+    invocation, parameterized by the paper's (eps, delta).
+
+    One instance is bound to a pool (costs) and reused across query classes;
+    per-class selections are cached because selection depends only on
+    (p-vector, K, budget).
+    """
+
+    costs: np.ndarray
+    eps: float = 0.1
+    delta: float = 0.01
+    seed: int = 0
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        self.costs = np.asarray(self.costs, np.float64)
+        self._cache: dict = {}
+
+    def theta(self, p: np.ndarray, budget: float) -> int:
+        afford = np.flatnonzero(self.costs <= budget + 1e-15)
+        p_star = float(np.max(clip_probs(p)[afford])) if afford.size else 1.0
+        return theta_for(self.eps, self.delta, p_star, len(self.costs))
+
+    def select(self, p: np.ndarray, num_classes: int, budget: float) -> SelectionResult:
+        key_tuple = (np.round(np.asarray(p, np.float64), 12).tobytes(), num_classes, budget)
+        if key_tuple in self._cache:
+            return self._cache[key_tuple]
+        res = sur_greedy(
+            p,
+            self.costs,
+            budget,
+            num_classes,
+            jax.random.key(self.seed),
+            self.theta(p, budget),
+            use_kernel=self.use_kernel,
+        )
+        self._cache[key_tuple] = res
+        return res
+
+    def answer(
+        self,
+        p: np.ndarray,
+        num_classes: int,
+        budget: float,
+        invoke_fn: Callable[[int], int],
+        rng: Optional[np.random.Generator] = None,
+    ) -> InvocationResult:
+        sel = self.select(p, num_classes, budget)
+        return adaptive_invoke(
+            list(sel.chosen), p, num_classes, invoke_fn, rng=rng, costs=self.costs
+        )

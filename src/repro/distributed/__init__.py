@@ -1,0 +1,16 @@
+"""Distribution: sharding rules, collectives helpers, fault tolerance."""
+from .sharding import (
+    AxisRules,
+    active_rules,
+    batch_specs,
+    cache_specs,
+    constrain,
+    param_specs,
+    replicated,
+    use_rules,
+)
+
+__all__ = [
+    "AxisRules", "active_rules", "batch_specs", "cache_specs",
+    "constrain", "param_specs", "replicated", "use_rules",
+]

@@ -1,0 +1,133 @@
+"""Fault tolerance for 1000+-node runs: failure detection, elastic re-mesh
+planning, straggler mitigation, and the checkpoint/restart driver.
+
+The detection plane is deliberately host-side python (it must keep working
+when devices are wedged). On this CPU container failures are injected by
+tests; the logic is identical on a real cluster where heartbeats come from
+per-host agents.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Declares a worker dead after ``timeout_s`` without a heartbeat."""
+
+    num_workers: int
+    timeout_s: float = 30.0
+
+    def __post_init__(self):
+        now = time.monotonic()
+        self.last_seen = {w: now for w in range(self.num_workers)}
+
+    def beat(self, worker: int, t: Optional[float] = None):
+        self.last_seen[worker] = time.monotonic() if t is None else t
+
+    def dead_workers(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [w for w, t in self.last_seen.items() if now - t > self.timeout_s]
+
+
+def plan_elastic_remesh(
+    mesh_shape: Dict[str, int], failed_hosts: Sequence[int], hosts_per_data_row: int = 1
+) -> Dict[str, int]:
+    """Shrink the data axis past failed hosts, keeping the model axis intact.
+
+    TP shards within a model row are tightly coupled (they hold disjoint
+    parameter shards with per-layer collectives), so the recovery unit is a
+    whole data row: drop as many rows as have a failure, keep batch
+    divisibility by recomputing per-row batch. Returns the new mesh shape;
+    the restart path is checkpoint-restore under the new mesh (parameters
+    are re-sharded by pjit's in_shardings on load).
+    """
+    if not failed_hosts:
+        return dict(mesh_shape)
+    rows_lost = len(set(h // hosts_per_data_row for h in failed_hosts))
+    new = dict(mesh_shape)
+    new["data"] = max(1, mesh_shape["data"] - rows_lost)
+    return new
+
+
+def rebatch_for_mesh(global_batch: int, old_data: int, new_data: int) -> int:
+    """Largest batch <= global_batch divisible by the new data-axis size,
+    preserving per-row microbatch shape where possible."""
+    per_row = global_batch // old_data
+    return per_row * new_data
+
+
+@dataclasses.dataclass
+class StragglerMitigator:
+    """Per-step worker timing tracker with hedged-work decisions.
+
+    A worker is a straggler when its step time exceeds
+    ``threshold x median`` over a sliding window. Mitigation hooks:
+      * training: drop the row's contribution this step (bounded staleness)
+        and rescale the gradient, or
+      * serving: hedge — re-issue the slow arm's request to a replica; for
+        ThriftLLM ensembles the adaptive early-stop (Prop. 4) often makes
+        the straggler's response unnecessary, so the hedge is free.
+    """
+
+    num_workers: int
+    window: int = 20
+    threshold: float = 2.0
+
+    def __post_init__(self):
+        self.history: List[np.ndarray] = []
+
+    def record_step(self, times: Sequence[float]):
+        assert len(times) == self.num_workers
+        self.history.append(np.asarray(times, np.float64))
+        if len(self.history) > self.window:
+            self.history.pop(0)
+
+    def stragglers(self) -> List[int]:
+        if not self.history:
+            return []
+        mean_t = np.mean(np.stack(self.history), axis=0)
+        med = float(np.median(mean_t))
+        return [int(w) for w in np.flatnonzero(mean_t > self.threshold * med)]
+
+    def hedge_plan(self, pending_arms: Sequence[int], slow_arm: int) -> List[int]:
+        """Serving-side: reorder so the slow arm is polled last (its answer
+        is most likely to be early-stopped away)."""
+        plan = [a for a in pending_arms if a != slow_arm]
+        if slow_arm in pending_arms:
+            plan.append(slow_arm)
+        return plan
+
+
+@dataclasses.dataclass
+class FaultTolerantDriver:
+    """Wraps a train loop with checkpoint/restart + failure handling.
+
+    Usage::
+
+        driver = FaultTolerantDriver(ckpt_manager, save_every=50)
+        state, start = driver.restore(state_template)
+        for step in range(start, total):
+            state = train_step(state, batch)
+            driver.maybe_save(step, state)
+            if driver.check_failures(monitor):  # -> elastic re-mesh restart
+                break
+    """
+
+    ckpt: "object"
+    save_every: int = 100
+
+    def restore(self, template):
+        step, state = self.ckpt.restore_latest(template)
+        return state, (0 if step is None else step + 1)
+
+    def maybe_save(self, step: int, state):
+        if step % self.save_every == 0:
+            self.ckpt.save(step, state)
+
+    def check_failures(self, monitor: HeartbeatMonitor) -> List[int]:
+        return monitor.dead_workers()

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper
+in ops.py, and a pure-jnp oracle in ref.py; tests sweep shapes/dtypes and
+assert allclose against the oracle in interpret mode.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

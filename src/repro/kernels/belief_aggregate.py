@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: batched belief aggregation for the serving router.
+
+For a batch of requests, combine per-arm responses into per-class log
+beliefs (paper Eq. 4) and the argmax prediction:
+
+    beliefs[b, k] = sum_m w[b, m] * onehot(resp[b, m])[k]   (empty -> const)
+
+Grid over request tiles; the (Bt, M, K) one-hot cube lives in VMEM and the
+contraction over M is an MXU batched dot. Arms flagged -1 are masked (not
+invoked for that request — adaptive early-stopped wavefronts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(resp_ref, w_ref, empty_ref, bel_ref, pred_ref, *, num_classes):
+    resp = resp_ref[...]                                    # (Bt, M) int32
+    Bt, M = resp.shape
+    K = num_classes
+    w = w_ref[...]                                          # (Bt, M)
+    valid = (resp >= 0).astype(jnp.float32)
+
+    classes = jax.lax.broadcasted_iota(jnp.int32, (Bt, M, K), 2)
+    onehot = (resp[:, :, None] == classes).astype(jnp.float32)
+
+    beliefs = jnp.einsum("bm,bmk->bk", w * valid, onehot,
+                         preferred_element_type=jnp.float32)
+    counts = jnp.einsum("bm,bmk->bk", valid, onehot,
+                        preferred_element_type=jnp.float32)
+    empty = empty_ref[0, 0]
+    beliefs = jnp.where(counts > 0, beliefs, empty)
+    bel_ref[...] = beliefs
+    pred_ref[...] = jnp.argmax(beliefs, axis=-1).astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "tile", "interpret"))
+def belief_aggregate_pallas(
+    responses: jnp.ndarray,    # (B, M) int32, -1 = not invoked
+    log_weights: jnp.ndarray,  # (B, M) or (M,) float32
+    empty_belief: jnp.ndarray, # scalar
+    num_classes: int,
+    tile: int = 128,
+    interpret: bool = True,
+):
+    """Returns (log_beliefs (B, K), predictions (B,))."""
+    B, M = responses.shape
+    w = jnp.asarray(log_weights, jnp.float32)
+    if w.ndim == 1:
+        w = jnp.broadcast_to(w[None, :], (B, M))
+    tile = min(tile, B)
+    n = (B + tile - 1) // tile
+    pad = n * tile - B
+    if pad:
+        responses = jnp.concatenate(
+            [responses, jnp.full((pad, M), -1, jnp.int32)], axis=0
+        )
+        w = jnp.concatenate([w, jnp.zeros((pad, M), jnp.float32)], axis=0)
+    empty = jnp.asarray(empty_belief, jnp.float32).reshape(1, 1)
+
+    beliefs, preds = pl.pallas_call(
+        functools.partial(_kernel, num_classes=num_classes),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((tile, M), lambda i: (i, 0)),
+            pl.BlockSpec((tile, M), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, num_classes), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * tile, num_classes), jnp.float32),
+            jax.ShapeDtypeStruct((n * tile, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(responses, w, empty)
+    return beliefs[:B], preds[:B, 0]

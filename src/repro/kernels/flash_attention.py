@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: flash attention (prefill/train hot path).
+
+Grid (B, H, nq, nk): innermost dimension streams KV blocks while the
+(block_q, head_dim) accumulator and (block_q,) running max/normalizer live
+in VMEM scratch across nk iterations. Causal block skipping: blocks
+strictly above the diagonal are not computed (this is where the kernel
+beats the masked-full jnp baseline by ~2x on FLOPs — see EXPERIMENTS.md
+§Perf). GQA folds the KV-head index into the grid via the index map.
+
+Tiling: block_q x head_dim and block_kv x head_dim tiles are MXU-aligned
+(multiples of (8, 128) for fp32); defaults (512, 512, 128) keep the score
+tile (512, 512) and both operand tiles within a few MB of VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_q, block_kv, n_kv, causal, window, scale,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # block-level skip: above-diagonal (causal) and out-of-window KV blocks
+    # are never computed — the FLOP saving over the masked-full baseline.
+    pred = jnp.bool_(True)
+    if causal:
+        pred &= k_start <= q_start + block_q - 1
+    if window > 0:
+        pred &= k_start + block_kv - 1 >= q_start - window + 1
+
+    @pl.when(pred)
+    def _compute():
+        q = q_ref[0, 0] * scale                       # (bq, hd)
+        k = k_ref[0, 0]                               # (bkv, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                             # (bq, bkv)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        safe = m_new > NEG_INF / 2
+        alpha = jnp.where(safe, jnp.exp(m_prev - jnp.where(safe, m_new, 0.0)), 0.0)
+        p = jnp.where(mask, jnp.exp(s - jnp.where(safe, m_new, 0.0)[:, None]), 0.0)
+        l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,            # (B, S, H, hd)
+    k: jnp.ndarray,            # (B, T, G, hd)
+    v: jnp.ndarray,            # (B, T, G, hd)
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    group = H // G
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    assert S % bq == 0 and T % bkv == 0, "pad sequence to block multiples"
+    nq, nk = S // bq, T // bkv
+    scale = 1.0 / (hd ** 0.5)
+
+    # layout: (B, H, S, hd) blocks; kv head index = h // group
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, block_q=bq, block_kv=bkv, n_kv=nk,
+            causal=causal, window=window, scale=scale,
+        ),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: Mamba-1 selective-state-space scan.
+
+The CUDA original fuses the recurrence in SRAM; the TPU adaptation keeps
+the (block_ch, N) state resident in VMEM while streaming the sequence:
+
+    h_t[d, n] = exp(dt_t[d] * A[d, n]) * h_{t-1}[d, n] + dt_t[d] x_t[d] B_t[n]
+    y_t[d]    = sum_n h_t[d, n] C_t[n] + D[d] x_t[d]
+
+Grid (B, n_ch, n_s): channels blocked over lanes, sequence streamed in
+blocks with the (bc, N) state carried in VMEM scratch; each step is a VPU
+outer-product update plus an (bc, N) x (N,) contraction. The op is
+bandwidth-bound (state never leaves VMEM; x/dt/B/C stream once), which is
+the entire point of fusing it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref, y_ref, hlast_ref,
+            h_scr, *, block_s, n_s):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]
+
+    a = a_ref[...]                                   # (bc, N)
+    dskip = d_ref[...]                               # (bc,)
+
+    def step(t, h):
+        dt = dt_ref[0, t, :]                         # (bc,)
+        x = x_ref[0, t, :]                           # (bc,)
+        bv = b_ref[0, t, :]                          # (N,)
+        cv = c_ref[0, t, :]                          # (N,)
+        decay = jnp.exp(dt[:, None] * a)             # (bc, N)
+        h = decay * h + (dt * x)[:, None] * bv[None, :]
+        y = jnp.sum(h * cv[None, :], axis=1) + dskip * x
+        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y[None])
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(si == n_s - 1)
+    def _final():
+        hlast_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_ch", "block_s", "interpret"))
+def mamba_scan_pallas(
+    x: jnp.ndarray,      # (B, S, Din) post-conv activations (fp32)
+    dt: jnp.ndarray,     # (B, S, Din) softplus'd step sizes
+    A: jnp.ndarray,      # (Din, N) negative
+    Bmat: jnp.ndarray,   # (B, S, N)
+    Cmat: jnp.ndarray,   # (B, S, N)
+    Dskip: jnp.ndarray,  # (Din,)
+    h0: jnp.ndarray,     # (B, Din, N)
+    block_ch: int = 512,
+    block_s: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y (B, S, Din), h_last (B, Din, N))."""
+    B, S, Din = x.shape
+    N = A.shape[1]
+    bc = min(block_ch, Din)
+    bs = min(block_s, S)
+    assert Din % bc == 0 and S % bs == 0, "pad channels/sequence to block multiples"
+    n_ch, n_s = Din // bc, S // bs
+
+    y, h_last = pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, n_s=n_s),
+        grid=(B, n_ch, n_s),
+        in_specs=[
+            pl.BlockSpec((1, bs, bc), lambda b, c, s: (b, s, c)),     # x
+            pl.BlockSpec((1, bs, bc), lambda b, c, s: (b, s, c)),     # dt
+            pl.BlockSpec((bc, N), lambda b, c, s: (c, 0)),            # A
+            pl.BlockSpec((1, bs, N), lambda b, c, s: (b, s, 0)),      # B
+            pl.BlockSpec((1, bs, N), lambda b, c, s: (b, s, 0)),      # C
+            pl.BlockSpec((bc,), lambda b, c, s: (c,)),                # D
+            pl.BlockSpec((1, bc, N), lambda b, c, s: (b, c, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bc), lambda b, c, s: (b, s, c)),
+            pl.BlockSpec((1, bc, N), lambda b, c, s: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Din), jnp.float32),
+            jax.ShapeDtypeStruct((B, Din, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bc, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bmat, Cmat, Dskip, h0)
+    return y, h_last

@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the kernel
+body executes in Python per grid step) — set ``REPRO_KERNEL_COMPILE=1`` on a
+real TPU to lower them natively. The wrappers handle padding/layout so call
+sites never see tiling constraints.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from .belief_aggregate import belief_aggregate_pallas
+from .flash_attention import flash_attention_pallas
+from .mc_correctness import mc_correctness_pallas
+from .rglru_scan import rglru_scan_pallas
+
+_INTERPRET = os.environ.get("REPRO_KERNEL_COMPILE", "0") != "1"
+
+
+def mc_correctness(responses, masks, log_weights, empty_belief, num_classes: int):
+    """(C,) Monte-Carlo xi estimates over shared response draws."""
+    return mc_correctness_pallas(
+        responses, masks, log_weights, empty_belief, num_classes,
+        interpret=_INTERPRET,
+    )
+
+
+def belief_aggregate(responses, log_weights, empty_belief, num_classes: int):
+    """Batched router aggregation: (log_beliefs (B,K), predictions (B,))."""
+    return belief_aggregate_pallas(
+        responses, log_weights, empty_belief, num_classes, interpret=_INTERPRET
+    )
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512):
+    """(B,S,H,hd) x (B,T,G,hd) -> (B,S,H,hd) with causal block skipping."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=_INTERPRET,
+    )
+
+
+def rglru_scan(log_a, gated, h0):
+    """Diagonal linear recurrence: (h (B,S,D), h_last (B,D))."""
+    return rglru_scan_pallas(
+        jnp.asarray(log_a, jnp.float32),
+        jnp.asarray(gated, jnp.float32),
+        jnp.asarray(h0, jnp.float32),
+        interpret=_INTERPRET,
+    )
+
+
+def mamba_scan(x, dt, A, Bmat, Cmat, Dskip, h0):
+    """Fused Mamba-1 selective scan: (y (B,S,Din), h_last (B,Din,N))."""
+    from .mamba_scan import mamba_scan_pallas
+
+    f32 = lambda t: jnp.asarray(t, jnp.float32)
+    return mamba_scan_pallas(
+        f32(x), f32(dt), f32(A), f32(Bmat), f32(Cmat), f32(Dskip), f32(h0),
+        interpret=_INTERPRET,
+    )

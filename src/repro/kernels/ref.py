@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mc import xi_from_responses
+from repro.core.belief import aggregate_log_beliefs_batch
+from repro.models.attention import blocked_attention, direct_attention
+
+
+def mc_correctness_ref(responses, masks, log_weights, empty_belief, num_classes):
+    """(C,) xi estimates — delegates to the core estimator math."""
+    return xi_from_responses(
+        responses, masks, log_weights, jnp.float32(empty_belief), num_classes
+    )
+
+
+def belief_aggregate_ref(responses, log_weights, empty_belief, num_classes):
+    """Returns (log_beliefs (B, K), predictions (B,))."""
+    beliefs = aggregate_log_beliefs_batch(
+        responses, log_weights, num_classes, jnp.float32(empty_belief)
+    )
+    return beliefs, jnp.argmax(beliefs, axis=-1).astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    """Direct softmax attention in fp32 (no blocking)."""
+    return direct_attention(q, k, v, causal=causal, window=window)
+
+
+def rglru_scan_ref(log_a, gated, h0):
+    """Sequential reference for the diagonal recurrence."""
+
+    def step(h, xs):
+        la, u = xs
+        h = jnp.exp(la) * h + u
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (log_a.transpose(1, 0, 2), gated.transpose(1, 0, 2))
+    )
+    return hs.transpose(1, 0, 2), h_last
+
+
+def mamba_scan_ref(x, dt, A, Bmat, Cmat, Dskip, h0):
+    """Delegates to the model substrate's chunked selective scan."""
+    from repro.models.ssm import selective_scan
+
+    y, h_last = selective_scan(x, dt, A, Bmat, Cmat, Dskip, h0=h0, chunk=64)
+    return y.astype(jnp.float32), h_last

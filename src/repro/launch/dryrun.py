@@ -1,0 +1,219 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell with ShapeDtypeStruct inputs (no allocation), then extract
+memory_analysis / cost_analysis / collective bytes for the roofline.
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count on first init). Run as:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import AxisRules, param_specs, batch_specs, cache_specs, use_rules
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.roofline import (
+    analytic_bytes,
+    analytic_flops,
+    analytic_memory,
+    hlo_collective_bytes,
+    model_flops,
+    roofline_terms,
+    wire_bytes_per_chip,
+)
+from repro.launch.specs import batch_specs_for, decode_specs_for
+from repro.models import LM, SHAPES, shape_applicable
+from repro.training import OptimizerConfig, adamw_init, make_train_step
+
+
+def _mem_summary(mem) -> Dict[str, float]:
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "peak_memory_in_bytes",
+    )
+    return {k: float(getattr(mem, k, 0) or 0) for k in keys}
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    rules_overrides: Optional[Dict[str, Any]] = None,
+    cfg_overrides: Optional[Dict[str, Any]] = None,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the roofline record.
+
+    ``rules_overrides`` remaps logical sharding axes and ``cfg_overrides``
+    patches ModelConfig fields — the two knobs the perf iterations turn.
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "kind": shape.kind,
+    }
+    if not shape_applicable(cfg, shape):
+        rec["skipped"] = "full-attention arch: long_500k requires sub-quadratic attention"
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = AxisRules(mesh, rules_overrides or {})
+    model = LM(cfg)
+
+    t0 = time.time()
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_sh = param_specs(param_shapes, rules)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, param_shapes)
+        o_sh = param_specs(opt_shapes, rules)
+        batch = batch_specs_for(cfg, shape)
+        b_sh = batch_specs(batch, rules)
+        step = make_train_step(model, OptimizerConfig())
+        with use_rules(rules), mesh:
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
+                param_shapes, opt_shapes, batch
+            )
+    elif shape.kind == "prefill":
+        batch = batch_specs_for(cfg, shape)
+        b_sh = batch_specs(batch, rules)
+
+        def prefill_step(params, b):
+            return model.prefill(params, b["tokens"], b.get("frontend_embeds"))
+
+        # The prefill OUTPUT cache must carry the decode cache sharding
+        # (batch x time) or it dominates per-chip memory at 32k.
+        out_shapes = jax.eval_shape(prefill_step, param_shapes, batch)
+        logits_sh = rules.sharding_for(out_shapes[0].shape, ("batch", "vocab"))
+        cache_sh = cache_specs(out_shapes[1], rules)
+        with use_rules(rules), mesh:
+            lowered = jax.jit(
+                prefill_step, in_shardings=(p_sh, b_sh),
+                out_shardings=(logits_sh, cache_sh),
+            ).lower(param_shapes, batch)
+    else:  # decode
+        cache_shapes, tokens = decode_specs_for(cfg, shape)
+        c_sh = cache_specs(cache_shapes, rules)
+        b_sh = batch_specs(tokens, rules)
+
+        def serve_step(params, cache, b):
+            return model.decode_step(params, cache, b["tokens"])
+
+        with use_rules(rules), mesh:
+            lowered = jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh)).lower(
+                param_shapes, cache_shapes, tokens
+            )
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_summary(compiled.memory_analysis())
+    cost = dict(compiled.cost_analysis() or {})
+    text = compiled.as_text()
+    colls = hlo_collective_bytes(text)
+
+    fl = analytic_flops(cfg, shape)
+    by = analytic_bytes(cfg, shape)
+    mf = model_flops(cfg, shape)
+    wire = wire_bytes_per_chip(colls)
+    terms = roofline_terms(
+        fl["total"], by["total"], colls["total"], chips, HW, wire_per_chip=wire
+    )
+    dp = chips // mesh.shape["model"]
+    amem = analytic_memory(cfg, shape, dp=dp, tp=mesh.shape["model"])
+
+    rec.update(
+        {
+            "chips": chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": mem,
+            "analytic_memory": amem,
+            "fits_hbm": amem["total"] <= HW["hbm_bytes"],
+            "xla_flops_body_once": float(cost.get("flops", -1.0)),
+            "xla_bytes_body_once": float(cost.get("bytes accessed", -1.0)),
+            "analytic_flops_total": fl["total"],
+            "analytic_flops_fwd": fl["fwd"],
+            "analytic_bytes": by["total"],
+            "model_flops": mf,
+            "useful_flops_ratio": mf / fl["total"] if fl["total"] else 0.0,
+            "collective_bytes": colls,
+            "roofline": terms,
+            "hlo_bytes": len(text),
+        }
+    )
+    if verbose:
+        print(
+            f"[{arch} x {shape_name} x {mesh_name}] compile={t_compile:.1f}s "
+            f"mem/chip={amem['total']/1e9:.2f}GB "
+            f"fits={rec['fits_hbm']} "
+            f"compute={terms['compute_s']*1e3:.2f}ms mem={terms['memory_s']*1e3:.2f}ms "
+            f"coll={terms['collective_s']*1e3:.2f}ms -> {terms['bottleneck']}"
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape) cell")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        tag = f"{a}__{s}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {tag} (exists)")
+            continue
+        try:
+            rec = dryrun_cell(a, s, multi_pod=mp)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {
+                "arch": a, "shape": s,
+                "mesh": "2x16x16" if mp else "16x16",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(f"FAIL {tag}: {rec['error']}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

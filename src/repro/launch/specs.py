@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable specs with no device
+allocation — the modality frontends of [vlm]/[audio] archs are stubbed here
+as precomputed patch/frame embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LM, ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training / prefill batch: tokens (+ stub frontend embeddings)."""
+    lf = cfg.frontend_len if cfg.frontend != "none" else 0
+    s_tok = shape.seq_len - lf
+    assert s_tok > 0, (cfg.name, shape.name)
+    out = {"tokens": _sds((shape.global_batch, s_tok), jnp.int32)}
+    if lf:
+        out["frontend_embeds"] = _sds(
+            (shape.global_batch, lf, cfg.d_model), cfg.dtype
+        )
+    return out
+
+
+def decode_specs_for(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, Dict]:
+    """(cache_specs, token_specs) for one serve_step with a seq_len-deep cache."""
+    model = LM(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, prefilled=shape.seq_len - 1)
+    )
+    tokens = {"tokens": _sds((shape.global_batch, 1), jnp.int32)}
+    return cache, tokens
+
+
+def param_specs_for(cfg: ModelConfig) -> Any:
+    model = LM(cfg)
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def opt_specs_for(param_shapes: Any) -> Any:
+    from repro.training import adamw_init
+
+    return jax.eval_shape(adamw_init, param_shapes)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Everything the step function for this cell consumes (params excluded)."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs_for(cfg, shape)}
+    cache, tokens = decode_specs_for(cfg, shape)
+    return {"cache": cache, "batch": tokens}

@@ -1,0 +1,85 @@
+"""Training launcher: real steps on the local device(s), or distributed
+under a forced-device debug mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \\
+        --steps 50 --batch 8 --seq 64
+
+Full configs are for the dry-run / real clusters; on this CPU container use
+``--smoke`` (the reduced same-family config). Checkpoints + restart come
+from repro.checkpoint; fault handling from repro.distributed.fault.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data import DataPipeline
+from repro.distributed.fault import FaultTolerantDriver
+from repro.models import LM
+from repro.training import CompressionConfig, OptimizerConfig, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--save-every", type=int, default=25)
+    ap.add_argument("--compress", default="none", choices=["none", "int8", "topk"])
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = LM(cfg)
+    comp = CompressionConfig(codec=args.compress)
+    params, opt = init_train_state(model, jax.random.key(0), comp)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[{cfg.name}] {n/1e6:.2f}M params, {args.steps} steps")
+
+    step_fn = jax.jit(
+        make_train_step(
+            model,
+            OptimizerConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+            comp,
+        )
+    )
+
+    rng = np.random.default_rng(0)
+    lf = cfg.frontend_len if cfg.frontend != "none" else 0
+
+    def make_batch(step):
+        b = {"tokens": rng.integers(0, cfg.vocab_size, (args.batch, args.seq - lf)).astype(np.int32)}
+        if lf:
+            b["frontend_embeds"] = rng.normal(0, 1, (args.batch, lf, cfg.d_model)).astype(np.float32)
+        return b
+
+    pipe = DataPipeline(make_batch)
+    mgr = CheckpointManager(args.ckpt + "/" + cfg.name)
+    driver = FaultTolerantDriver(mgr, save_every=args.save_every)
+    state, start = driver.restore({"params": params, "opt": opt})
+    params, opt = state["params"], state["opt"]
+    if start:
+        print(f"resumed from step {start - 1}")
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        driver.maybe_save(s, {"params": params, "opt": opt})
+        if s % 10 == 0 or s == args.steps - 1:
+            print(f"step {s:4d} loss {float(m['loss']):.4f} lr {float(m['lr']):.2e}")
+    pipe.close()
+    print(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model substrate: configs, layers, and the scanned-LM assembly."""
+from .config import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+from .init import init_params, padded_vocab
+from .model import LM, block_window
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+    "init_params", "padded_vocab", "LM", "block_window",
+]

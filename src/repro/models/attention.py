@@ -1,0 +1,224 @@
+"""GQA attention: direct path (short sequences / decode) and a blocked
+flash-style path (online softmax over KV blocks) for long prefill/train.
+
+The blocked path is the pure-jnp oracle of the ``flash_attention`` Pallas
+kernel (same tiling, same online-softmax recurrence); on the CPU dry-run the
+model lowers this path, on real TPUs the kernel substitutes per-op.
+
+Shapes: q (B, S, H, hd); k, v (B, T, G, hd) with H = G * group_size.
+Masking supports causality, sliding windows, and a KV length limit
+(ring-buffer decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(
+    q_pos: jnp.ndarray,       # (S,) absolute positions of queries
+    k_pos: jnp.ndarray,       # (T,) absolute positions of keys
+    causal: bool,
+    window: int,
+) -> jnp.ndarray:
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def direct_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jnp.ndarray = 0,
+    k_positions: Optional[jnp.ndarray] = None,
+    kv_valid: Optional[jnp.ndarray] = None,   # (B, T) bool for ring buffers
+) -> jnp.ndarray:
+    """Materialized-scores attention; use when S * T is small."""
+    B, S, H, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    gs = H // G
+    qg = q.reshape(B, S, G, gs, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = k_positions if k_positions is not None else jnp.arange(T)
+    m = _mask(q_pos, k_pos, causal, window)
+    if kv_valid is not None:
+        m = m[None] & kv_valid[:, None, :]
+        scores = jnp.where(m[:, None, None], scores, NEG_INF)
+    else:
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_kv", "q_offset_static")
+)
+def blocked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_kv: int = 512,
+    q_offset_static: int = 0,
+) -> jnp.ndarray:
+    """Flash-style attention: lax.scan over KV blocks with online softmax.
+
+    All queries are processed in parallel against one KV block per scan step,
+    carrying the running (max, normalizer, weighted-accumulator). Peak live
+    score tensor is (B, S, H, block_kv) instead of (B, S, H, T).
+
+    Baseline accounting note: the scan visits every KV block and relies on
+    masking for causality/window, so compiled FLOPs are ~2x the useful
+    causal FLOPs — visible in the roofline MODEL_FLOPS/HLO_FLOPs ratio and
+    addressed in the perf iterations (kernel-level block skipping).
+    """
+    B, S, H, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    gs = H // G
+    bk = min(block_kv, T)
+    n_blocks = (T + bk - 1) // bk
+    pad = n_blocks * bk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))).reshape(B, S, G, gs, hd)
+    q_pos = q_offset_static + jnp.arange(S)
+    kb = k.reshape(B, n_blocks, bk, G, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, bk, G, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inputs):
+        m_run, l_run, acc = carry
+        kblk, vblk, blk_idx = inputs
+        k_pos = blk_idx * bk + jnp.arange(bk)
+        s = jnp.einsum("bsgrd,btgd->bsgrt", qg, kblk.astype(jnp.float32))
+        mask = jnp.ones((S, bk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= (k_pos < T)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        # Guard fully-masked prefixes: exp(-inf - -inf) would be NaN.
+        safe = m_new > NEG_INF / 2
+        alpha = jnp.where(safe, jnp.exp(m_run - jnp.where(safe, m_new, 0.0)), 0.0)
+        p = jnp.where(
+            mask[None, :, None, None, :],
+            jnp.exp(s - jnp.where(safe, m_new, 0.0)[..., None]),
+            0.0,
+        )
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bsgrt,btgd->bsgrd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, S, G, gs), NEG_INF, jnp.float32),
+        jnp.zeros((B, S, G, gs), jnp.float32),
+        jnp.zeros((B, S, G, gs, hd), jnp.float32),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        step, init, (kb, vb, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def bucketed_causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    window: int = 0,
+    block_kv: int = 512,
+    buckets: int = 8,
+) -> jnp.ndarray:
+    """Causal self-attention with prefix-length bucketing (perf iteration #1).
+
+    The masked-full baseline visits all T keys for every query block — ~2x
+    the useful causal FLOPs. Splitting queries into G contiguous buckets
+    where bucket g only scans the first (g+1)/G of the keys keeps all shapes
+    static while computing only a (G+1)/(2G) fraction of the full score
+    matrix (0.5625 at G=8, vs the causal optimum 0.5 — the residual is the
+    intra-bucket triangle, which the Pallas kernel also skips on real TPU).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    assert S == T, "bucketing assumes self-attention"
+    G = buckets
+    while S % G != 0 and G > 1:
+        G //= 2
+    step = S // G
+    outs = []
+    for g in range(G):
+        q_g = q[:, g * step : (g + 1) * step]
+        kv_len = (g + 1) * step
+        outs.append(
+            blocked_attention(
+                q_g, k[:, :kv_len], v[:, :kv_len],
+                causal=True, window=window,
+                block_kv=min(block_kv, kv_len), q_offset_static=g * step,
+            )
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jnp.ndarray = 0,
+    k_positions: Optional[jnp.ndarray] = None,
+    kv_valid: Optional[jnp.ndarray] = None,
+    blocked_threshold: int = 2048,
+    block_kv: int = 512,
+    causal_buckets: int = 0,
+) -> jnp.ndarray:
+    """Dispatch: blocked path for long self-attention, direct otherwise.
+
+    ``causal_buckets > 0`` enables the prefix-bucketed causal scan (see
+    :func:`bucketed_causal_attention`)."""
+    S, T = q.shape[1], k.shape[1]
+    if (
+        S == T
+        and T > blocked_threshold
+        and k_positions is None
+        and kv_valid is None
+        and isinstance(q_offset, int)
+        and q_offset == 0
+    ):
+        if causal and causal_buckets > 0:
+            return bucketed_causal_attention(
+                q, k, v, window=window, block_kv=block_kv, buckets=causal_buckets
+            )
+        return blocked_attention(
+            q, k, v, causal=causal, window=window, block_kv=block_kv,
+            q_offset_static=q_offset,
+        )
+    return direct_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        k_positions=k_positions, kv_valid=kv_valid,
+    )

@@ -1,0 +1,290 @@
+"""Per-block-type forward functions (full-sequence and single-step decode).
+
+Every block type exposes:
+  * ``<type>_forward(params, x, cfg, *, cache=None, pos=0, ...)`` over a
+    (B, S, D) sequence, optionally producing a prefill cache, and
+  * ``<type>_decode(params, x, cache, cfg, pos, ...)`` for one (B, 1, D) step.
+
+Caches are dict pytrees with static shapes (ring buffers for windowed
+attention) so the decode step lowers to a fixed-shape XLA program.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, direct_attention
+from .config import ModelConfig
+from .mlp import mlp_apply, rmsnorm
+from .moe import moe_mlp
+from .rglru import rglru_decode_step, rglru_gates, rglru_scan
+from .rotary import apply_rope
+from .ssm import causal_conv1d, selective_scan, ssm_decode_step
+
+Cache = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (shared by 'attn' and 'moe' block types)
+# ---------------------------------------------------------------------------
+
+
+def _attn_proj(params, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, params["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, G, hd),
+        v.reshape(B, S, G, hd),
+    )
+
+
+def attn_sublayer(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    window: int,
+    cache: Optional[Cache] = None,
+    pos: jnp.ndarray | int = 0,
+    ring_pos: Optional[jnp.ndarray] = None,
+    make_cache: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    """Full-sequence attention. If ``make_cache``, also return the KV cache."""
+    B, S, D = x.shape
+    q, k, v = _attn_proj(params, x, cfg)
+    positions = pos + jnp.arange(S)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention(
+        q, k, v, causal=True, window=window, q_offset=0,
+        causal_buckets=cfg.attn_buckets,
+    )
+    out = jnp.einsum(
+        "bsf,fd->bsd", out.reshape(B, S, cfg.num_heads * cfg.head_dim), params["wo"]
+    )
+    new_cache = None
+    if make_cache:
+        W = window if window > 0 else S
+        W = min(W, S)
+        new_cache = {"k": k[:, S - W :], "v": v[:, S - W :]}
+    return out, new_cache
+
+
+KV_SCALE_EPS = 1e-8
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, T, G, hd) -> (int8 values, (B, T, G, 1) fp32 scales)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0 + KV_SCALE_EPS
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attn_sublayer_decode(
+    params,
+    x: jnp.ndarray,            # (B, 1, D)
+    cfg: ModelConfig,
+    cache: Cache,              # {"k": (B, T, G, hd), "v": ...} (+scales if int8)
+    pos: jnp.ndarray,          # scalar absolute position of this token
+    window: int,
+    ring_pos: jnp.ndarray,     # (T,) absolute position stored in each slot
+) -> Tuple[jnp.ndarray, Cache]:
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q, k, v = _attn_proj(params, x, cfg)
+    q = apply_rope(q, pos + jnp.zeros((1,), jnp.int32), cfg.rope_theta)
+    k = apply_rope(k, pos + jnp.zeros((1,), jnp.int32), cfg.rope_theta)
+    slot = jnp.where(window > 0, pos % T, jnp.minimum(pos, T - 1))
+
+    quant = cfg.kv_quant == "int8"
+    if quant:
+        # perf iteration #3: the decode memory term is dominated by KV-cache
+        # reads; int8 storage halves that traffic (and residency) at the
+        # cost of cheap dequant VPU work + <0.5% quantization error.
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=1),
+        }
+        k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"], k.dtype)
+        v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"], v.dtype)
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1),
+        }
+        k_cache, v_cache = new_cache["k"], new_cache["v"]
+
+    k_pos = jnp.where(jnp.arange(T) == slot, pos, ring_pos)
+    kv_valid = (k_pos >= 0) & (k_pos <= pos)
+    out = direct_attention(
+        q, k_cache, v_cache, causal=True, window=window,
+        q_offset=pos, k_positions=k_pos,
+        kv_valid=jnp.broadcast_to(kv_valid[None], (B, T)),
+    )
+    out = jnp.einsum(
+        "bsf,fd->bsd", out.reshape(B, 1, cfg.num_heads * cfg.head_dim), params["wo"]
+    )
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block types
+# ---------------------------------------------------------------------------
+
+
+def attn_block(params, x, cfg: ModelConfig, *, window, make_cache=False):
+    h, cache = attn_sublayer(
+        params, rmsnorm(x, params["ln1"], cfg.norm_eps), cfg,
+        window=window, make_cache=make_cache,
+    )
+    x = x + h
+    x = x + mlp_apply(rmsnorm(x, params["ln2"], cfg.norm_eps), params, cfg.mlp_variant)
+    return x, cache, jnp.float32(0.0)
+
+
+def attn_block_decode(params, x, cache, cfg: ModelConfig, pos, *, window, ring_pos):
+    h, new_cache = attn_sublayer_decode(
+        params, rmsnorm(x, params["ln1"], cfg.norm_eps), cfg, cache, pos, window, ring_pos
+    )
+    x = x + h
+    x = x + mlp_apply(rmsnorm(x, params["ln2"], cfg.norm_eps), params, cfg.mlp_variant)
+    return x, new_cache
+
+
+def _moe_ffn(params, flat, cfg: ModelConfig):
+    """Dispatch to dense-pjit or shard_map expert-parallel MoE."""
+    from repro.distributed.sharding import active_rules
+    from .moe import moe_mlp_ep
+
+    rules = active_rules()
+    if cfg.moe_ep and rules is not None and "model" in rules.mesh.shape:
+        return moe_mlp_ep(
+            flat, params["router"], params["ewg"], params.get("ewu"),
+            params["ewd"], cfg.experts_per_token, cfg.expert_capacity_factor,
+            rules.mesh, batch_axes=("pod", "data"), expert_axis="model",
+        )
+    return moe_mlp(
+        flat, params["router"], params["ewg"], params.get("ewu"), params["ewd"],
+        cfg.experts_per_token, cfg.expert_capacity_factor,
+    )
+
+
+def moe_block(params, x, cfg: ModelConfig, *, window, make_cache=False):
+    h, cache = attn_sublayer(
+        params, rmsnorm(x, params["ln1"], cfg.norm_eps), cfg,
+        window=window, make_cache=make_cache,
+    )
+    x = x + h
+    B, S, D = x.shape
+    flat = rmsnorm(x, params["ln2"], cfg.norm_eps).reshape(B * S, D)
+    out, aux = _moe_ffn(params, flat, cfg)
+    return x + out.reshape(B, S, D), cache, aux
+
+
+def moe_block_decode(params, x, cache, cfg: ModelConfig, pos, *, window, ring_pos):
+    h, new_cache = attn_sublayer_decode(
+        params, rmsnorm(x, params["ln1"], cfg.norm_eps), cfg, cache, pos, window, ring_pos
+    )
+    x = x + h
+    B, S, D = x.shape
+    flat = rmsnorm(x, params["ln2"], cfg.norm_eps).reshape(B * S, D)
+    out, _ = _moe_ffn(params, flat, cfg)
+    return x + out.reshape(B, S, D), new_cache
+
+
+def _ssm_inner(params, xn, cfg: ModelConfig, conv_state, h_state):
+    """Shared Mamba mixer; sequence length may be 1 (decode) or S."""
+    B, S, D = xn.shape
+    Din, N, R = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    xz = jnp.einsum("bsd,df->bsf", xn, params["w_in"])
+    xpart, z = jnp.split(xz, 2, axis=-1)                       # (B,S,Din) each
+    xconv, new_conv = causal_conv1d(xpart, params["conv_w"], params["conv_b"], conv_state)
+    xconv = jax.nn.silu(xconv)
+    proj = jnp.einsum("bsf,fr->bsr", xconv, params["w_x"])     # (B,S,R+2N)
+    dt_r, Bmat, Cmat = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rf->bsf", dt_r, params["w_dt"]) + params["b_dt"]
+    )
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))          # (Din,N), negative
+    if S == 1 and h_state is not None:
+        y, h_new = ssm_decode_step(
+            xconv[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0], params["d_skip"], h_state
+        )
+        y = y[:, None]
+    else:
+        y, h_new = selective_scan(
+            xconv, dt, A, Bmat, Cmat, params["d_skip"], h0=h_state, chunk=cfg.ssm_chunk
+        )
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, params["w_out"])
+    return out, new_conv, h_new
+
+
+def ssm_block(params, x, cfg: ModelConfig, *, make_cache=False):
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32) if make_cache else None
+    out, new_conv, h_new = _ssm_inner(params, xn, cfg, conv_state=None, h_state=h0)
+    cache = {"conv": new_conv, "h": h_new} if make_cache else None
+    return x + out, cache, jnp.float32(0.0)
+
+
+def ssm_block_decode(params, x, cache, cfg: ModelConfig, pos):
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    out, new_conv, h_new = _ssm_inner(
+        params, xn, cfg, conv_state=cache["conv"], h_state=cache["h"]
+    )
+    return x + out, {"conv": new_conv, "h": h_new}
+
+
+def rec_block(params, x, cfg: ModelConfig, *, make_cache=False):
+    """RG-LRU recurrent block (Griffin): gated dual-branch."""
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    B, S, D = xn.shape
+    y = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xn, params["wy"]))
+    xb = jnp.einsum("bsd,df->bsf", xn, params["wx"])           # (B,S,Dr)
+    xb, new_conv = causal_conv1d(xb, params["conv_w"], params["conv_b"], None)
+    log_a, gated = rglru_gates(
+        xb, params["wr"], params["wi"], params["br"], params["bi"], params["lam"]
+    )
+    h, h_last = rglru_scan(log_a, gated)
+    out = jnp.einsum("bsf,fd->bsd", (h.astype(x.dtype) * y), params["w_out"])
+    x = x + out
+    x = x + mlp_apply(rmsnorm(x, params["ln2"], cfg.norm_eps), params, cfg.mlp_variant)
+    cache = {"conv": new_conv, "h": h_last} if make_cache else None
+    return x, cache, jnp.float32(0.0)
+
+
+def rec_block_decode(params, x, cache, cfg: ModelConfig, pos):
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    B = xn.shape[0]
+    y = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xn, params["wy"]))
+    xb = jnp.einsum("bsd,df->bsf", xn, params["wx"])
+    xb, new_conv = causal_conv1d(xb, params["conv_w"], params["conv_b"], cache["conv"])
+    h_out, h_new = rglru_decode_step(
+        xb[:, 0], params["wr"], params["wi"], params["br"], params["bi"],
+        params["lam"], cache["h"],
+    )
+    out = jnp.einsum("bsf,fd->bsd", h_out[:, None] * y, params["w_out"])
+    x = x + out
+    x = x + mlp_apply(rmsnorm(x, params["ln2"], cfg.norm_eps), params, cfg.mlp_variant)
+    return x, {"conv": new_conv, "h": h_new}

@@ -1,0 +1,31 @@
+"""Gated (SwiGLU) feed-forward block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray, wd: jnp.ndarray) -> jnp.ndarray:
+    """x (..., D) -> (..., D) via silu(x wg) * (x wu) wd."""
+    gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, wg))
+    up = jnp.einsum("...d,df->...f", x, wu)
+    return jnp.einsum("...f,fd->...d", gate * up, wd)
+
+
+def gelu_mlp(x: jnp.ndarray, wg: jnp.ndarray, wd: jnp.ndarray) -> jnp.ndarray:
+    """Non-gated 2-matrix FFN (starcoder2 / musicgen style)."""
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, wg))
+    return jnp.einsum("...f,fd->...d", h, wd)
+
+
+def mlp_apply(x: jnp.ndarray, params, variant: str) -> jnp.ndarray:
+    if variant == "swiglu":
+        return swiglu(x, params["wg"], params["wu"], params["wd"])
+    return gelu_mlp(x, params["wg"], params["wd"])
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)

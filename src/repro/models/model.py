@@ -1,0 +1,358 @@
+"""The LM: embedding -> scanned block segments -> logits/loss, with
+prefill/decode paths for serving. Mesh-agnostic; sharding is injected via
+``repro.distributed.sharding.constrain`` logical-axis annotations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+from . import blocks as B
+from .config import ModelConfig
+from .init import init_params, padded_vocab
+from .mlp import rmsnorm
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+IGNORE = -1
+
+
+def block_window(cfg: ModelConfig) -> int:
+    """Window of the attention blocks: hybrid archs use the local window."""
+    if "rec" in cfg.block_pattern:
+        return cfg.local_window
+    return cfg.window
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Params:
+        return init_params(key, self.cfg)
+
+    def param_shapes(self, key=None) -> Params:
+        key = jax.random.key(0) if key is None else key
+        return jax.eval_shape(lambda k: init_params(k, self.cfg), key)
+
+    # ------------------------------------------------------------- backbone
+    def _apply_unit(self, unit, pt, ct, h, mode, pos, ring_pos):
+        cfg = self.cfg
+        win = block_window(cfg)
+        new_c: Dict[str, Any] = {}
+        aux = jnp.float32(0.0)
+        for j, btype in enumerate(unit):
+            bp = pt[f"u{j}"]
+            cj = ct[f"u{j}"] if ct is not None else None
+            if btype in ("attn", "moe"):
+                if mode == "decode":
+                    fn = B.attn_block_decode if btype == "attn" else B.moe_block_decode
+                    h, nc = fn(bp, h, cj, cfg, pos, window=win, ring_pos=ring_pos)
+                else:
+                    fn = B.attn_block if btype == "attn" else B.moe_block
+                    h, nc, a = fn(bp, h, cfg, window=win, make_cache=(mode == "prefill"))
+                    aux = aux + a
+            elif btype == "ssm":
+                if mode == "decode":
+                    h, nc = B.ssm_block_decode(bp, h, cj, cfg, pos)
+                else:
+                    h, nc, _ = B.ssm_block(bp, h, cfg, make_cache=(mode == "prefill"))
+            elif btype == "rec":
+                if mode == "decode":
+                    h, nc = B.rec_block_decode(bp, h, cj, cfg, pos)
+                else:
+                    h, nc, _ = B.rec_block(bp, h, cfg, make_cache=(mode == "prefill"))
+            else:
+                raise ValueError(btype)
+            h = constrain(h, "batch", "seq", "embed")
+            if nc is not None:
+                new_c[f"u{j}"] = nc
+        return h, new_c, aux
+
+    def backbone(
+        self,
+        params: Params,
+        h: jnp.ndarray,
+        mode: str = "full",
+        caches: Optional[list] = None,
+        pos: jnp.ndarray | int = 0,
+        ring_pos: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, list, jnp.ndarray]:
+        """Run all segments. Returns (h, new_caches_per_segment, aux_loss)."""
+        cfg = self.cfg
+        new_caches = []
+        aux_total = jnp.float32(0.0)
+        for si, (unit, repeats) in enumerate(cfg.segments()):
+            seg_p = params[f"seg{si}"]
+            seg_c = caches[si] if caches is not None else None
+
+            def body(h, xs, unit=unit):
+                pt, ct = xs
+                h, nc, aux = self._apply_unit(unit, pt, ct, h, mode, pos, ring_pos)
+                return h, (nc, aux)
+
+            if cfg.remat and mode != "decode":
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                )
+            xs = (seg_p, seg_c if seg_c is not None else _none_like(seg_p))
+            h, (nc, auxs) = jax.lax.scan(body, h, xs)
+            new_caches.append(nc if (mode != "full") else None)
+            aux_total = aux_total + jnp.sum(auxs)
+        return h, new_caches, aux_total
+
+    # --------------------------------------------------------------- embed
+    def embed(
+        self, params: Params, tokens: jnp.ndarray,
+        frontend_embeds: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        h = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        if frontend_embeds is not None:
+            h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+        return constrain(h, "batch", "seq", "embed")
+
+    def logits(self, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+        h = rmsnorm(h, params["final_norm"], self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("...d,vd->...v", h, params["embed"]["tok"])
+        else:
+            logits = jnp.einsum("...d,dv->...v", h, params["head"]["w"])
+        if self.cfg.logits_softcap > 0:
+            c = self.cfg.logits_softcap
+            logits = jnp.tanh(logits / c) * c
+        return constrain(logits, "batch", "seq", "vocab")
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Next-token LM loss. ``batch`` has tokens (B, S_tok) and, for
+        frontend archs, frontend_embeds (B, Lf, D)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        fe = batch.get("frontend_embeds")
+        h = self.embed(params, tokens, fe)
+        Bsz, S = h.shape[0], h.shape[1]
+        Lf = 0 if fe is None else fe.shape[1]
+
+        targets = jnp.full((Bsz, S), IGNORE, jnp.int32)
+        if Lf > 0:
+            targets = jax.lax.dynamic_update_slice(targets, tokens.astype(jnp.int32), (0, Lf - 1))
+        else:
+            targets = targets.at[:, : S - 1].set(tokens[:, 1:].astype(jnp.int32))
+
+        h, _, aux = self.backbone(params, h, "full")
+
+        if cfg.loss_chunk and cfg.loss_chunk < S:
+            nloss, ncount = self._chunked_xent(params, h, targets)
+        else:
+            logits = self.logits(params, h)
+            nloss, ncount = _xent_sum(logits, targets, cfg.vocab_size)
+        loss = nloss / jnp.maximum(ncount, 1.0)
+        if cfg.num_experts:
+            loss = loss + 0.01 * aux / max(len(cfg.layer_types), 1)
+        return loss, {"nll": nloss / jnp.maximum(ncount, 1.0), "aux": aux}
+
+    def _chunked_xent(self, params, h, targets):
+        cfg = self.cfg
+        Bsz, S, D = h.shape
+        c = cfg.loss_chunk
+        n = S // c
+        hs = h[:, : n * c].reshape(Bsz, n, c, D).transpose(1, 0, 2, 3)
+        ts = targets[:, : n * c].reshape(Bsz, n, c).transpose(1, 0, 2)
+
+        def step(carry, xs):
+            nl, nc = carry
+            hc, tc = xs
+            logits = self.logits(params, hc)
+            l, k = _xent_sum(logits, tc, cfg.vocab_size)
+            return (nl + l, nc + k), None
+
+        (nloss, ncount), _ = jax.lax.scan(
+            step, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ts)
+        )
+        if n * c < S:  # remainder
+            logits = self.logits(params, h[:, n * c :])
+            l, k = _xent_sum(logits, targets[:, n * c :], cfg.vocab_size)
+            nloss, ncount = nloss + l, ncount + k
+        return nloss, ncount
+
+    # ------------------------------------------------------------- forward
+    def forward(
+        self, params: Params, tokens: jnp.ndarray,
+        frontend_embeds: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        h = self.embed(params, tokens, frontend_embeds)
+        h, _, _ = self.backbone(params, h, "full")
+        return self.logits(params, h)
+
+    # ------------------------------------------------------------- serving
+    def attn_cache_len(self, seq_len: int) -> int:
+        types = set(self.cfg.layer_types)
+        if not (types & {"attn", "moe"}):
+            return 0
+        w = block_window(self.cfg)
+        return min(w, seq_len) if w > 0 else seq_len
+
+    def prefill(
+        self, params: Params, tokens: jnp.ndarray,
+        frontend_embeds: Optional[jnp.ndarray] = None,
+        extra_slots: int = 1,
+    ) -> Tuple[jnp.ndarray, Cache]:
+        """Returns (next-token logits (B, V), cache ready for decode).
+
+        Full-attention caches are padded with ``extra_slots`` empty positions
+        for subsequent decode steps; windowed caches are ring buffers and
+        need no padding.
+        """
+        h = self.embed(params, tokens, frontend_embeds)
+        S = h.shape[1]
+        h, seg_caches, _ = self.backbone(params, h, "prefill")
+        logits = self.logits(params, h[:, -1:])[:, 0]
+        windowed = block_window(self.cfg) > 0
+        T = self.attn_cache_len(S)
+        ring = None
+        if T:
+            if windowed:
+                s = np.arange(T)
+                ring = jnp.asarray((S - 1) - ((S - 1 - s) % T), jnp.int32)
+                seg_caches = [
+                    {
+                        uk: (
+                            {k: _ring_permute(v, S=S, T=T) for k, v in uc.items()}
+                            if "k" in uc else uc
+                        )
+                        for uk, uc in seg.items()
+                    }
+                    for seg in seg_caches
+                ]
+            else:
+                ring = jnp.concatenate(
+                    [jnp.arange(S, dtype=jnp.int32),
+                     jnp.full((extra_slots,), -1, jnp.int32)]
+                )
+                seg_caches = [
+                    {
+                        uk: (
+                            {k: _pad_slots(v, extra_slots) for k, v in uc.items()}
+                            if "k" in uc else uc
+                        )
+                        for uk, uc in seg.items()
+                    }
+                    for seg in seg_caches
+                ]
+            if self.cfg.kv_quant == "int8":
+                from .blocks import quantize_kv
+
+                def _quant(uc):
+                    kq, ks = quantize_kv(uc["k"])
+                    vq, vs = quantize_kv(uc["v"])
+                    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+                seg_caches = [
+                    {uk: (_quant(uc) if "k" in uc else uc) for uk, uc in seg.items()}
+                    for seg in seg_caches
+                ]
+        cache = {"pos": jnp.int32(S), "ring": ring, "segs": seg_caches}
+        return logits, cache
+
+    def decode_step(
+        self, params: Params, cache: Cache, tokens: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, Cache]:
+        """One token step: tokens (B, 1) -> (logits (B, V), updated cache)."""
+        pos = cache["pos"]
+        ring = cache["ring"]
+        h = self.embed(params, tokens)
+        h, new_segs, _ = self.backbone(params, h, "decode", cache["segs"], pos, ring)
+        logits = self.logits(params, h)[:, 0]
+        new_ring = ring
+        if ring is not None:
+            T = ring.shape[0]
+            w = block_window(self.cfg)
+            slot = pos % T if w > 0 else jnp.minimum(pos, T - 1)
+            new_ring = jnp.where(jnp.arange(T) == slot, pos, ring)
+        return logits, {"pos": pos + 1, "ring": new_ring, "segs": new_segs}
+
+    def init_cache(self, batch: int, cache_len: int, prefilled: int = 0) -> Cache:
+        """Concrete zeroed cache (ring positions consistent with ``prefilled``)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        T = self.attn_cache_len(cache_len)
+        G, hd, K = cfg.num_kv_heads, cfg.head_dim, cfg.ssm_conv
+        segs = []
+        for unit, repeats in cfg.segments():
+            seg: Dict[str, Any] = {}
+            for j, btype in enumerate(unit):
+                if btype in ("attn", "moe"):
+                    if cfg.kv_quant == "int8":
+                        seg[f"u{j}"] = {
+                            "k": jnp.zeros((repeats, batch, T, G, hd), jnp.int8),
+                            "v": jnp.zeros((repeats, batch, T, G, hd), jnp.int8),
+                            "k_scale": jnp.zeros((repeats, batch, T, G, 1), jnp.float32),
+                            "v_scale": jnp.zeros((repeats, batch, T, G, 1), jnp.float32),
+                        }
+                    else:
+                        seg[f"u{j}"] = {
+                            "k": jnp.zeros((repeats, batch, T, G, hd), dt),
+                            "v": jnp.zeros((repeats, batch, T, G, hd), dt),
+                        }
+                elif btype == "ssm":
+                    seg[f"u{j}"] = {
+                        "conv": jnp.zeros((repeats, batch, K - 1, cfg.d_inner), dt),
+                        "h": jnp.zeros((repeats, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                    }
+                elif btype == "rec":
+                    seg[f"u{j}"] = {
+                        "conv": jnp.zeros((repeats, batch, K - 1, cfg.rnn_width), dt),
+                        "h": jnp.zeros((repeats, batch, cfg.rnn_width), jnp.float32),
+                    }
+            segs.append(seg)
+        ring = None
+        if T:
+            s = np.arange(T)
+            rp = (prefilled - 1) - ((prefilled - 1 - s) % T)
+            rp = np.where((rp >= 0) & (rp < prefilled), rp, -1)
+            ring = jnp.asarray(rp, jnp.int32)
+        return {"pos": jnp.int32(prefilled), "ring": ring, "segs": segs}
+
+
+def _ring_permute(leaf, S: int, T: int):
+    """Reorder a (n, B, T, ...) prefill cache from sequence order to ring
+    (position % T) order."""
+    if leaf.ndim >= 3 and leaf.shape[2] == T:
+        s = np.arange(T)
+        src = (S - 1) - ((S - 1 - s) % T) - (S - T)
+        return leaf[:, :, src]
+    return leaf
+
+
+def _pad_slots(leaf, extra: int):
+    """Append ``extra`` zero slots along the cache-time axis (dim 2)."""
+    pad = [(0, 0)] * leaf.ndim
+    pad[2] = (0, extra)
+    return jnp.pad(leaf, pad)
+
+
+def _none_like(tree):
+    return jax.tree.map(lambda _: None, tree, is_leaf=lambda x: x is None)
+
+
+def _xent_sum(logits: jnp.ndarray, targets: jnp.ndarray, vocab: int):
+    """Sum of masked next-token cross-entropies + valid count (fp32)."""
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    if V > vocab:  # mask padded vocab slots
+        pad_mask = jnp.arange(V) >= vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    safe_t = jnp.maximum(targets, 0)
+    picked = jnp.take_along_axis(logits, safe_t[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (targets != IGNORE).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)

@@ -1,0 +1,232 @@
+"""Top-k mixture-of-experts MLP with capacity-bounded sort dispatch.
+
+Dispatch is the MegaBlocks/Switch-style static-shape formulation:
+  1. router logits -> top-k experts + normalized combine weights per token,
+  2. tokens are ranked within their expert (cumulative count) and dropped
+     beyond ``capacity = ceil(T * k / E * capacity_factor)``,
+  3. gather tokens into an (E, C, D) buffer, run a batched expert matmul
+     (E, C, D) x (E, D, F) — MXU-friendly and EP-shardable on the expert
+     axis, then scatter-add back weighted by the combine weights.
+
+Under expert-parallel sharding (experts split over the ``model`` mesh axis)
+the gather/scatter lower to all-to-all collectives via GSPMD.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def router_topk(
+    logits: jnp.ndarray, k: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(T, E) -> ((T, k) expert ids, (T, k) softmax-renormalized weights)."""
+    weights, idx = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(weights.astype(jnp.float32), axis=-1)
+    return idx, weights
+
+
+def capacity_for(tokens: int, num_experts: int, k: int, factor: float) -> int:
+    cap = int(math.ceil(tokens * k / num_experts * factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-lane alignment
+
+
+def moe_mlp(
+    x: jnp.ndarray,          # (T, D) flattened tokens
+    router_w: jnp.ndarray,   # (D, E)
+    wg: jnp.ndarray,         # (E, D, F)
+    wu: jnp.ndarray,         # (E, D, F)
+    wd: jnp.ndarray,         # (E, F, D)
+    k: int,
+    capacity_factor: float = 1.25,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (T, D), aux load-balancing loss scalar)."""
+    T, D = x.shape
+    E = router_w.shape[1]
+    C = capacity_for(T, E, k, capacity_factor)
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32))
+    logits = constrain(logits, "batch", None)
+    expert_idx, combine_w = router_topk(logits, k)            # (T, k)
+
+    # Position of each (token, slot) within its expert: rank by arrival order.
+    flat_expert = expert_idx.reshape(-1)                      # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)          # running count
+    slot = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = slot < C                                           # capacity drop
+
+    # Scatter token features into the (E, C, D) dispatch buffer.
+    buf_index = flat_expert * C + slot
+    buf_index = jnp.where(keep, buf_index, E * C)             # dropped -> scratch row
+    token_of = jnp.repeat(jnp.arange(T), k)
+    dispatch = jnp.zeros((E * C + 1, D), x.dtype).at[buf_index].set(x[token_of])
+    dispatch = dispatch[: E * C].reshape(E, C, D)
+    dispatch = constrain(dispatch, "experts", "batch", None)
+
+    # Batched expert FFN (EP-shardable on the leading expert axis).
+    if wu is not None:  # SwiGLU
+        gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatch, wg))
+        up = jnp.einsum("ecd,edf->ecf", dispatch, wu)
+        hidden = gate * up
+    else:               # GELU
+        hidden = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", dispatch, wg))
+    expert_out = jnp.einsum("ecf,efd->ecd", hidden, wd)       # (E, C, D)
+    expert_out = constrain(expert_out, "experts", "batch", None)
+
+    # Gather back + combine. ``token_of`` is repeat(arange(T), k), so the
+    # combine "scatter-add" is exactly a (T, k, D) reshape + sum over k —
+    # expressing it that way keeps it shard-local under GSPMD instead of
+    # a replicate+all-reduce scatter (perf iteration #2b).
+    flat_out = expert_out.reshape(E * C, D)
+    gathered = jnp.where(
+        keep[:, None], flat_out[jnp.where(keep, buf_index, 0)], 0.0
+    )                                                          # (T*k, D)
+    w = combine_w.reshape(-1)[:, None].astype(x.dtype)
+    out = (gathered * w).reshape(T, k, D).sum(axis=1)
+    out = constrain(out, "batch", None)
+
+    # Switch-style load-balance auxiliary loss.
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel MoE via shard_map (perf iteration #2: proper EP)
+# ---------------------------------------------------------------------------
+
+
+def _rank_within(group: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """Arrival-order rank of each element within its group id."""
+    onehot = jax.nn.one_hot(group, n_groups, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    return jnp.take_along_axis(pos, group[:, None], axis=1)[:, 0]
+
+
+def moe_mlp_ep(
+    x: jnp.ndarray,          # (T, D) GLOBAL tokens (sharded over batch axes)
+    router_w: jnp.ndarray,   # (D, E) replicated
+    wg: jnp.ndarray,         # (E, D, F) sharded over the expert axis
+    wu,                      # (E, D, F) or None
+    wd: jnp.ndarray,         # (E, F, D)
+    k: int,
+    capacity_factor: float,
+    mesh,
+    batch_axes: Tuple[str, ...],
+    expert_axis: str = "model",
+):
+    """Shard-local MoE dispatch with explicit all-to-all over the expert axis.
+
+    GSPMD lowers the pjit dispatch scatters by replicating the (E, C, D)
+    buffers and all-reducing them — gigabytes of wire per layer (verified in
+    the dry-run HLO as 'involuntary full rematerialization' all-reduces).
+    Inside shard_map every scatter is shard-LOCAL; the only collectives are
+    two token-sized all-to-alls (dispatch + return), which is the minimal
+    communication MoE requires. Two-stage capacity: C_s per destination
+    shard at dispatch, C_e per local expert after the exchange (same drop
+    semantics as the dense path under balanced load).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    E = router_w.shape[1]
+    n_shards = mesh.shape[expert_axis]
+    assert E % n_shards == 0, (E, n_shards)
+    E_local = E // n_shards
+    gated = wu is not None
+
+    def local_fn(x_l, rw, wg_l, wu_l, wd_l):
+        T_l, D = x_l.shape
+        logits = jnp.einsum(
+            "td,de->te", x_l.astype(jnp.float32), rw.astype(jnp.float32)
+        )
+        expert_idx, combine_w = router_topk(logits, k)          # (T_l, k)
+        flat_e = expert_idx.reshape(-1)
+        token_of = jnp.repeat(jnp.arange(T_l), k)
+        dest = flat_e // E_local                                 # target shard
+
+        # --- stage 1: pack per-destination-shard send buffers (local scatter)
+        C_s = capacity_for(T_l, n_shards, k, capacity_factor)
+        slot = _rank_within(dest, n_shards)
+        keep = slot < C_s
+        send_idx = jnp.where(keep, dest * C_s + slot, n_shards * C_s)
+        send = (
+            jnp.zeros((n_shards * C_s + 1, D), x_l.dtype)
+            .at[send_idx].set(x_l[token_of])[: n_shards * C_s]
+            .reshape(n_shards, C_s, D)
+        )
+        send_e = (
+            jnp.full((n_shards * C_s + 1,), -1, jnp.int32)
+            .at[send_idx].set((flat_e % E_local).astype(jnp.int32))[: n_shards * C_s]
+            .reshape(n_shards, C_s)
+        )
+
+        # --- exchange: tokens travel to their experts' shard
+        recv = jax.lax.all_to_all(send, expert_axis, 0, 0, tiled=True)
+        recv_e = jax.lax.all_to_all(send_e, expert_axis, 0, 0, tiled=True)
+        rows = recv.reshape(n_shards * C_s, D)
+        re = recv_e.reshape(-1)
+
+        # --- stage 2: local dispatch to per-expert buffers (local scatter)
+        C_e = capacity_for(n_shards * C_s, E_local, 1, capacity_factor)
+        valid = re >= 0
+        slot2 = _rank_within(jnp.where(valid, re, 0), E_local)
+        keep2 = valid & (slot2 < C_e)
+        buf_idx = jnp.where(keep2, re * C_e + slot2, E_local * C_e)
+        buf = (
+            jnp.zeros((E_local * C_e + 1, D), x_l.dtype)
+            .at[buf_idx].set(rows)[: E_local * C_e]
+            .reshape(E_local, C_e, D)
+        )
+        if gated:
+            hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg_l)) * jnp.einsum(
+                "ecd,edf->ecf", buf, wu_l
+            )
+        else:
+            hidden = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, wg_l))
+        eout = jnp.einsum("ecf,efd->ecd", hidden, wd_l).reshape(E_local * C_e, D)
+
+        # --- return trip: same slots back to the source shard
+        back_rows = jnp.where(keep2[:, None], eout[jnp.where(keep2, buf_idx, 0)], 0.0)
+        back = jax.lax.all_to_all(
+            back_rows.reshape(n_shards, C_s, D), expert_axis, 0, 0, tiled=True
+        ).reshape(n_shards * C_s, D)
+
+        gathered = jnp.where(keep[:, None], back[jnp.where(keep, send_idx, 0)], 0.0)
+        w = combine_w.reshape(-1)[:, None].astype(x_l.dtype)
+        y = (gathered * w).reshape(T_l, k, D).sum(axis=1)
+
+        # load-balance aux (pmean over every mesh axis -> replicated scalar)
+        probs = jax.nn.softmax(logits, axis=-1)
+        frac_tok = jnp.mean(
+            jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0
+        )
+        aux = E * jnp.sum(frac_tok * jnp.mean(probs, axis=0))
+        for ax in mesh.axis_names:
+            aux = jax.lax.pmean(aux, ax)
+        return y, aux
+
+    baxes = tuple(a for a in batch_axes if a in mesh.shape)
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None), P(None, None),
+            P(expert_axis, None, None),
+            P(expert_axis, None, None) if gated else P(None),
+            P(expert_axis, None, None),
+        ),
+        out_specs=(P(bspec, None), P()),
+        check_rep=False,
+    )(x, router_w, wg, wu if gated else jnp.zeros((1,), x.dtype), wd)

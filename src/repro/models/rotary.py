@@ -1,0 +1,30 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotate pairs of features by position-dependent angles.
+
+    Args:
+      x: (B, S, H, hd) queries or keys.
+      positions: (B, S) or (S,) absolute token positions.
+    """
+    B, S, H, hd = x.shape
+    inv = rope_frequencies(hd, theta)                       # (hd/2,)
+    pos = jnp.asarray(positions, jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    angles = pos[:, :, None] * inv[None, None, :]           # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]                    # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)

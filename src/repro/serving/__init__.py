@@ -1,0 +1,9 @@
+"""Serving runtime: arm engine, ThriftLLM router, batch scheduler."""
+from .engine import LMArm, OracleArm, PoolEngine, USD_PER_FLOP
+from .router import RouteResult, ThriftRouter
+from .scheduler import BatchScheduler, Request
+
+__all__ = [
+    "LMArm", "OracleArm", "PoolEngine", "USD_PER_FLOP",
+    "ThriftRouter", "RouteResult", "BatchScheduler", "Request",
+]

@@ -1,0 +1,101 @@
+"""Model-pool execution engine.
+
+Each *arm* of the ensemble is an operator with a uniform interface:
+``classify_batch(queries) -> class ids`` plus a per-query cost and a
+simulated latency (proportional to FLOPs on this CPU container; on a real
+cluster the engine dispatches to per-arm serving replicas).
+
+Two arm families:
+  * :class:`LMArm` — a real JAX model (repro.models.LM) classifying by
+    constrained decoding over class-signature tokens;
+  * :class:`OracleArm` — Bernoulli oracle from the synthetic workload
+    (paper-faithful benchmark pool).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM, ModelConfig
+
+USD_PER_FLOP = 3.5e-18          # calibrated so pool prices match Table 4's range
+
+
+@dataclasses.dataclass
+class LMArm:
+    """A real model arm. ``classify_batch`` runs constrained decoding:
+    argmax over the class-signature token logits at the answer position."""
+
+    name: str
+    model: LM
+    params: Any
+    class_token_ids: np.ndarray
+    tokens_per_query: int = 128
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        self.flops_per_query = cfg.flops_per_token(self.tokens_per_query) * self.tokens_per_query / 3.0
+        self.cost = float(self.flops_per_query * USD_PER_FLOP)
+        self._fwd = jax.jit(self.model.forward)
+
+    def classify_batch(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens (B, S) — the answer position is the final token slot."""
+        logits = self._fwd(self.params, jnp.asarray(tokens[:, :-1]))
+        last = logits[:, -1]                                   # predicts final slot
+        class_logits = last[:, jnp.asarray(self.class_token_ids)]
+        return np.asarray(jnp.argmax(class_logits, axis=-1), np.int64)
+
+    def latency_s(self, batch: int) -> float:
+        return 1e-12 * self.flops_per_query * batch            # simulated
+
+
+@dataclasses.dataclass
+class OracleArm:
+    """Bernoulli oracle arm over an OracleWorkload."""
+
+    name: str
+    workload: Any
+    arm_index: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self.cost = float(self.workload.costs[self.arm_index])
+        self._rng = np.random.default_rng(self.seed + 7919 * self.arm_index)
+
+    def classify_batch(self, queries: Sequence) -> np.ndarray:
+        """queries: sequence of (cluster_id, label)."""
+        out = np.empty(len(queries), np.int64)
+        for i, (cid, label) in enumerate(queries):
+            out[i] = self.workload.invoke(self.arm_index, cid, label, self._rng)
+        return out
+
+    def latency_s(self, batch: int) -> float:
+        return 1e-4 * self.cost / max(self.workload.costs.min(), 1e-12) * batch
+
+
+@dataclasses.dataclass
+class PoolEngine:
+    """Holds the arm pool; executes per-arm batched calls with accounting."""
+
+    arms: List[Any]
+
+    @property
+    def costs(self) -> np.ndarray:
+        return np.asarray([a.cost for a in self.arms], np.float64)
+
+    def invoke_arm(self, arm_idx: int, queries, active: np.ndarray) -> np.ndarray:
+        """Run one arm on the active subset; inactive slots return -1."""
+        out = np.full(len(queries), -1, np.int64)
+        idx = np.flatnonzero(active)
+        if idx.size == 0:
+            return out
+        if isinstance(queries, np.ndarray):
+            sub = queries[idx]
+        else:
+            sub = [queries[i] for i in idx]
+        out[idx] = self.arms[arm_idx].classify_batch(sub)
+        return out

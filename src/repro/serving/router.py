@@ -1,0 +1,115 @@
+"""ThriftLLM router: per-query-class selection + wavefront adaptive invocation.
+
+Serving pipeline per batch (Figure 1 of the paper, batched for TPU):
+  1. embed queries, map to historical clusters -> p-hat vector per query
+  2. group queries by (cluster, budget); SurGreedyLLM selection per group
+     (cached — selection depends only on the p-vector, K and budget)
+  3. *wavefront* adaptive invocation: arms of the selected set are invoked
+     in decreasing-p order; before each wave, every query's early-stop
+     condition F(T*)·H2 <= H1 (Prop. 4) is evaluated and stopped queries
+     drop out of the wave — batch-efficient on accelerators while returning
+     exactly the predictions of the full ensemble at reduced cost.
+  4. belief aggregation (the belief_aggregate kernel on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.belief import empty_log_belief, log_weight
+from repro.core.estimation import SuccessProbEstimator
+from repro.core.selection import ThriftLLM
+
+from .engine import PoolEngine
+
+
+@dataclasses.dataclass
+class RouteResult:
+    predictions: np.ndarray          # (B,)
+    costs: np.ndarray                # (B,) realized USD
+    planned_costs: np.ndarray        # (B,) full-ensemble USD
+    arms_used: List[List[int]]       # per query
+    clusters: np.ndarray             # (B,)
+
+
+class ThriftRouter:
+    def __init__(
+        self,
+        engine: PoolEngine,
+        estimator: SuccessProbEstimator,
+        num_classes: int,
+        eps: float = 0.1,
+        delta: float = 0.01,
+        seed: int = 0,
+    ):
+        self.engine = engine
+        self.estimator = estimator
+        self.num_classes = int(num_classes)
+        self.selector = ThriftLLM(engine.costs, eps=eps, delta=delta, seed=seed)
+
+    # ------------------------------------------------------------------
+    def route_batch(
+        self,
+        queries: Any,                    # arm-payloads, len B (array or list)
+        embeddings: np.ndarray,          # (B, d)
+        budget: float,
+        stop_margin: float = 1e-9,
+    ) -> RouteResult:
+        B = len(queries)
+        K = self.num_classes
+        cluster_ids = self.estimator.lookup_batch(embeddings)
+
+        predictions = np.zeros(B, np.int64)
+        costs = np.zeros(B, np.float64)
+        planned = np.zeros(B, np.float64)
+        arms_used: List[List[int]] = [[] for _ in range(B)]
+
+        for cid in np.unique(cluster_ids):
+            q_idx = np.flatnonzero(cluster_ids == cid)
+            stats = self.estimator.clusters[int(cid)]
+            p = stats.p_hat
+            sel = self.selector.select(p, K, budget)
+            order = sorted(sel.chosen, key=lambda i: -p[i])
+            w = log_weight(np.clip(p, 1e-4, 1 - 1e-4), K)
+            empty = empty_log_belief(p)
+
+            nb = q_idx.size
+            beliefs = np.full((nb, K), empty, np.float64)
+            counts = np.zeros((nb, K), np.int64)
+            active = np.ones(nb, bool)
+            planned[q_idx] = float(self.engine.costs[order].sum()) if order else 0.0
+
+            for wave, arm in enumerate(order):
+                # early-stop check per query (Prop. 4)
+                log_f = float(np.sum(w[order[wave:]]))
+                srt = np.sort(beliefs, axis=1)
+                h1, h2 = srt[:, -1], srt[:, -2]
+                still = active & (log_f + h2 > h1 - stop_margin)
+                if not still.any():
+                    break
+                full_active = np.zeros(B, bool)
+                full_active[q_idx[still]] = True
+                resp = self.engine.invoke_arm(arm, queries, full_active)[q_idx]
+                hit = np.flatnonzero(still)
+                for j in hit:
+                    r = int(resp[j])
+                    if counts[j, r] == 0:
+                        beliefs[j, r] = w[arm]
+                    else:
+                        beliefs[j, r] += w[arm]
+                    counts[j, r] += 1
+                    costs[q_idx[j]] += self.engine.costs[arm]
+                    arms_used[q_idx[j]].append(arm)
+                active = still
+
+            predictions[q_idx] = np.argmax(beliefs, axis=1)
+
+        return RouteResult(
+            predictions=predictions,
+            costs=costs,
+            planned_costs=planned,
+            arms_used=arms_used,
+            clusters=cluster_ids,
+        )

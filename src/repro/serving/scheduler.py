@@ -1,0 +1,69 @@
+"""Request batching scheduler with straggler hedging.
+
+Requests accumulate until ``max_batch`` or ``max_wait_s``; each flushed
+batch goes through the ThriftRouter. Per-arm latency estimates feed the
+StragglerMitigator — slow arms are pushed to the tail of the invocation
+wavefront, where Prop. 4 early-stopping most often makes them unnecessary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.distributed.fault import StragglerMitigator
+
+
+@dataclasses.dataclass
+class Request:
+    payload: Any
+    embedding: np.ndarray
+    budget: float
+    arrival_s: float = dataclasses.field(default_factory=time.monotonic)
+
+
+class BatchScheduler:
+    def __init__(
+        self,
+        router,
+        max_batch: int = 64,
+        max_wait_s: float = 0.02,
+    ):
+        self.router = router
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._queue: List[Request] = []
+        self.mitigator = StragglerMitigator(num_workers=len(router.engine.arms))
+        self.stats: Dict[str, float] = {"batches": 0, "requests": 0}
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def ready(self) -> bool:
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.max_batch:
+            return True
+        return time.monotonic() - self._queue[0].arrival_s >= self.max_wait_s
+
+    def flush(self):
+        """Route one batch (same-budget requests grouped together)."""
+        if not self._queue:
+            return []
+        batch = self._queue[: self.max_batch]
+        self._queue = self._queue[self.max_batch :]
+        out = []
+        budgets = sorted(set(r.budget for r in batch))
+        for b in budgets:
+            group = [r for r in batch if r.budget == b]
+            payloads = [r.payload for r in group]
+            embs = np.stack([r.embedding for r in group])
+            res = self.router.route_batch(payloads, embs, b)
+            lat = [a.latency_s(len(group)) for a in self.router.engine.arms]
+            self.mitigator.record_step(lat)
+            out.append((group, res))
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(batch)
+        return out

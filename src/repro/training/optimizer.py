@@ -1,0 +1,93 @@
+"""AdamW with fp32 master weights, built from scratch (no optax).
+
+Optimizer state is a pytree mirroring the parameters:
+  {"m": fp32, "v": fp32, "master": fp32 copy, "step": int32 scalar}
+so ZeRO-style sharding is just "shard the state like the params".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"       # cosine | linear | constant
+
+
+def lr_at(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+    elif cfg.schedule == "linear":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * (1.0 - t)
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any, opt_state: Dict[str, Any], params: Any, cfg: OptimizerConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.betas
+
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        gnorm > cfg.grad_clip, cfg.grad_clip / jnp.maximum(gnorm, 1e-12), 1.0
+    )
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master)
+        return m, v, new_master
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], opt_state["master"])
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(
+        lambda mp, p: mp.astype(p.dtype), master, params
+    )
+    new_state = {"m": m, "v": v, "master": master, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,79 @@
+"""Jit-compiled training step with microbatched gradient accumulation,
+optional gradient compression, and remat-friendly structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LM
+
+from .compression import CompressionConfig, compress_grads, init_residuals
+from .optimizer import OptimizerConfig, adamw_init, adamw_update
+
+
+def init_train_state(model: LM, key, comp: CompressionConfig = CompressionConfig()):
+    params = model.init(key)
+    opt = adamw_init(params)
+    if comp.codec != "none" and comp.error_feedback:
+        opt["residuals"] = init_residuals(params)
+    return params, opt
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], m: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % m == 0, f"batch {b} not divisible by microbatches {m}"
+        return x.reshape(m, b // m, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    model: LM,
+    opt_cfg: OptimizerConfig,
+    comp_cfg: CompressionConfig = CompressionConfig(),
+) -> Callable:
+    """Build the jit-able train_step(params, opt_state, batch)."""
+
+    def loss_fn(params, microbatch):
+        loss, metrics = model.loss(params, microbatch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        m = model.cfg.num_microbatches
+        if m <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbatches = _split_microbatches(batch, m)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (gzero, jnp.float32(0.0)), mbatches)
+            grads = jax.tree.map(lambda g: g / m, gsum)
+            loss = lsum / m
+            metrics = {}
+
+        residuals = opt_state.get("residuals")
+        grads, new_res, comp_stats = compress_grads(grads, residuals, comp_cfg)
+
+        opt_core = {k: v for k, v in opt_state.items() if k != "residuals"}
+        new_params, new_opt, opt_stats = adamw_update(grads, opt_core, params, opt_cfg)
+        if new_res is not None and comp_cfg.codec != "none":
+            new_opt["residuals"] = new_res
+        out_metrics = {"loss": loss, **opt_stats, **comp_stats}
+        return new_params, new_opt, out_metrics
+
+    return train_step

@@ -1,0 +1,199 @@
+"""Paper-faithful behavior of the core selection algorithms."""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    McXiEstimator,
+    adaptive_invoke,
+    aggregate_predict,
+    gamma,
+    greedy,
+    gamma_value_batch,
+    sur_greedy,
+    theta_for,
+    xi_exact,
+    xi_pair,
+)
+
+
+def brute_force_oes(p, b, budget, K):
+    """Exact optimum by enumerating all feasible subsets (small L only)."""
+    L = len(p)
+    best, best_set = 0.0, ()
+    for r in range(L + 1):
+        for S in itertools.combinations(range(L), r):
+            if sum(b[i] for i in S) <= budget + 1e-12:
+                v = xi_exact(np.asarray(p)[list(S)], K, p_all=p) if S else 1.0 / K
+                if v > best:
+                    best, best_set = v, S
+    return best, best_set
+
+
+class TestCorrectnessProbability:
+    def test_prop2_pair_equals_max(self):
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            p = rng.uniform(0.35, 0.98, 2)
+            K = int(rng.integers(2, 8))
+            assert xi_exact(p, K) == pytest.approx(max(p), abs=1e-9)
+            assert xi_pair(*p) == max(p)
+
+    def test_lemma1_monotone_in_probs(self):
+        rng = np.random.default_rng(1)
+        for _ in range(10):
+            m, K = int(rng.integers(1, 5)), int(rng.integers(2, 5))
+            p = rng.uniform(0.3, 0.9, m)
+            hi = np.clip(p + rng.uniform(0, 0.08, m), 0, 0.99)
+            assert xi_exact(hi, K) >= xi_exact(p, K) - 1e-9
+
+    def test_lemma1_monotone_in_set(self):
+        rng = np.random.default_rng(2)
+        for _ in range(10):
+            m, K = int(rng.integers(2, 5)), int(rng.integers(2, 5))
+            p = rng.uniform(0.3, 0.9, m)
+            assert xi_exact(p, K, p_all=p) >= xi_exact(p[:-1], K, p_all=p) - 1e-9
+
+    def test_lemma2_non_submodular_counterexample(self):
+        # p1 > p2, p1 > p3, but w2*w3 > w1 -> adding l3 to {l1,l2} gains,
+        # while adding it to {l1} gains nothing (Prop. 2).
+        K = 2
+        p1, p2, p3 = 0.90, 0.85, 0.85
+        S, T = [p1], [p1, p2]
+        gain_S = xi_exact(np.array(S + [p3]), K) - xi_exact(np.array(S), K)
+        gain_T = xi_exact(np.array(T + [p3]), K) - xi_exact(np.array(T), K)
+        assert gain_T > gain_S + 1e-6, "submodularity should be violated"
+
+    def test_lemma3_gamma_upper_bounds_xi(self):
+        rng = np.random.default_rng(3)
+        for _ in range(30):
+            m, K = int(rng.integers(1, 6)), int(rng.integers(2, 6))
+            p = rng.uniform(0.2, 0.95, m)
+            assert gamma(p) >= xi_exact(p, K) - 1e-9
+
+    def test_gamma_submodular(self):
+        rng = np.random.default_rng(4)
+        for _ in range(30):
+            probs = rng.uniform(0.1, 0.9, 6)
+            s1 = [0, 1]
+            s2 = [0, 1, 2, 3]
+            l = 5
+            g1 = gamma(probs[s1 + [l]]) - gamma(probs[s1])
+            g2 = gamma(probs[s2 + [l]]) - gamma(probs[s2])
+            assert g1 >= g2 - 1e-12
+
+    def test_xi_empty_set(self):
+        est = McXiEstimator(jax.random.key(0), np.array([0.9, 0.8]), 4, 20000)
+        assert est.xi([]) == pytest.approx(0.25, abs=0.02)
+
+
+class TestMonteCarlo:
+    def test_theta_formula(self):
+        th = theta_for(0.1, 0.01, 0.9, 12)
+        expect = (8 + 2 * 0.1) / (0.1 ** 2 * 0.9) * np.log(2 * 144 / 0.01)
+        assert th == int(np.ceil(expect))
+
+    @pytest.mark.parametrize("K", [2, 3, 7])
+    def test_mc_matches_exact(self, K):
+        p = np.array([0.9, 0.75, 0.6, 0.85])
+        est = McXiEstimator(jax.random.key(1), p, K, theta=150_000)
+        assert est.xi(range(4)) == pytest.approx(xi_exact(p, K), abs=0.006)
+
+    def test_lemma4_concentration(self):
+        """|xi - xi_hat| <= eps*p*/2 holds across keys with theta from Alg 3."""
+        p = np.array([0.9, 0.8, 0.7])
+        K, eps = 3, 0.2
+        theta = theta_for(eps, 0.01, 0.9, 3)
+        exact = xi_exact(p, K)
+        bad = 0
+        for s in range(10):
+            est = McXiEstimator(jax.random.key(s), p, K, theta)
+            if abs(est.xi(range(3)) - exact) > eps * 0.9 / 2:
+                bad += 1
+        assert bad == 0
+
+
+class TestGreedy:
+    def test_vanilla_greedy_can_be_arbitrarily_bad(self):
+        """Paper Section 4.2 example: ratio-greedy picks the cheap weak arm."""
+        p = np.array([0.9, 0.2])
+        b = np.array([1.0, 0.001])
+        budget = 1.0
+        chosen, _ = greedy(p, b, budget, gamma_value_batch(p), empty_value=0.0)
+        assert chosen[0] == 1  # myopically picks the cheap arm first
+
+    def test_sur_greedy_beats_vanilla_trap(self):
+        p = np.array([0.9, 0.2])
+        b = np.array([1.0, 0.001])
+        res = sur_greedy(p, b, 1.0, 2, jax.random.key(0), theta=20_000)
+        assert 0 in list(res.chosen)  # best single arm rescued via l*
+        assert res.xi_est >= 0.85
+
+    def test_budget_respected(self):
+        rng = np.random.default_rng(5)
+        for s in range(5):
+            L = 6
+            p = rng.uniform(0.4, 0.95, L)
+            b = rng.uniform(0.1, 1.0, L)
+            budget = float(rng.uniform(0.3, 2.0))
+            res = sur_greedy(p, b, budget, 3, jax.random.key(s), theta=5_000)
+            assert res.cost <= budget + 1e-9
+
+    def test_theorem3_bound_holds_vs_bruteforce(self):
+        rng = np.random.default_rng(6)
+        for s in range(5):
+            L, K = 5, 3
+            p = rng.uniform(0.4, 0.95, L)
+            b = rng.uniform(0.1, 0.6, L)
+            budget = 1.0
+            res = sur_greedy(p, b, budget, K, jax.random.key(s), theta=40_000)
+            opt, _ = brute_force_oes(p, b, budget, K)
+            xi_star = xi_exact(p[res.chosen], K, p_all=p) if len(res.chosen) else 1 / K
+            bound = res.approx_ratio_bound * (1 - 1 / np.sqrt(np.e)) * opt
+            assert xi_star >= bound - 0.02  # eps-slack for MC noise
+
+
+class TestAdaptive:
+    def _roll(self, p, K, truth, seed):
+        r = np.random.default_rng(seed)
+
+        def invoke(i):
+            if r.random() < p[i]:
+                return truth
+            return int((truth + 1 + r.integers(K - 1)) % K)
+
+        return invoke
+
+    def test_prop4_prediction_equality(self):
+        p = np.array([0.9, 0.8, 0.7, 0.6, 0.85, 0.75])
+        b = np.ones(6) * 0.2
+        K = 4
+        res = sur_greedy(p, b, 1.0, K, jax.random.key(0), theta=10_000)
+        order = sorted(res.chosen, key=lambda i: -p[i])
+        for s in range(200):
+            inv = adaptive_invoke(list(res.chosen), p, K, self._roll(p, K, 2, s), costs=b)
+            r2 = np.random.default_rng(s)
+            full = []
+            for i in order:
+                full.append(2 if r2.random() < p[i] else int((3 + r2.integers(K - 1)) % K))
+            full_pred = aggregate_predict(np.asarray(full), p[order], K, p_all=p)
+            assert inv.prediction == full_pred
+
+    def test_adaptive_cost_never_exceeds_planned(self):
+        p = np.array([0.9, 0.8, 0.7, 0.6])
+        b = np.array([0.4, 0.3, 0.2, 0.1])
+        K = 3
+        for s in range(50):
+            inv = adaptive_invoke([0, 1, 2, 3], p, K, self._roll(p, K, 1, s), costs=b)
+            assert inv.cost <= inv.planned_cost + 1e-12
+
+    def test_adaptive_saves_cost_on_easy_queries(self):
+        p = np.array([0.97, 0.96, 0.95, 0.94, 0.93])
+        b = np.ones(5)
+        savings = []
+        for s in range(100):
+            inv = adaptive_invoke([0, 1, 2, 3, 4], p, 2, self._roll(p, 2, 0, s), costs=b)
+            savings.append(1 - inv.cost / inv.planned_cost)
+        assert np.mean(savings) > 0.2  # strong agreement stops early

@@ -1,0 +1,162 @@
+"""Success-probability estimation, clustering, data pipeline, tokenizer."""
+import numpy as np
+import pytest
+
+from repro.core.clustering import auto_eps, dbscan, kmeans
+from repro.core.estimation import (
+    SuccessProbEstimator,
+    hoeffding_interval,
+    median_boost_rounds,
+    median_boosted_interval,
+    wilson_interval,
+)
+from repro.data import (
+    DataPipeline,
+    OracleWorkload,
+    decode,
+    encode,
+    host_shard_fn,
+    make_token_task,
+)
+
+
+class TestIntervals:
+    def test_hoeffding_coverage(self):
+        rng = np.random.default_rng(0)
+        p_true, n, delta = 0.7, 200, 0.05
+        misses = 0
+        for _ in range(200):
+            x = rng.random(n) < p_true
+            lo, hi = hoeffding_interval(np.array([x.mean()]), n, delta)
+            misses += not (lo[0] <= p_true <= hi[0])
+        assert misses / 200 <= delta + 0.02
+
+    def test_wilson_tighter_than_hoeffding(self):
+        p_hat = np.array([0.8])
+        lo_h, hi_h = hoeffding_interval(p_hat, 50, 0.05)
+        lo_w, hi_w = wilson_interval(p_hat, 50, 0.05)
+        assert (hi_w - lo_w) < (hi_h - lo_h)
+
+    def test_median_boost_rounds_formula(self):
+        lam = median_boost_rounds(12, 0.01, 0.25)
+        assert lam == int(np.ceil(6 * np.log(12 / 0.01) / 0.25))
+
+    def test_median_boosted_interval_contains_truth(self):
+        rng = np.random.default_rng(1)
+        table = (rng.random((400, 5)) < np.array([0.5, 0.6, 0.7, 0.8, 0.9])).astype(float)
+        p_hat, lo, hi = median_boosted_interval(table, delta=0.01)
+        truth = np.array([0.5, 0.6, 0.7, 0.8, 0.9])
+        assert ((lo <= truth) & (truth <= hi)).all()
+
+
+class TestClustering:
+    def test_kmeans_recovers_separated_clusters(self):
+        rng = np.random.default_rng(0)
+        centers = np.array([[0, 0], [10, 0], [0, 10]], float)
+        x = np.concatenate([c + rng.normal(0, 0.3, (50, 2)) for c in centers])
+        assign, cents = kmeans(x, 3, seed=1)
+        # each true block should be a single cluster
+        for blk in range(3):
+            ids = assign[blk * 50 : (blk + 1) * 50]
+            assert (ids == ids[0]).all()
+
+    def test_dbscan_finds_clusters_and_noise(self):
+        rng = np.random.default_rng(2)
+        a = rng.normal(0, 0.1, (40, 2))
+        b = rng.normal(5, 0.1, (40, 2)) + np.array([5, 0])
+        outlier = np.array([[50.0, 50.0]])
+        x = np.concatenate([a, b, outlier])
+        labels = dbscan(x, eps=1.0, min_pts=4)
+        assert labels[-1] == -1
+        assert len(set(labels[:40])) == 1
+        assert len(set(labels[40:80])) == 1
+        assert labels[0] != labels[40]
+
+    def test_auto_eps_positive(self):
+        rng = np.random.default_rng(3)
+        assert auto_eps(rng.normal(0, 1, (100, 4))) > 0
+
+
+class TestEstimator:
+    def test_per_cluster_estimates_close_to_truth(self):
+        wl = OracleWorkload(num_classes=3, num_clusters=4, num_arms=6, seed=7)
+        T, emb, cid = wl.response_table(2000)
+        est = SuccessProbEstimator(T, emb, cid)  # true cluster ids
+        errs = []
+        for c in range(4):
+            errs.append(np.abs(est.clusters[c].p_hat - wl.p_true[c]).mean())
+        assert np.mean(errs) < 0.06
+
+    def test_lookup_maps_to_right_cluster(self):
+        wl = OracleWorkload(num_classes=3, num_clusters=4, num_arms=6, seed=7)
+        T, emb, cid = wl.response_table(800)
+        est = SuccessProbEstimator(T, emb, cid)
+        rng = np.random.default_rng(0)
+        tc, temb, _ = wl.sample_queries(100, rng)
+        got = est.lookup_batch(temb)
+        assert (got == tc).mean() > 0.95
+
+    def test_alpha_interval_override(self):
+        wl = OracleWorkload(num_classes=3, num_clusters=2, num_arms=4, seed=1)
+        T, emb, cid = wl.response_table(300)
+        est = SuccessProbEstimator(T, emb, cid)
+        qc = est.query_class(emb[0], 3, alpha=0.1)
+        assert np.all(qc.hi - qc.lo <= 0.1 + 1e-12)
+
+
+class TestData:
+    def test_pipeline_prefetch_and_shard(self):
+        def make(step):
+            return {"x": np.full((8, 2), step)}
+
+        pipe = DataPipeline(make, shard_fn=host_shard_fn(1, 2), prefetch=2)
+        b = next(pipe)
+        assert b["x"].shape == (4, 2)
+        pipe.close()
+
+    def test_tokenizer_roundtrip(self):
+        s = "hello ThriftLLM"
+        assert decode(encode(s)) == s
+
+    def test_token_task_signature_dominates(self):
+        d = make_token_task(num_classes=4, seq_len=64, vocab=512, n=200, seed=0)
+        toks, labs, sig = d["tokens"], d["labels"], d["class_token_ids"]
+        assert (toks[:, -1] == sig[labs]).all()
+        # true signature occurs strictly more often than any distractor
+        ok = 0
+        for i in range(200):
+            counts = [(toks[i, :-2] == s).sum() for s in sig]
+            ok += int(np.argmax(counts) == labs[i])
+        assert ok / 200 > 0.95
+
+
+class TestOnlineUpdate:
+    def test_streaming_update_converges_to_truth(self):
+        wl = OracleWorkload(num_classes=3, num_clusters=2, num_arms=4, seed=5)
+        T, emb, cid = wl.response_table(60)   # thin history: noisy estimates
+        est = SuccessProbEstimator(T, emb, cid)
+        rng = np.random.default_rng(0)
+        before = np.abs(est.clusters[0].p_hat - wl.p_true[0]).mean()
+        # stream 2000 labeled outcomes for cluster 0
+        for _ in range(20):
+            batch = np.stack([
+                [wl.invoke(a, 0, 1, rng) == 1 for a in range(4)]
+                for _ in range(100)
+            ]).astype(float)
+            est.update(0, batch)
+        after = np.abs(est.clusters[0].p_hat - wl.p_true[0]).mean()
+        assert after < before
+        assert after < 0.05
+        # CI tightened with the extra samples
+        st = est.clusters[0]
+        assert (st.hi - st.lo).mean() < 0.2
+
+    def test_update_is_exact_streaming_mean(self):
+        wl = OracleWorkload(num_classes=2, num_clusters=1, num_arms=3, seed=1)
+        T, emb, cid = wl.response_table(50)
+        est = SuccessProbEstimator(T, emb, cid)
+        extra = (np.random.default_rng(2).random((30, 3)) < 0.5).astype(float)
+        est.update(0, extra)
+        idx = np.flatnonzero(cid == 0)
+        expect = np.concatenate([T[idx], extra]).mean(axis=0)
+        np.testing.assert_allclose(est.clusters[0].p_hat, expect, atol=1e-12)

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.belief import empty_log_belief, log_weight
+from repro.core.mc import sample_pool_responses
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("theta,L,K,C", [(512, 4, 2, 3), (1000, 8, 5, 6), (300, 12, 17, 4)])
+def test_mc_correctness_sweep(theta, L, K, C):
+    rng = np.random.default_rng(theta + L)
+    p = rng.uniform(0.4, 0.95, L).astype(np.float32)
+    resp = sample_pool_responses(jax.random.key(0), jnp.asarray(p), K, theta)
+    masks = (rng.random((C, L)) < 0.6).astype(np.float32)
+    w = jnp.asarray(log_weight(p, K), jnp.float32)
+    empty = jnp.float32(empty_log_belief(p))
+    got = ops.mc_correctness(resp, jnp.asarray(masks), w, empty, K)
+    want = ref.mc_correctness_ref(resp, jnp.asarray(masks), w, empty, K)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("B,M,K", [(16, 4, 3), (37, 8, 5), (130, 12, 77)])
+def test_belief_aggregate_sweep(B, M, K):
+    rng = np.random.default_rng(B + M)
+    responses = rng.integers(-1, K, (B, M)).astype(np.int32)
+    w = rng.uniform(0.3, 3.0, (B, M)).astype(np.float32)
+    empty = jnp.float32(-1.5)
+    gb, gp = ops.belief_aggregate(jnp.asarray(responses), jnp.asarray(w), empty, K)
+    wb, wp = ref.belief_aggregate_ref(jnp.asarray(responses), jnp.asarray(w), empty, K)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(wb), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+
+@pytest.mark.parametrize(
+    "B,S,H,G,hd,window,dtype",
+    [
+        (2, 128, 4, 2, 64, 0, jnp.float32),
+        (1, 256, 8, 8, 32, 0, jnp.float32),
+        (2, 128, 4, 1, 64, 48, jnp.float32),   # MQA + sliding window
+        (1, 128, 4, 2, 64, 0, jnp.bfloat16),
+    ],
+)
+def test_flash_attention_sweep(B, S, H, G, hd, window, dtype):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, G, hd)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, G, hd)), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, window=window, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("B,S,D", [(2, 64, 128), (1, 128, 512), (3, 32, 256)])
+def test_rglru_scan_sweep(B, S, D):
+    rng = np.random.default_rng(B + S + D)
+    la = -np.abs(rng.normal(0, 0.5, (B, S, D))).astype(np.float32)
+    u = rng.normal(0, 1, (B, S, D)).astype(np.float32)
+    h0 = rng.normal(0, 1, (B, D)).astype(np.float32)
+    gh, gl = ops.rglru_scan(la, u, h0)
+    wh, wl = ref.rglru_scan_ref(jnp.asarray(la), jnp.asarray(u), jnp.asarray(h0))
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(wh), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gl), np.asarray(wl), atol=1e-5)
+
+
+def test_flash_blocks_skipped_equals_masked_baseline():
+    """The skip predicate must not change numerics vs the masked baseline."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (1, 256, 2, 1, 64))[:, :, :, 0], jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 256, 2, 64)), jnp.float32)
+    from repro.models.attention import blocked_attention
+
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    want = blocked_attention(q, k, v, causal=True, block_kv=64)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want, np.float32), atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("B,S,Din,N", [(1, 64, 128, 8), (2, 128, 256, 16)])
+def test_mamba_scan_sweep(B, S, Din, N):
+    rng = np.random.default_rng(B + S + Din)
+    x = rng.normal(0, 1, (B, S, Din)).astype(np.float32)
+    dt = np.abs(rng.normal(0, 0.3, (B, S, Din))).astype(np.float32) + 0.01
+    A = -np.abs(rng.normal(1, 0.5, (Din, N))).astype(np.float32)
+    Bm = rng.normal(0, 1, (B, S, N)).astype(np.float32)
+    Cm = rng.normal(0, 1, (B, S, N)).astype(np.float32)
+    Dk = rng.normal(0, 1, (Din,)).astype(np.float32)
+    h0 = rng.normal(0, 1, (B, Din, N)).astype(np.float32)
+    gy, gh = ops.mamba_scan(x, dt, A, Bm, Cm, Dk, h0)
+    wy, wh = ref.mamba_scan_ref(
+        jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A), jnp.asarray(Bm),
+        jnp.asarray(Cm), jnp.asarray(Dk), jnp.asarray(h0),
+    )
+    np.testing.assert_allclose(np.asarray(gy), np.asarray(wy), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(wh), atol=3e-4)

@@ -1,0 +1,130 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    aggregate_log_beliefs,
+    empty_log_belief,
+    gamma,
+    log_weight,
+    predict_from_beliefs,
+    xi_exact,
+)
+
+# NOTE: paper Lemma 1 (monotonicity of xi) implicitly assumes arms are
+# better than random: for p < 1/K the belief weight p(K-1)/(1-p) < 1 (log
+# weight negative) and adding such an arm can DECREASE xi under the paper's
+# aggregator with its empty-class heuristic. Property testing found the
+# counterexample (see test_lemma1_fails_for_worse_than_random_arms); all
+# monotonicity properties below therefore sample better-than-random arms.
+probs = st.lists(st.floats(0.05, 0.98), min_size=1, max_size=5)
+klass = st.integers(2, 6)
+
+
+def _better_than_random(ps, K, margin=0.02):
+    return min(ps) > 1.0 / K + margin
+
+
+@settings(max_examples=60, deadline=None)
+@given(probs, klass)
+def test_gamma_upper_bounds_xi(ps, K):
+    """Lemma 3 — holds for better-than-random arms. (Its Category-II proof
+    step assumes 'all arms wrong => prediction wrong', which anti-evidence
+    arms violate: see test_lemma3_fails_for_worse_than_random_arms.)"""
+    if not _better_than_random(ps, K):
+        return
+    p = np.asarray(ps)
+    assert gamma(p) >= xi_exact(p, K) - 1e-9
+
+
+def test_lemma3_fails_for_worse_than_random_arms():
+    """Documented deviation (found by hypothesis): with K=2 and two p=0.05
+    arms, the ML aggregator flips their anti-evidence votes and achieves
+    xi=0.95 while gamma=0.0975 — the surrogate is NOT an upper bound below
+    the 1/K threshold, so Theorem 3's guarantee needs p_min > 1/K."""
+    p = np.array([0.05, 0.05])
+    assert xi_exact(p, 2) > 0.9
+    assert gamma(p) < 0.1
+
+
+@settings(max_examples=60, deadline=None)
+@given(probs, klass)
+def test_xi_bounded_and_at_least_best_single(ps, K):
+    """xi in [0,1]; for better-than-random arms the ML ensemble never loses
+    to its best single arm."""
+    p = np.asarray(ps)
+    x = xi_exact(p, K)
+    assert -1e-9 <= x <= 1 + 1e-9
+    if _better_than_random(ps, K):
+        assert x >= max(p) - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(probs, klass, st.floats(0.0, 0.05))
+def test_xi_monotone_in_probs(ps, K, bump):
+    if not _better_than_random(ps, K):
+        return
+    p = np.asarray(ps)
+    hi = np.clip(p + bump, 0.0, 0.99)
+    assert xi_exact(hi, K) >= xi_exact(p, K) - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(probs, klass)
+def test_xi_monotone_in_set(ps, K):
+    if not _better_than_random(ps, K):
+        return
+    p = np.asarray(ps)
+    if p.size < 2:
+        return
+    assert xi_exact(p, K, p_all=p) >= xi_exact(p[:-1], K, p_all=p) - 1e-9
+
+
+def test_lemma1_fails_for_worse_than_random_arms():
+    """Documented deviation from paper Lemma 1 (found by hypothesis):
+    adding a worse-than-random arm can strictly decrease xi."""
+    p_all = np.array([0.0625, 0.0625, 0.125])
+    K = 3
+    smaller = xi_exact(p_all[:2], K, p_all=p_all)
+    larger = xi_exact(p_all, K, p_all=p_all)
+    assert larger < smaller  # monotonicity violated below the 1/K threshold
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.integers(0, 4), min_size=1, max_size=8),
+    st.lists(st.floats(0.2, 0.95), min_size=8, max_size=8),
+)
+def test_belief_aggregation_majority_of_identical_weights(resp, ps):
+    """With equal weights, ML aggregation must agree with majority voting."""
+    K = 5
+    m = len(resp)
+    p = np.full(m, 0.7)
+    w = log_weight(p, K)
+    beliefs = aggregate_log_beliefs(np.asarray(resp), w, K, empty_log_belief(p))
+    pred, _ = predict_from_beliefs(beliefs)
+    votes = np.bincount(resp, minlength=K)
+    assert votes[pred] == votes.max()
+
+
+@settings(max_examples=50, deadline=None)
+@given(probs, klass)
+def test_gamma_submodularity_random_chains(ps, K):
+    rng = np.random.default_rng(0)
+    p = np.asarray(ps)
+    if p.size < 3:
+        return
+    l = p.size - 1
+    s1 = p[:1]
+    s2 = p[:-1]
+    g1 = gamma(np.append(s1, p[l])) - gamma(s1)
+    g2 = gamma(np.append(s2, p[l])) - gamma(s2)
+    assert g1 >= g2 - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 30), klass)
+def test_empty_belief_below_any_arm_weight(m, K):
+    """The empty-class heuristic never outranks a voted class with p>1/2."""
+    p = np.full(m, 0.6)
+    assert empty_log_belief(p) < log_weight(p, K).min()

@@ -1,0 +1,102 @@
+"""Roofline accounting: HLO collective parser + analytic FLOP counter
+validated against XLA cost_analysis on small *unrolled* configs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    analytic_flops,
+    hlo_collective_bytes,
+    model_flops,
+    parse_hlo,
+    roofline_terms,
+    _shape_bytes,
+)
+from repro.models import LM, ModelConfig, ShapeConfig
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[4], s32[2])") == 24
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_while_trip_count_scaling():
+    """Collectives inside a lax.scan must be multiplied by the trip count."""
+
+    def f10(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h.sum()
+
+    def f20(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+
+        h, _ = jax.lax.scan(body, x, None, length=20)
+        return h.sum()
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 host device")
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    xs = NamedSharding(mesh, P(None, "model"))
+    ws = NamedSharding(mesh, P("model", None))
+    x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    t10 = jax.jit(f10, in_shardings=(xs, ws)).lower(x, w).compile().as_text()
+    t20 = jax.jit(f20, in_shardings=(xs, ws)).lower(x, w).compile().as_text()
+    c10 = hlo_collective_bytes(t10)
+    c20 = hlo_collective_bytes(t20)
+    assert c10["unscoped_while"] == 0
+    assert c20["all-reduce"] == pytest.approx(2 * c10["all-reduce"], rel=0.1)
+
+
+def _tiny_cfg(**kw):
+    base = dict(
+        name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32", remat=False,
+        tie_embeddings=True,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_analytic_flops_matches_xla_on_unrolled_model():
+    """Validate the analytic counter against XLA's own FLOP count for a
+    config small enough to inspect (forward pass, no scan undercounting:
+    cost_analysis counts each scan body once, so compare per-layer)."""
+    cfg = _tiny_cfg(num_layers=1)
+    model = LM(cfg)
+    shape = ShapeConfig("t", seq_len=128, global_batch=4, kind="prefill")
+
+    def fwd(params, tokens):
+        return model.forward(params, tokens)
+
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    tok = jax.ShapeDtypeStruct((4, 128), jnp.int32)
+    comp = jax.jit(fwd).lower(params, tok).compile()
+    xla_fl = float(comp.cost_analysis()["flops"])
+    ours = analytic_flops(cfg, shape)["fwd"]
+    # XLA counts only matmul/conv flops by default; ours adds elementwise.
+    assert ours == pytest.approx(xla_fl, rel=0.35), (ours, xla_fl)
+
+
+def test_model_flops_train_is_6nd():
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("t", seq_len=64, global_batch=2, kind="train")
+    assert model_flops(cfg, shape) == 6.0 * cfg.active_param_count() * 128
+
+
+def test_roofline_terms_bottleneck():
+    hw = {"peak_flops": 100.0, "hbm_bw": 10.0, "ici_bw": 1.0}
+    t = roofline_terms(flops=1000.0, hbm_bytes=10.0, collective_bytes=0.1, chips=1, hw=hw)
+    assert t["bottleneck"] == "compute_s"
+    assert t["compute_s"] == pytest.approx(10.0)
+    t2 = roofline_terms(flops=1.0, hbm_bytes=1000.0, collective_bytes=0.0, chips=1, hw=hw)
+    assert t2["bottleneck"] == "memory_s"
