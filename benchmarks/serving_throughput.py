@@ -1,0 +1,200 @@
+"""Serving throughput: batched wavefront engine vs the seed router.
+
+Sweeps batch sizes on an oracle pool and reports queries/sec plus realized-
+vs-planned cost for the vectorized ``ThriftRouter.route_batch``, against a
+faithful reproduction of the seed implementation (per-query Python belief
+updates in the wave loop AND a per-query Python loop inside the oracle arm).
+Writes ``BENCH_serving.json`` so later PRs have a perf trajectory.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_throughput [--out BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.belief import empty_log_belief, log_weight
+from repro.core.clustering import kmeans
+from repro.core.estimation import SuccessProbEstimator
+from repro.core.types import clip_probs
+from repro.data import OracleWorkload
+from repro.serving import OracleArm, PoolEngine, ThriftRouter
+
+BATCH_SIZES = [32, 64, 128, 256, 512, 1024]
+
+
+@dataclasses.dataclass
+class _SeedOracleArm:
+    """Seed-commit oracle arm: one workload.invoke per query (Python loop)."""
+
+    name: str
+    workload: OracleWorkload
+    arm_index: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self.cost = float(self.workload.costs[self.arm_index])
+        self._rng = np.random.default_rng(self.seed + 7919 * self.arm_index)
+
+    def classify_batch(self, queries) -> np.ndarray:
+        out = np.empty(len(queries), np.int64)
+        for i, (cid, label) in enumerate(queries):
+            out[i] = self.workload.invoke(self.arm_index, cid, label, self._rng)
+        return out
+
+    def latency_s(self, batch: int) -> float:
+        return 0.0
+
+
+def _seed_lookup_batch(est: SuccessProbEstimator, embeddings: np.ndarray) -> np.ndarray:
+    """Seed-commit lookup_batch: full (B, C, d) difference tensor."""
+    d = ((embeddings[:, None, :] - est._centroids[None, :, :]) ** 2).sum(-1)
+    return est._cids[np.argmin(d, axis=1)]
+
+
+def seed_route_batch(router: ThriftRouter, engine: PoolEngine, queries, embeddings, budget):
+    """The seed ``ThriftRouter.route_batch``, verbatim modulo imports: per-
+    cluster groups routed serially, per-query Python loops updating beliefs."""
+    B = len(queries)
+    K = router.num_classes
+    cluster_ids = _seed_lookup_batch(router.estimator, embeddings)
+
+    predictions = np.zeros(B, np.int64)
+    costs = np.zeros(B, np.float64)
+    planned = np.zeros(B, np.float64)
+    arms_used: List[List[int]] = [[] for _ in range(B)]
+
+    for cid in np.unique(cluster_ids):
+        q_idx = np.flatnonzero(cluster_ids == cid)
+        stats = router.estimator.clusters[int(cid)]
+        p = stats.p_hat
+        sel = router.selector.select(p, K, budget)
+        order = sorted(sel.chosen, key=lambda i: -p[i])
+        w = log_weight(clip_probs(p), K)
+        empty = empty_log_belief(p)
+
+        nb = q_idx.size
+        beliefs = np.full((nb, K), empty, np.float64)
+        counts = np.zeros((nb, K), np.int64)
+        active = np.ones(nb, bool)
+        planned[q_idx] = float(engine.costs[order].sum()) if order else 0.0
+
+        for wave, arm in enumerate(order):
+            log_f = float(np.sum(w[order[wave:]]))
+            srt = np.sort(beliefs, axis=1)
+            h1, h2 = srt[:, -1], srt[:, -2]
+            still = active & (log_f + h2 > h1 - 1e-9)
+            if not still.any():
+                break
+            full_active = np.zeros(B, bool)
+            full_active[q_idx[still]] = True
+            resp = engine.invoke_arm(arm, queries, full_active)[q_idx]
+            hit = np.flatnonzero(still)
+            for j in hit:
+                r = int(resp[j])
+                if counts[j, r] == 0:
+                    beliefs[j, r] = w[arm]
+                else:
+                    beliefs[j, r] += w[arm]
+                counts[j, r] += 1
+                costs[q_idx[j]] += engine.costs[arm]
+                arms_used[q_idx[j]].append(arm)
+            active = still
+
+        predictions[q_idx] = np.argmax(beliefs, axis=1)
+    return predictions, costs, planned
+
+
+def _time(fn, repeats: int) -> float:
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(args) -> dict:
+    wl = OracleWorkload(
+        num_classes=args.classes, num_clusters=args.clusters, num_arms=args.arms, seed=3
+    )
+    T, emb, _ = wl.response_table(args.history)
+    assign, _ = kmeans(emb, args.clusters, seed=0)
+    est = SuccessProbEstimator(T, emb, assign)
+
+    engine = PoolEngine([OracleArm(f"a{i}", wl, i, seed=11) for i in range(args.arms)])
+    seed_engine = PoolEngine(
+        [_SeedOracleArm(f"s{i}", wl, i, seed=11) for i in range(args.arms)]
+    )
+    router = ThriftRouter(engine, est, num_classes=args.classes)
+    budget = float(np.quantile(engine.costs, 0.7)) * 2
+
+    rows = []
+    rng = np.random.default_rng(17)
+    for B in BATCH_SIZES:
+        cid, qemb, lab = wl.sample_queries(B, rng)
+        queries = list(zip(cid, lab))
+        # warm-up: populates the per-(cluster, budget) selection cache for both
+        res = router.route_batch(queries, qemb, budget)
+        seed_route_batch(router, seed_engine, queries, qemb, budget)
+
+        t_new = _time(lambda: router.route_batch(queries, qemb, budget), args.repeats)
+        t_seed = _time(
+            lambda: seed_route_batch(router, seed_engine, queries, qemb, budget),
+            max(1, args.repeats // 2),
+        )
+        res = router.route_batch(queries, qemb, budget)
+        row = {
+            "batch": B,
+            "qps": B / t_new,
+            "seed_qps": B / t_seed,
+            "speedup": t_seed / t_new,
+            "waves": int(res.waves),
+            "mean_realized_cost": float(res.costs.mean()),
+            "mean_planned_cost": float(res.planned_costs.mean()),
+            "realized_over_planned": float(res.costs.sum() / res.planned_costs.sum()),
+            "accuracy": float((res.predictions == lab).mean()),
+        }
+        rows.append(row)
+        print(
+            f"batch {B:5d}: {row['qps']:9.0f} qps (seed {row['seed_qps']:8.0f}, "
+            f"{row['speedup']:4.1f}x) | realized/planned cost "
+            f"{row['realized_over_planned']:.3f} | acc {row['accuracy']:.3f}"
+        )
+
+    report = {
+        "bench": "serving_throughput",
+        "pool": {
+            "arms": args.arms,
+            "classes": args.classes,
+            "clusters": args.clusters,
+            "budget": budget,
+        },
+        "rows": rows,
+        "speedup_at_256": next(r["speedup"] for r in rows if r["batch"] == 256),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out} (speedup@256 = {report['speedup_at_256']:.1f}x)")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arms", type=int, default=12)
+    ap.add_argument("--classes", type=int, default=4)
+    ap.add_argument("--clusters", type=int, default=6)
+    ap.add_argument("--history", type=int, default=2000)
+    ap.add_argument("--repeats", type=int, default=9)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

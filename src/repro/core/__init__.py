@@ -7,6 +7,7 @@ from .belief import (
     log_weight,
     predict_batch,
     predict_from_beliefs,
+    tie_break_argmax,
     top2_beliefs,
 )
 from .cascade import FrugalCascade, blender_all, random_subset, single_best, topk_weighted
@@ -27,7 +28,8 @@ from .types import Arm, InvocationResult, QueryClass, SelectionResult, clip_prob
 __all__ = [
     "Arm", "QueryClass", "SelectionResult", "InvocationResult", "clip_probs",
     "log_weight", "empty_log_belief", "aggregate_log_beliefs", "aggregate_predict",
-    "aggregate_log_beliefs_batch", "predict_batch", "predict_from_beliefs", "top2_beliefs",
+    "aggregate_log_beliefs_batch", "predict_batch", "predict_from_beliefs",
+    "tie_break_argmax", "top2_beliefs",
     "gamma", "gamma_marginal", "xi_exact", "xi_exact_feasible", "xi_pair",
     "McXiEstimator", "sample_pool_responses", "theta_for", "xi_from_responses",
     "greedy", "gamma_value_batch", "sur_greedy", "adaptive_invoke", "ThriftLLM",

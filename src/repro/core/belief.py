@@ -72,15 +72,42 @@ def aggregate_log_beliefs(
     return beliefs
 
 
+def tie_break_argmax(
+    beliefs: np.ndarray, rng: Optional[np.random.Generator] = None, tol: float = 1e-9
+) -> Tuple[np.ndarray, np.ndarray]:
+    """argmax over the last axis with uniform tie-breaking within ``tol``.
+
+    The single tie-break rule shared by the per-query path
+    (:func:`repro.core.selection.adaptive_invoke`) and the batched serving
+    router, so both finalize identically. Accepts (K,) or (B, K) beliefs and
+    returns (predictions, n_ties) of matching leading shape.
+
+    With ``rng=None`` the break is deterministic first-max (plain argmax);
+    with an rng, a tied class is drawn uniformly. The rng is only consumed
+    when at least one row actually has a tie, so tie-free batches stay
+    bitwise reproducible across both paths.
+    """
+    b = np.atleast_2d(np.asarray(beliefs, np.float64))
+    mx = b.max(axis=-1, keepdims=True)
+    ties = b >= mx - tol
+    n_ties = ties.sum(axis=-1)
+    if rng is None or not np.any(n_ties > 1):
+        pred = np.argmax(b, axis=-1)
+    else:
+        pred = np.argmax(np.where(ties, rng.random(b.shape), -1.0), axis=-1)
+    pred = pred.astype(np.int64)
+    if np.asarray(beliefs).ndim == 1:
+        return pred[0], n_ties[0]
+    return pred, n_ties
+
+
 def predict_from_beliefs(
     beliefs: np.ndarray, rng: Optional[np.random.Generator] = None, tol: float = 1e-9
 ) -> Tuple[int, int]:
-    """argmax with random tie-break; returns (class, n_ties)."""
-    mx = float(np.max(beliefs))
-    ties = np.flatnonzero(beliefs >= mx - tol)
-    if len(ties) == 1 or rng is None:
-        return int(ties[0]), len(ties)
-    return int(rng.choice(ties)), len(ties)
+    """argmax with random tie-break for one (K,) belief vector;
+    returns (class, n_ties). Delegates to :func:`tie_break_argmax`."""
+    pred, n_ties = tie_break_argmax(np.asarray(beliefs, np.float64), rng, tol)
+    return int(pred), int(n_ties)
 
 
 def aggregate_predict(

@@ -157,16 +157,18 @@ class SuccessProbEstimator:
             )
         self._centroids = np.stack([c.centroid for c in self.clusters.values()])
         self._cids = np.asarray(list(self.clusters.keys()))
+        self._centroid_sq = (self._centroids ** 2).sum(axis=1)
 
     def lookup(self, embedding: np.ndarray) -> ClusterStats:
         """Nearest-centroid mapping of a test query to a historical cluster
-        (the paper's semantic-similarity mapping, App. B)."""
-        d = np.linalg.norm(self._centroids - embedding[None, :], axis=1)
-        return self.clusters[int(self._cids[int(np.argmin(d))])]
+        (the paper's semantic-similarity mapping, App. B). Delegates to
+        :meth:`lookup_batch` so single and batched lookups always agree."""
+        return self.clusters[int(self.lookup_batch(embedding[None, :])[0])]
 
     def lookup_batch(self, embeddings: np.ndarray) -> np.ndarray:
-        """(B, d) -> (B,) cluster ids."""
-        d = ((embeddings[:, None, :] - self._centroids[None, :, :]) ** 2).sum(-1)
+        """(B, d) -> (B,) cluster ids (matmul distance, no (B, C, d) temp)."""
+        e = np.asarray(embeddings, np.float64)
+        d = self._centroid_sq[None, :] - 2.0 * (e @ self._centroids.T)
         return self._cids[np.argmin(d, axis=1)]
 
     def update(

@@ -17,6 +17,7 @@ from .belief import (
     aggregate_log_beliefs,
     empty_log_belief,
     log_weight,
+    predict_from_beliefs,
     top2_beliefs,
 )
 from .correctness import gamma
@@ -188,11 +189,7 @@ def adaptive_invoke(
             beliefs[r] += w[arm]
         counts[r] += 1
 
-    h1, _, pred = top2_beliefs(beliefs)
-    if rng is not None:
-        ties = np.flatnonzero(beliefs >= h1 - 1e-9)
-        if ties.size > 1:
-            pred = int(rng.choice(ties))
+    pred, _ = predict_from_beliefs(beliefs, rng)
     cost_vec = np.asarray(costs, np.float64) if costs is not None else np.zeros(p.size)
     return InvocationResult(
         prediction=int(pred),

@@ -66,6 +66,41 @@ class OracleWorkload:
         wrong = rng.integers(self.num_classes - 1)
         return int((label + 1 + wrong) % self.num_classes)
 
+    def invoke_batch(
+        self,
+        arm: int,
+        clusters: np.ndarray,
+        labels: np.ndarray,
+        rng: np.random.Generator,
+    ) -> np.ndarray:
+        """Vectorized :meth:`invoke` over (n,) clusters/labels — same error
+        model, one rng draw per query instead of a Python loop (the serving
+        throughput path; draw order differs from the scalar loop)."""
+        return self.invoke_assigned(
+            np.full(np.asarray(clusters).shape, arm, np.int64), clusters, labels, rng
+        )
+
+    def invoke_assigned(
+        self,
+        arms: np.ndarray,
+        clusters: np.ndarray,
+        labels: np.ndarray,
+        rng: np.random.Generator,
+    ) -> np.ndarray:
+        """Heterogeneous-arm vectorized invocation: query i is served by
+        ``arms[i]``. One rng draw per query regardless of how many distinct
+        arms appear — the serving wavefront's one-call-per-wave fast path."""
+        arms = np.asarray(arms, np.int64)
+        clusters = np.asarray(clusters, np.int64)
+        labels = np.asarray(labels, np.int64)
+        p = self.p_true[clusters, arms]
+        u = rng.random((2, clusters.size))       # one draw for hit + wrong-class
+        hit = u[0] < p
+        wrong = np.minimum(
+            (u[1] * (self.num_classes - 1)).astype(np.int64), self.num_classes - 2
+        )
+        return np.where(hit, labels, (labels + 1 + wrong) % self.num_classes)
+
     def response_table(
         self, n: int, seed: int = 1
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

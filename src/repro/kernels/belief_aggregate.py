@@ -32,7 +32,7 @@ def _kernel(resp_ref, w_ref, empty_ref, bel_ref, pred_ref, *, num_classes):
                          preferred_element_type=jnp.float32)
     counts = jnp.einsum("bm,bmk->bk", valid, onehot,
                         preferred_element_type=jnp.float32)
-    empty = empty_ref[0, 0]
+    empty = empty_ref[...]                                  # (Bt, 1) per-row
     beliefs = jnp.where(counts > 0, beliefs, empty)
     bel_ref[...] = beliefs
     pred_ref[...] = jnp.argmax(beliefs, axis=-1).astype(jnp.int32)[:, None]
@@ -42,7 +42,7 @@ def _kernel(resp_ref, w_ref, empty_ref, bel_ref, pred_ref, *, num_classes):
 def belief_aggregate_pallas(
     responses: jnp.ndarray,    # (B, M) int32, -1 = not invoked
     log_weights: jnp.ndarray,  # (B, M) or (M,) float32
-    empty_belief: jnp.ndarray, # scalar
+    empty_belief: jnp.ndarray, # scalar or (B,) per-row empty-class belief
     num_classes: int,
     tile: int = 128,
     interpret: bool = True,
@@ -52,6 +52,9 @@ def belief_aggregate_pallas(
     w = jnp.asarray(log_weights, jnp.float32)
     if w.ndim == 1:
         w = jnp.broadcast_to(w[None, :], (B, M))
+    empty = jnp.asarray(empty_belief, jnp.float32)
+    if empty.ndim == 0:
+        empty = jnp.broadcast_to(empty, (B,))
     tile = min(tile, B)
     n = (B + tile - 1) // tile
     pad = n * tile - B
@@ -60,7 +63,8 @@ def belief_aggregate_pallas(
             [responses, jnp.full((pad, M), -1, jnp.int32)], axis=0
         )
         w = jnp.concatenate([w, jnp.zeros((pad, M), jnp.float32)], axis=0)
-    empty = jnp.asarray(empty_belief, jnp.float32).reshape(1, 1)
+        empty = jnp.concatenate([empty, jnp.zeros(pad, jnp.float32)])
+    empty = empty[:, None]
 
     beliefs, preds = pl.pallas_call(
         functools.partial(_kernel, num_classes=num_classes),
@@ -68,7 +72,7 @@ def belief_aggregate_pallas(
         in_specs=[
             pl.BlockSpec((tile, M), lambda i: (i, 0)),
             pl.BlockSpec((tile, M), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((tile, num_classes), lambda i: (i, 0)),

@@ -17,9 +17,10 @@ def mc_correctness_ref(responses, masks, log_weights, empty_belief, num_classes)
 
 
 def belief_aggregate_ref(responses, log_weights, empty_belief, num_classes):
-    """Returns (log_beliefs (B, K), predictions (B,))."""
+    """Returns (log_beliefs (B, K), predictions (B,)); ``empty_belief`` may
+    be a scalar or a (B,) per-row vector."""
     beliefs = aggregate_log_beliefs_batch(
-        responses, log_weights, num_classes, jnp.float32(empty_belief)
+        responses, log_weights, num_classes, jnp.asarray(empty_belief, jnp.float32)
     )
     return beliefs, jnp.argmax(beliefs, axis=-1).astype(jnp.int32)
 

@@ -67,11 +67,10 @@ class OracleArm:
         self._rng = np.random.default_rng(self.seed + 7919 * self.arm_index)
 
     def classify_batch(self, queries: Sequence) -> np.ndarray:
-        """queries: sequence of (cluster_id, label)."""
-        out = np.empty(len(queries), np.int64)
-        for i, (cid, label) in enumerate(queries):
-            out[i] = self.workload.invoke(self.arm_index, cid, label, self._rng)
-        return out
+        """queries: sequence of (cluster_id, label) — fully vectorized so
+        oracle-pool throughput benchmarks measure the router, not the oracle."""
+        q = np.asarray(queries, np.int64).reshape(-1, 2)
+        return self.workload.invoke_batch(self.arm_index, q[:, 0], q[:, 1], self._rng)
 
     def latency_s(self, batch: int) -> float:
         return 1e-4 * self.cost / max(self.workload.costs.min(), 1e-12) * batch
@@ -79,13 +78,45 @@ class OracleArm:
 
 @dataclasses.dataclass
 class PoolEngine:
-    """Holds the arm pool; executes per-arm batched calls with accounting."""
+    """Holds the arm pool; executes per-arm batched calls with accounting.
+
+    When every arm is an :class:`OracleArm` over one shared workload, the
+    engine exposes a pooled fast path: a wave of heterogeneous arm
+    assignments is answered by a single vectorized ``invoke_assigned`` call
+    (one rng draw per query) instead of one ``classify_batch`` per distinct
+    arm. Mixed or model-backed pools fall back to grouped per-arm calls.
+    """
 
     arms: List[Any]
+
+    def __post_init__(self):
+        self._workload = None
+        if self.arms and all(isinstance(a, OracleArm) for a in self.arms):
+            workloads = {id(a.workload) for a in self.arms}
+            if len(workloads) == 1:
+                self._workload = self.arms[0].workload
+                self._workload_arm = np.asarray(
+                    [a.arm_index for a in self.arms], np.int64
+                )
+                self._pool_rng = np.random.default_rng(
+                    self.arms[0].seed + 104729
+                )
 
     @property
     def costs(self) -> np.ndarray:
         return np.asarray([a.cost for a in self.arms], np.float64)
+
+    def prepare_payloads(self, queries) -> Any:
+        """One-time per-batch payload conversion for fast row gathering."""
+        if self._workload is not None:
+            return np.asarray(queries, np.int64)    # (B, 2) (cluster, label)
+        if isinstance(queries, np.ndarray):
+            return queries
+        try:
+            arr = np.asarray(queries)
+        except Exception:
+            return queries
+        return queries if arr.dtype == object else arr
 
     def invoke_arm(self, arm_idx: int, queries, active: np.ndarray) -> np.ndarray:
         """Run one arm on the active subset; inactive slots return -1."""
@@ -98,4 +129,34 @@ class PoolEngine:
         else:
             sub = [queries[i] for i in idx]
         out[idx] = self.arms[arm_idx].classify_batch(sub)
+        return out
+
+    def invoke_rows(
+        self, arm_ids: np.ndarray, queries, rows: np.ndarray
+    ) -> np.ndarray:
+        """One wavefront step: query ``rows[i]`` is served by ``arm_ids[i]``.
+
+        Returns (n,) class ids aligned with ``rows``. ``queries`` should be
+        the output of :meth:`prepare_payloads`.
+        """
+        arm_ids = np.asarray(arm_ids, np.int64)
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return np.zeros(0, np.int64)
+        if self._workload is not None:
+            if not isinstance(queries, np.ndarray):
+                queries = np.asarray(queries, np.int64)
+            q = queries[rows]
+            return self._workload.invoke_assigned(
+                self._workload_arm[arm_ids], q[:, 0], q[:, 1], self._pool_rng
+            )
+        out = np.empty(rows.size, np.int64)
+        for a in np.unique(arm_ids):
+            m = arm_ids == a
+            sel = rows[m]
+            if isinstance(queries, np.ndarray):
+                sub = queries[sel]
+            else:
+                sub = [queries[i] for i in sel]
+            out[m] = self.arms[int(a)].classify_batch(sub)
         return out

@@ -1,37 +1,97 @@
-"""ThriftLLM router: per-query-class selection + wavefront adaptive invocation.
+"""ThriftLLM router: per-query-class selection + batched wavefront invocation.
 
 Serving pipeline per batch (Figure 1 of the paper, batched for TPU):
   1. embed queries, map to historical clusters -> p-hat vector per query
   2. group queries by (cluster, budget); SurGreedyLLM selection per group
-     (cached — selection depends only on the p-vector, K and budget)
-  3. *wavefront* adaptive invocation: arms of the selected set are invoked
-     in decreasing-p order; before each wave, every query's early-stop
-     condition F(T*)·H2 <= H1 (Prop. 4) is evaluated and stopped queries
-     drop out of the wave — batch-efficient on accelerators while returning
-     exactly the predictions of the full ensemble at reduced cost.
-  4. belief aggregation (the belief_aggregate kernel on TPU).
+     (cached — selection depends only on the p-vector, K and budget), and the
+     derived wave plan (arm order, log-weights, Prop. 4 residuals) is cached
+     per (p-vector, budget) too
+  3. *wavefront* adaptive invocation across the WHOLE batch: every group's
+     selected arms are laid out as a per-query wave schedule (arm invoked at
+     wave t), heterogeneous (cluster, budget) groups advance through one
+     shared wave loop, and before each wave every in-flight query's
+     early-stop condition F(T*)·H2 <= H1 (Prop. 4) is evaluated as one array
+     op. The wavefront *compacts*: stopped queries are dropped from the
+     index set, so wave t only touches the queries still in flight, and each
+     wave issues one heterogeneous-arm engine call
+     (:meth:`PoolEngine.invoke_rows`). No per-query Python work happens in
+     the loop: belief state is a (B, K) log-belief table updated by
+     scatter-adds, so the engine returns exactly the predictions of
+     per-query ``adaptive_invoke`` at batch throughput.
+  4. belief aggregation: float64 numpy scatter tables by default, or the
+     ``belief_aggregate`` Pallas kernel (``use_kernel=True``) which
+     recomputes the in-flight rows' beliefs from the response history each
+     wave — identical masking semantics, float32 accumulation on TPU.
+     Caveat: the kernel backend evaluates the Prop. 4 stop rule on float32
+     beliefs, so a query whose margin lands within float32 resolution
+     (~1e-7) of the STOP_MARGIN boundary may take one wave more or fewer
+     than the float64 path; everywhere else the two backends are identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.belief import empty_log_belief, log_weight
+from repro.core.belief import empty_log_belief, log_weight, tie_break_argmax
 from repro.core.estimation import SuccessProbEstimator
-from repro.core.selection import ThriftLLM
+from repro.core.selection import STOP_MARGIN, ThriftLLM, adaptive_invoke
+from repro.core.types import clip_probs
 
 from .engine import PoolEngine
 
 
-@dataclasses.dataclass
 class RouteResult:
-    predictions: np.ndarray          # (B,)
-    costs: np.ndarray                # (B,) realized USD
-    planned_costs: np.ndarray        # (B,) full-ensemble USD
-    arms_used: List[List[int]]       # per query
-    clusters: np.ndarray             # (B,)
+    """Batched routing output. ``arms_used`` is derived lazily from the
+    (schedule, invoked) matrices so the hot path never builds Python lists."""
+
+    def __init__(
+        self,
+        predictions: np.ndarray,         # (B,)
+        costs: np.ndarray,               # (B,) realized USD
+        planned_costs: np.ndarray,       # (B,) full-ensemble USD
+        clusters: np.ndarray,            # (B,)
+        budgets: np.ndarray,             # (B,) per-query budget applied
+        schedule: np.ndarray,            # (B, T) arm id per wave, -1 = none
+        responses: np.ndarray,           # (B, T) class id per wave, -1 = not run
+        invoked: np.ndarray,             # (B, T) bool, wave actually ran
+        arm_query_counts: np.ndarray,    # (L,) queries served per arm
+        waves: int,
+    ):
+        self.predictions = predictions
+        self.costs = costs
+        self.planned_costs = planned_costs
+        self.clusters = clusters
+        self.budgets = budgets
+        self.schedule = schedule
+        self.responses = responses
+        self.invoked = invoked
+        self.arm_query_counts = arm_query_counts
+        self.waves = waves
+        self._arms_used: Optional[List[List[int]]] = None
+
+    @property
+    def arms_used(self) -> List[List[int]]:
+        """Per query, arms actually invoked in invocation order."""
+        if self._arms_used is None:
+            self._arms_used = [
+                self.schedule[b, self.invoked[b]].tolist()
+                for b in range(self.schedule.shape[0])
+            ]
+        return self._arms_used
+
+
+@dataclasses.dataclass
+class _GroupPlan:
+    """Wave plan of one (cluster p-vector, budget) group."""
+
+    order: np.ndarray        # (n,) arm ids in decreasing-p invocation order
+    weights: np.ndarray      # (n,) log belief weight per wave
+    residual: np.ndarray     # (n,) log F of arms t..n-1 (Prop. 4)
+    wave_costs: np.ndarray   # (n,) USD of order[t]
+    empty: float             # empty-class log belief
+    planned: float           # full selected-set cost
 
 
 class ThriftRouter:
@@ -43,73 +103,277 @@ class ThriftRouter:
         eps: float = 0.1,
         delta: float = 0.01,
         seed: int = 0,
+        use_kernel: bool = False,
     ):
         self.engine = engine
         self.estimator = estimator
         self.num_classes = int(num_classes)
-        self.selector = ThriftLLM(engine.costs, eps=eps, delta=delta, seed=seed)
+        self.use_kernel = bool(use_kernel)
+        self.selector = ThriftLLM(
+            engine.costs, eps=eps, delta=delta, seed=seed, use_kernel=use_kernel
+        )
+        self._plan_cache: Dict[Tuple[bytes, float], _GroupPlan] = {}
+
+    # ------------------------------------------------------------------
+    # Planning: (cluster, budget) groups -> one cross-group wave schedule
+    # ------------------------------------------------------------------
+    def _group_plan(self, cid: int, budget: float) -> _GroupPlan:
+        p = self.estimator.clusters[cid].p_hat
+        key = (p.tobytes(), budget)
+        plan = self._plan_cache.get(key)
+        if plan is not None:
+            return plan
+        K = self.num_classes
+        pc = clip_probs(p)
+        sel = self.selector.select(p, K, budget)
+        # identical ordering to adaptive_invoke: stable sort on clipped p
+        order = np.asarray(sorted(list(sel.chosen), key=lambda i: -pc[i]), np.int64)
+        w_order = log_weight(pc, K)[order]
+        # residual log F exactly as the sequential loop sums it each round
+        residual = np.asarray(
+            [np.sum(w_order[t:]) for t in range(order.size)], np.float64
+        )
+        plan = _GroupPlan(
+            order=order,
+            weights=w_order,
+            residual=residual,
+            wave_costs=self.engine.costs[order],
+            empty=empty_log_belief(pc),
+            planned=float(self.engine.costs[order].sum()) if order.size else 0.0,
+        )
+        self._plan_cache[key] = plan
+        return plan
+
+    def _batch_plan(self, cluster_ids: np.ndarray, budgets: np.ndarray):
+        """Merge per-group plans into batch-wide (B, T) wave matrices.
+
+        Groups are the unique (cluster, budget) pairs; the per-group plan
+        rows are stacked once into (G, T) tables and expanded to the batch
+        by a single gather on the group-inverse index."""
+        if budgets[0] == budgets[-1] and (budgets == budgets[0]).all():
+            c_vals, inverse = np.unique(cluster_ids, return_inverse=True)
+            group_keys = [(int(c), float(budgets[0])) for c in c_vals]
+        else:
+            b_vals, b_inv = np.unique(budgets, return_inverse=True)
+            c_vals, c_inv = np.unique(cluster_ids, return_inverse=True)
+            combo_vals, inverse = np.unique(
+                c_inv * b_vals.size + b_inv, return_inverse=True
+            )
+            group_keys = [
+                (int(c_vals[v // b_vals.size]), float(b_vals[v % b_vals.size]))
+                for v in combo_vals
+            ]
+        plans = [self._group_plan(c, b) for c, b in group_keys]
+        G = len(plans)
+        T = max(1, max(p.order.size for p in plans))
+        order_m = np.full((G, T), -1, np.int64)
+        w_m = np.zeros((G, T), np.float64)
+        res_m = np.full((G, T), -np.inf, np.float64)
+        wc_m = np.zeros((G, T), np.float64)
+        empty_v = np.empty(G, np.float64)
+        planned_v = np.empty(G, np.float64)
+        for g, plan in enumerate(plans):
+            n = plan.order.size
+            order_m[g, :n] = plan.order
+            w_m[g, :n] = plan.weights
+            res_m[g, :n] = plan.residual
+            wc_m[g, :n] = plan.wave_costs
+            empty_v[g] = plan.empty
+            planned_v[g] = plan.planned
+        return (
+            order_m[inverse],
+            w_m[inverse],
+            res_m[inverse],
+            wc_m[inverse],
+            empty_v[inverse],
+            planned_v[inverse],
+        )
+
+    # ------------------------------------------------------------------
+    # Belief backend: float64 scatter tables or the Pallas kernel
+    # ------------------------------------------------------------------
+    def _kernel_beliefs(
+        self, responses: np.ndarray, weights: np.ndarray, empty: np.ndarray
+    ) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        bel, _ = ops.belief_aggregate(
+            jnp.asarray(responses, jnp.int32),
+            jnp.asarray(weights, jnp.float32),
+            jnp.asarray(empty, jnp.float32),
+            self.num_classes,
+        )
+        return np.asarray(bel, np.float64)
 
     # ------------------------------------------------------------------
     def route_batch(
         self,
         queries: Any,                    # arm-payloads, len B (array or list)
         embeddings: np.ndarray,          # (B, d)
-        budget: float,
-        stop_margin: float = 1e-9,
+        budget: Any,                     # scalar or (B,) per-query budgets
+        stop_margin: float = STOP_MARGIN,
+        rng: Optional[np.random.Generator] = None,
     ) -> RouteResult:
         B = len(queries)
         K = self.num_classes
+        budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
+        if B == 0:
+            return RouteResult(
+                predictions=np.zeros(0, np.int64),
+                costs=np.zeros(0, np.float64),
+                planned_costs=np.zeros(0, np.float64),
+                clusters=np.zeros(0, np.int64),
+                budgets=np.asarray(budgets),
+                schedule=np.full((0, 1), -1, np.int64),
+                responses=np.full((0, 1), -1, np.int64),
+                invoked=np.zeros((0, 1), bool),
+                arm_query_counts=np.zeros(len(self.engine.arms), np.int64),
+                waves=0,
+            )
         cluster_ids = self.estimator.lookup_batch(embeddings)
+        schedule, weights, residual, wave_costs, empty, planned = self._batch_plan(
+            cluster_ids, budgets
+        )
+        T = schedule.shape[1]
+        L = len(self.engine.arms)
+        payloads = self.engine.prepare_payloads(queries)
 
-        predictions = np.zeros(B, np.int64)
+        # wave-major layouts: contiguous (B,) row per wave in the hot loop
+        sched_T = np.ascontiguousarray(schedule.T)
+        w_T = np.ascontiguousarray(weights.T)
+        res_T = np.ascontiguousarray(residual.T)
+        wc_T = np.ascontiguousarray(wave_costs.T)
+        resp_T = np.full((T, B), -1, np.int64)
+
+        vote = np.zeros((B, K), np.float64)      # scatter-add log-weight table
+        voted = np.zeros((B, K), bool)           # any vote -> real belief
         costs = np.zeros(B, np.float64)
-        planned = np.zeros(B, np.float64)
-        arms_used: List[List[int]] = [[] for _ in range(B)]
+        arm_query_counts = np.zeros(L, np.int64)
+        cur = np.arange(B)                       # queries still in flight
+        waves = 0
 
-        for cid in np.unique(cluster_ids):
-            q_idx = np.flatnonzero(cluster_ids == cid)
-            stats = self.estimator.clusters[int(cid)]
-            p = stats.p_hat
-            sel = self.selector.select(p, K, budget)
-            order = sorted(sel.chosen, key=lambda i: -p[i])
-            w = log_weight(np.clip(p, 1e-4, 1 - 1e-4), K)
-            empty = empty_log_belief(p)
+        for t in range(T):
+            # Prop. 4 early-stop on the in-flight set, one mask per wave
+            if self.use_kernel:
+                # per-row independent contraction: feeding only in-flight rows
+                # gives identical beliefs at a fraction of the kernel work
+                bel = self._kernel_beliefs(
+                    np.ascontiguousarray(resp_T.T[cur]), weights[cur], empty[cur]
+                )
+            else:
+                bel = np.where(voted[cur], vote[cur], empty[cur][:, None])
+            if K >= 2:
+                part = np.partition(bel, K - 2, axis=1)
+                h1, h2 = part[:, K - 1], part[:, K - 2]
+            else:
+                h1, h2 = bel[:, 0], np.full(cur.size, -np.inf)
+            sched_t = sched_T[t]
+            keep = (sched_t[cur] >= 0) & (res_T[t][cur] + h2 > h1 - stop_margin)
+            cur = cur[keep]
+            if cur.size == 0:
+                break
+            waves += 1
+            arms_t = sched_t[cur]
+            votes = self.engine.invoke_rows(arms_t, payloads, cur)
+            arm_query_counts += np.bincount(arms_t, minlength=L)
+            vote[cur, votes] += w_T[t][cur]
+            voted[cur, votes] = True
+            costs[cur] += wc_T[t][cur]
+            resp_T[t][cur] = votes
 
-            nb = q_idx.size
-            beliefs = np.full((nb, K), empty, np.float64)
-            counts = np.zeros((nb, K), np.int64)
-            active = np.ones(nb, bool)
-            planned[q_idx] = float(self.engine.costs[order].sum()) if order else 0.0
-
-            for wave, arm in enumerate(order):
-                # early-stop check per query (Prop. 4)
-                log_f = float(np.sum(w[order[wave:]]))
-                srt = np.sort(beliefs, axis=1)
-                h1, h2 = srt[:, -1], srt[:, -2]
-                still = active & (log_f + h2 > h1 - stop_margin)
-                if not still.any():
-                    break
-                full_active = np.zeros(B, bool)
-                full_active[q_idx[still]] = True
-                resp = self.engine.invoke_arm(arm, queries, full_active)[q_idx]
-                hit = np.flatnonzero(still)
-                for j in hit:
-                    r = int(resp[j])
-                    if counts[j, r] == 0:
-                        beliefs[j, r] = w[arm]
-                    else:
-                        beliefs[j, r] += w[arm]
-                    counts[j, r] += 1
-                    costs[q_idx[j]] += self.engine.costs[arm]
-                    arms_used[q_idx[j]].append(arm)
-                active = still
-
-            predictions[q_idx] = np.argmax(beliefs, axis=1)
-
+        responses = np.ascontiguousarray(resp_T.T)
+        if self.use_kernel:
+            beliefs = self._kernel_beliefs(responses, weights, empty)
+        else:
+            beliefs = np.where(voted, vote, empty[:, None])
+        predictions, _ = tie_break_argmax(beliefs, rng)
+        invoked = responses >= 0
         return RouteResult(
             predictions=predictions,
             costs=costs,
             planned_costs=planned,
-            arms_used=arms_used,
             clusters=cluster_ids,
+            budgets=np.asarray(budgets),
+            schedule=schedule,
+            responses=responses,
+            invoked=invoked,
+            arm_query_counts=arm_query_counts,
+            waves=waves,
         )
+
+    # ------------------------------------------------------------------
+    def route_batch_reference(
+        self,
+        queries: Any,
+        embeddings: np.ndarray,
+        budget: Any,
+        rng: Optional[np.random.Generator] = None,
+    ) -> RouteResult:
+        """Sequential oracle: one ``adaptive_invoke`` per query.
+
+        The semantics source for :meth:`route_batch` (equivalence-tested in
+        ``tests/test_router_batched.py``) and the baseline of the serving
+        throughput benchmark. Shares the selection cache with the batched
+        path, so both route the same selected sets.
+
+        Exact output equality with :meth:`route_batch` holds for
+        *deterministic* arms (responses a pure function of (arm, query),
+        e.g. the test TabularArm or LMArm). Stochastic ``OracleArm`` pools
+        consume different rng streams on the two paths (pooled
+        ``invoke_rows`` draws vs per-arm draws here), so per-seed
+        realizations differ even though the distributions match.
+        """
+        B = len(queries)
+        K = self.num_classes
+        budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
+        cluster_ids = self.estimator.lookup_batch(embeddings)
+        L = len(self.engine.arms)
+
+        predictions = np.zeros(B, np.int64)
+        costs = np.zeros(B, np.float64)
+        planned = np.zeros(B, np.float64)
+        arms_used: List[List[int]] = []
+        resp_rows: List[np.ndarray] = []
+        arm_query_counts = np.zeros(L, np.int64)
+        for j in range(B):
+            p = self.estimator.clusters[int(cluster_ids[j])].p_hat
+            sel = self.selector.select(p, K, float(budgets[j]))
+
+            def invoke_one(arm: int) -> int:
+                mask = np.zeros(B, bool)
+                mask[j] = True
+                return int(self.engine.invoke_arm(int(arm), queries, mask)[j])
+
+            inv = adaptive_invoke(
+                list(sel.chosen), p, K, invoke_one, rng=rng, costs=self.engine.costs
+            )
+            predictions[j] = inv.prediction
+            costs[j] = inv.cost
+            planned[j] = inv.planned_cost
+            arms_used.append([int(a) for a in inv.used])
+            resp_rows.append(np.asarray(inv.responses, np.int64))
+            arm_query_counts[inv.used] += 1
+        T = max(1, max((len(a) for a in arms_used), default=1))
+        schedule = np.full((B, T), -1, np.int64)
+        responses = np.full((B, T), -1, np.int64)
+        invoked = np.zeros((B, T), bool)
+        for j, used in enumerate(arms_used):
+            schedule[j, : len(used)] = used
+            responses[j, : len(used)] = resp_rows[j]
+            invoked[j, : len(used)] = True
+        res = RouteResult(
+            predictions=predictions,
+            costs=costs,
+            planned_costs=planned,
+            clusters=cluster_ids,
+            budgets=np.asarray(budgets),
+            schedule=schedule,
+            responses=responses,
+            invoked=invoked,
+            arm_query_counts=arm_query_counts,
+            waves=T,
+        )
+        res._arms_used = arms_used
+        return res

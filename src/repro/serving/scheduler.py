@@ -36,7 +36,7 @@ class BatchScheduler:
         self.max_wait_s = max_wait_s
         self._queue: List[Request] = []
         self.mitigator = StragglerMitigator(num_workers=len(router.engine.arms))
-        self.stats: Dict[str, float] = {"batches": 0, "requests": 0}
+        self.stats: Dict[str, float] = {"batches": 0, "requests": 0, "flushes": 0}
 
     def submit(self, req: Request):
         self._queue.append(req)
@@ -49,21 +49,29 @@ class BatchScheduler:
         return time.monotonic() - self._queue[0].arrival_s >= self.max_wait_s
 
     def flush(self):
-        """Route one batch (same-budget requests grouped together)."""
+        """Route one batch; heterogeneous budgets ride one wave schedule.
+
+        The router handles (cluster, budget) grouping internally, so the
+        whole flush is a single ``route_batch`` call. Accounting:
+        ``stats["batches"]`` counts the budget groups actually routed, and
+        the StragglerMitigator only sees the latency of arms the wavefront
+        really invoked (``RouteResult.arm_query_counts``) — idle arms record
+        zero work instead of a phantom full-batch latency.
+        """
         if not self._queue:
             return []
         batch = self._queue[: self.max_batch]
         self._queue = self._queue[self.max_batch :]
-        out = []
-        budgets = sorted(set(r.budget for r in batch))
-        for b in budgets:
-            group = [r for r in batch if r.budget == b]
-            payloads = [r.payload for r in group]
-            embs = np.stack([r.embedding for r in group])
-            res = self.router.route_batch(payloads, embs, b)
-            lat = [a.latency_s(len(group)) for a in self.router.engine.arms]
-            self.mitigator.record_step(lat)
-            out.append((group, res))
-        self.stats["batches"] += 1
+        payloads = [r.payload for r in batch]
+        embs = np.stack([r.embedding for r in batch])
+        budgets = np.asarray([r.budget for r in batch], np.float64)
+        res = self.router.route_batch(payloads, embs, budgets)
+        lat = [
+            arm.latency_s(int(n)) if n else 0.0
+            for arm, n in zip(self.router.engine.arms, res.arm_query_counts)
+        ]
+        self.mitigator.record_step(lat)
+        self.stats["batches"] += len(np.unique(budgets))
+        self.stats["flushes"] += 1
         self.stats["requests"] += len(batch)
-        return out
+        return [(batch, res)]

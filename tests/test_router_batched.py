@@ -1,0 +1,215 @@
+"""Batched wavefront router vs the sequential per-query reference.
+
+The vectorized engine must return *identical* predictions, per-query costs,
+and arms-used as a loop calling ``adaptive_invoke`` once per query, across
+heterogeneous (K, budget, cluster) mixes. Determinism comes from tabular
+arms: each arm's response to query j is precomputed, so invocation order and
+batching cannot change what any arm answers.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.belief import tie_break_argmax
+from repro.core.clustering import kmeans
+from repro.core.estimation import SuccessProbEstimator
+from repro.core.selection import adaptive_invoke
+from repro.core.types import SelectionResult
+from repro.data import OracleWorkload
+from repro.serving import BatchScheduler, PoolEngine, Request, ThriftRouter
+
+
+@dataclasses.dataclass
+class TabularArm:
+    """Deterministic arm: response to query j is the precomputed resp[j]."""
+
+    name: str
+    cost: float
+    resp: np.ndarray
+
+    def classify_batch(self, queries) -> np.ndarray:
+        return self.resp[np.asarray(queries, np.int64)]
+
+    def latency_s(self, batch: int) -> float:
+        return 1e-6 * self.cost * batch
+
+
+def _make_pool(K, L, clusters, B, seed):
+    wl = OracleWorkload(num_classes=K, num_clusters=clusters, num_arms=L, seed=seed)
+    T, emb, _ = wl.response_table(60 * clusters, seed=seed + 1)
+    assign, _ = kmeans(emb, clusters, seed=0)
+    est = SuccessProbEstimator(T, emb, assign)
+    rng = np.random.default_rng(seed + 2)
+    qcid, qemb, qlab = wl.sample_queries(B, rng)
+    R = np.stack(
+        [
+            wl.invoke_batch(a, qcid, qlab, np.random.default_rng(seed + 100 + a))
+            for a in range(L)
+        ]
+    )
+    engine = PoolEngine(
+        [TabularArm(f"t{a}", float(wl.costs[a]), R[a]) for a in range(L)]
+    )
+    router = ThriftRouter(engine, est, num_classes=K)
+    return wl, est, engine, router, qemb, R
+
+
+def _reference(router, est, R, qemb, budgets, K):
+    """Per-query adaptive_invoke loop — the semantics the batch must match."""
+    B = qemb.shape[0]
+    cids = est.lookup_batch(qemb)
+    preds, costs, planned, arms = [], [], [], []
+    for j in range(B):
+        p = est.clusters[int(cids[j])].p_hat
+        sel = router.selector.select(p, K, float(budgets[j]))
+        inv = adaptive_invoke(
+            list(sel.chosen), p, K, lambda a: int(R[a, j]),
+            costs=router.engine.costs,
+        )
+        preds.append(inv.prediction)
+        costs.append(inv.cost)
+        planned.append(inv.planned_cost)
+        arms.append([int(a) for a in inv.used])
+    return np.asarray(preds), np.asarray(costs), np.asarray(planned), arms
+
+
+MIXES = [
+    # (K, L, clusters, B, seed, budget quantiles used per query)
+    (4, 8, 5, 96, 3, [0.5]),
+    (2, 6, 3, 64, 7, [0.3, 0.8]),
+    (5, 12, 6, 128, 11, [0.2, 0.55, 0.9]),
+]
+
+
+@pytest.mark.parametrize("K,L,clusters,B,seed,quantiles", MIXES)
+def test_batched_matches_sequential_reference(K, L, clusters, B, seed, quantiles):
+    wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+    rng = np.random.default_rng(seed + 5)
+    levels = np.quantile(engine.costs, quantiles) * 2.5
+    budgets = rng.choice(levels, size=B)  # heterogeneous budgets in one batch
+
+    res = router.route_batch(np.arange(B), qemb, budgets)
+    preds, costs, planned, arms = _reference(router, est, R, qemb, budgets, K)
+
+    np.testing.assert_array_equal(res.predictions, preds)
+    np.testing.assert_allclose(res.costs, costs, rtol=1e-12, atol=0)
+    np.testing.assert_allclose(res.planned_costs, planned, rtol=1e-12, atol=0)
+    assert res.arms_used == arms
+    # arm accounting is consistent with the per-query trace
+    total = np.zeros(L, np.int64)
+    for a_list in arms:
+        total[a_list] += 1
+    np.testing.assert_array_equal(res.arm_query_counts, total)
+
+
+@pytest.mark.parametrize("K,L,clusters,B,seed,quantiles", MIXES[:1])
+def test_reference_route_batch_agrees(K, L, clusters, B, seed, quantiles):
+    """route_batch_reference (engine-backed loop) == batched route_batch."""
+    wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    res = router.route_batch(np.arange(B), qemb, budget)
+    ref = router.route_batch_reference(np.arange(B), qemb, budget)
+    np.testing.assert_array_equal(res.predictions, ref.predictions)
+    np.testing.assert_allclose(res.costs, ref.costs, rtol=1e-12, atol=0)
+    assert res.arms_used == ref.arms_used
+
+
+def test_kernel_backend_matches_numpy_backend():
+    K, L, clusters, B, seed = 4, 8, 5, 64, 3
+    wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+    router_k = ThriftRouter(engine, est, num_classes=K, use_kernel=True)
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    res = router.route_batch(np.arange(B), qemb, budget)
+    res_k = router_k.route_batch(np.arange(B), qemb, budget)
+    np.testing.assert_array_equal(res.predictions, res_k.predictions)
+    np.testing.assert_allclose(res.costs, res_k.costs, rtol=1e-12, atol=0)
+    assert res.arms_used == res_k.arms_used
+
+
+def _symmetric_router(p_sym=0.8, N=200):
+    """Two equal-cost, equal-p arms that always vote class 0 and class 1:
+    every routed query ends in an exact belief tie."""
+    emb = np.zeros((N, 4))
+    table = np.zeros((N, 2))
+    table[: int(N * p_sym)] = 1.0  # p_hat exactly p_sym for both arms
+    est = SuccessProbEstimator(table, emb, np.zeros(N, np.int64))
+    B = 64
+    engine = PoolEngine(
+        [
+            TabularArm("zero", 1.0, np.zeros(B, np.int64)),
+            TabularArm("one", 1.0, np.ones(B, np.int64)),
+        ]
+    )
+    router = ThriftRouter(engine, est, num_classes=2)
+    budget = 2.0
+    # pin the selection to both arms so the wavefront really invokes both
+    # (p_sym > 2/3 makes the empty-class belief positive, defeating early stop)
+    cid = list(est.clusters)[0]
+    p = est.clusters[cid].p_hat
+    key = (np.round(np.asarray(p, np.float64), 12).tobytes(), 2, budget)
+    router.selector._cache[key] = SelectionResult(
+        chosen=np.asarray([0, 1], np.int64), xi_est=p_sym, cost=2.0, budget=budget
+    )
+    return router, np.zeros((B, 4)), budget, B
+
+
+def test_tie_break_regression_symmetric_pool():
+    """Seed bug: bare np.argmax biased every tied query to class 0."""
+    router, qemb, budget, B = _symmetric_router()
+    rng = np.random.default_rng(0)
+    res = router.route_batch(np.arange(B), qemb, budget, rng=rng)
+    assert all(len(a) == 2 for a in res.arms_used)  # both arms really invoked
+    frac0 = float(np.mean(res.predictions == 0))
+    assert 0.25 < frac0 < 0.75  # ~Binomial(64, 1/2); not systematically 0
+    # deterministic mode stays reproducible: first-max tie break
+    res_det = router.route_batch(np.arange(B), qemb, budget)
+    assert (res_det.predictions == 0).all()
+
+
+def test_tie_break_helper_scalar_and_batch():
+    beliefs = np.array([[1.0, 1.0, 0.5], [0.2, 0.9, 0.9]])
+    pred, ties = tie_break_argmax(beliefs)
+    np.testing.assert_array_equal(pred, [0, 1])
+    np.testing.assert_array_equal(ties, [2, 2])
+    rng = np.random.default_rng(1)
+    draws = [int(tie_break_argmax(beliefs[0], rng)[0]) for _ in range(300)]
+    assert set(draws) == {0, 1}
+    assert 0.4 < np.mean(draws) < 0.6
+
+
+def test_scheduler_group_accounting_and_used_arm_latency():
+    wl = OracleWorkload(num_classes=4, num_clusters=4, num_arms=8, seed=3)
+    T, emb, _ = wl.response_table(400)
+    assign, _ = kmeans(emb, 4, seed=0)
+    est = SuccessProbEstimator(T, emb, assign)
+    from repro.serving import OracleArm
+
+    engine = PoolEngine([OracleArm(f"a{i}", wl, i, seed=11) for i in range(8)])
+    router = ThriftRouter(engine, est, num_classes=4)
+    sched = BatchScheduler(router, max_batch=16, max_wait_s=0.0)
+    rng = np.random.default_rng(5)
+    cid, qemb, lab = wl.sample_queries(16, rng)
+    lo = float(np.quantile(engine.costs, 0.3)) * 2
+    hi = float(np.quantile(engine.costs, 0.8)) * 2
+    for i in range(16):
+        sched.submit(
+            Request(
+                payload=(cid[i], lab[i]),
+                embedding=qemb[i],
+                budget=lo if i % 2 == 0 else hi,
+            )
+        )
+    out = sched.flush()
+    assert len(out) == 1
+    batch, res = out[0]
+    assert len(batch) == 16
+    assert sched.stats["batches"] == 2       # two budget groups routed
+    assert sched.stats["flushes"] == 1
+    lat = sched.mitigator.history[-1]
+    unused = res.arm_query_counts == 0
+    assert (lat[unused] == 0.0).all()        # idle arms record no latency
+    assert (lat[~unused] > 0.0).all()
+    # per-query budgets enforced per group
+    budgets = np.asarray([r.budget for r in batch])
+    assert (res.costs <= budgets + 1e-12).all()
