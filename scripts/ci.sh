@@ -1,15 +1,50 @@
 #!/usr/bin/env bash
-# Minimal CI: router/serving correctness first (must be green), then the
+# Minimal CI: router/serving correctness first (must be green), then a
+# serving-throughput smoke + docs link check (must be green), then the
 # tier-1 suite. Known pre-existing failures outside the serving path
-# (rglru/mamba kernel sweeps, roofline, elastic/multipod dryrun) are tracked
-# in ROADMAP.md open items; the tier-1 step reports but does not gate on them.
+# (roofline, elastic/multipod dryrun) are tracked in ROADMAP.md open items;
+# the tier-1 step reports but does not gate on them.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 set -e
 python -m pytest -x -q tests/test_router_batched.py tests/test_serving.py \
-    tests/test_core_selection.py tests/test_properties.py
+    tests/test_plans.py tests/test_core_selection.py tests/test_properties.py
+
+# serving-throughput smoke: the benchmark must run end to end and write a
+# well-formed report (without clobbering the committed trajectory)
+SMOKE_OUT="${TMPDIR:-/tmp}/BENCH_serving_smoke.json"
+rm -f "$SMOKE_OUT"
+python -m benchmarks.serving_throughput --smoke --out "$SMOKE_OUT"
+SMOKE_OUT="$SMOKE_OUT" python - <<'PY'
+import json, os
+report = json.load(open(os.environ["SMOKE_OUT"]))
+assert report["bench"] == "serving_throughput", "unexpected bench name"
+assert report["rows"], "bench report has no rows"
+for row in report["rows"]:
+    for key in ("batch", "qps", "wavefront_qps", "seed_qps", "accuracy"):
+        assert key in row, f"bench row missing {key}"
+        assert row[key] > 0 or key == "accuracy", f"bench row has bad {key}"
+print("serving smoke OK:", [(r["batch"], round(r["qps"])) for r in report["rows"]])
+PY
+
+# docs link check: README.md / docs/serving.md must not reference files
+# that do not exist in the repo
+python - <<'PY'
+import pathlib, re, sys
+bad = []
+for doc in ("README.md", "docs/serving.md"):
+    text = pathlib.Path(doc).read_text()
+    refs = set(re.findall(r"`([A-Za-z0-9_./-]+\.(?:py|md|sh|json))`", text))
+    refs |= set(re.findall(r"\]\(([A-Za-z0-9_./-]+\.md)\)", text))
+    for ref in refs:
+        if not pathlib.Path(ref).exists():
+            bad.append((doc, ref))
+if bad:
+    sys.exit(f"dangling doc references: {bad}")
+print("docs link check OK")
+PY
 set +e
 
 python -m pytest -q

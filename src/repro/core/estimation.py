@@ -165,11 +165,25 @@ class SuccessProbEstimator:
         :meth:`lookup_batch` so single and batched lookups always agree."""
         return self.clusters[int(self.lookup_batch(embedding[None, :])[0])]
 
-    def lookup_batch(self, embeddings: np.ndarray) -> np.ndarray:
-        """(B, d) -> (B,) cluster ids (matmul distance, no (B, C, d) temp)."""
+    @property
+    def cluster_order(self) -> np.ndarray:
+        """(C,) cluster ids in dense-index order — the alignment contract
+        for :meth:`lookup_batch_indices` and the PlanService batch tables."""
+        return self._cids
+
+    def lookup_batch_indices(self, embeddings: np.ndarray) -> np.ndarray:
+        """(B, d) -> (B,) dense indices into :attr:`cluster_order`.
+
+        The serving fast path: a dense index doubles as the gather index
+        into precomputed per-cluster wave tables, so routing a batch never
+        needs an ``np.unique`` pass over its cluster ids."""
         e = np.asarray(embeddings, np.float64)
         d = self._centroid_sq[None, :] - 2.0 * (e @ self._centroids.T)
-        return self._cids[np.argmin(d, axis=1)]
+        return np.argmin(d, axis=1)
+
+    def lookup_batch(self, embeddings: np.ndarray) -> np.ndarray:
+        """(B, d) -> (B,) cluster ids (matmul distance, no (B, C, d) temp)."""
+        return self._cids[self.lookup_batch_indices(embeddings)]
 
     def update(
         self, cluster_id: int, outcomes: np.ndarray, delta: float = 0.01

@@ -221,6 +221,16 @@ class ThriftLLM:
         self.costs = np.asarray(self.costs, np.float64)
         self._cache: dict = {}
 
+    def rebind_costs(self, costs: np.ndarray) -> None:
+        """Swap in a new pool cost vector and drop every cached selection.
+
+        Selections depend on prices, so they cannot survive a re-pricing;
+        the serving PlanService calls this when the pool fingerprint
+        changes (see :meth:`repro.serving.plans.PlanService.refresh`).
+        """
+        self.costs = np.asarray(costs, np.float64)
+        self._cache.clear()
+
     def theta(self, p: np.ndarray, budget: float) -> int:
         afford = np.flatnonzero(self.costs <= budget + 1e-15)
         p_star = float(np.max(clip_probs(p)[afford])) if afford.size else 1.0

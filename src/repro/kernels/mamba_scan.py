@@ -41,7 +41,9 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref, y_ref, hlast_ref,
         decay = jnp.exp(dt[:, None] * a)             # (bc, N)
         h = decay * h + (dt * x)[:, None] * bv[None, :]
         y = jnp.sum(h * cv[None, :], axis=1) + dskip * x
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y[None])
+        # dynamic-index store via ref indexing: pl.store rejects plain-int
+        # axis indices on this Pallas version, __setitem__ normalizes them
+        y_ref[0, pl.dslice(t, 1), :] = y[None]
         return h
 
     h = jax.lax.fori_loop(0, block_s, step, h_scr[...])

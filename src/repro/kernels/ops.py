@@ -27,10 +27,17 @@ def mc_correctness(responses, masks, log_weights, empty_belief, num_classes: int
     )
 
 
-def belief_aggregate(responses, log_weights, empty_belief, num_classes: int):
-    """Batched router aggregation: (log_beliefs (B,K), predictions (B,))."""
+def belief_aggregate(responses, log_weights, empty_belief, num_classes: int,
+                     tile: int = 128):
+    """Batched router aggregation: (log_beliefs (B,K), predictions (B,)).
+
+    Safe to call from inside traced/jitted code (the serving router
+    dispatches it from the jitted wave program); ``tile`` trades grid steps
+    for VMEM footprint and does not affect per-row results.
+    """
     return belief_aggregate_pallas(
-        responses, log_weights, empty_belief, num_classes, interpret=_INTERPRET
+        responses, log_weights, empty_belief, num_classes, tile=tile,
+        interpret=_INTERPRET,
     )
 
 

@@ -28,7 +28,9 @@ def _kernel(la_ref, u_ref, h0_ref, y_ref, hlast_ref, h_scr, *, block_s, n_s):
 
     def step(t, h):
         h = jnp.exp(la_ref[0, t, :]) * h + u_ref[0, t, :]
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), h[None])
+        # dynamic-index store via ref indexing: pl.store rejects plain-int
+        # axis indices on this Pallas version, __setitem__ normalizes them
+        y_ref[0, pl.dslice(t, 1), :] = h[None]
         return h
 
     h = jax.lax.fori_loop(0, block_s, step, h_scr[...])

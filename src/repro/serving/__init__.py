@@ -1,9 +1,11 @@
-"""Serving runtime: arm engine, ThriftLLM router, batch scheduler."""
+"""Serving runtime: arm engine, ThriftLLM router, plan service, scheduler."""
 from .engine import LMArm, OracleArm, PoolEngine, USD_PER_FLOP
+from .plans import GroupPlan, PlanService
 from .router import RouteResult, ThriftRouter
 from .scheduler import BatchScheduler, Request
 
 __all__ = [
     "LMArm", "OracleArm", "PoolEngine", "USD_PER_FLOP",
+    "GroupPlan", "PlanService",
     "ThriftRouter", "RouteResult", "BatchScheduler", "Request",
 ]

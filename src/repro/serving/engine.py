@@ -98,13 +98,29 @@ class PoolEngine:
                 self._workload_arm = np.asarray(
                     [a.arm_index for a in self.arms], np.int64
                 )
-                self._pool_rng = np.random.default_rng(
-                    self.arms[0].seed + 104729
+                # SFC64: ~2x faster than PCG64 for the pooled draw that
+                # dominates speculative grid invocation; any counter-based
+                # generator is fine for the synthetic oracle
+                self._pool_rng = np.random.Generator(
+                    np.random.SFC64(self.arms[0].seed + 104729)
                 )
 
     @property
     def costs(self) -> np.ndarray:
         return np.asarray([a.cost for a in self.arms], np.float64)
+
+    @property
+    def pooled(self) -> bool:
+        """True when every arm shares one oracle workload, enabling the
+        single-call heterogeneous fast paths (``invoke_rows`` pooled draw,
+        the router's all-cells speculative gather)."""
+        return self._workload is not None
+
+    def fingerprint(self) -> bytes:
+        """Digest of the pool's pricing identity. The PlanService folds this
+        into every plan-cache key, so re-pricing an arm (or swapping the
+        pool) invalidates cached selections instead of serving stale plans."""
+        return np.ascontiguousarray(self.costs).tobytes()
 
     def prepare_payloads(self, queries) -> Any:
         """One-time per-batch payload conversion for fast row gathering."""
@@ -130,6 +146,23 @@ class PoolEngine:
             sub = [queries[i] for i in idx]
         out[idx] = self.arms[arm_idx].classify_batch(sub)
         return out
+
+    def invoke_grid(self, sched_T: np.ndarray, payloads: np.ndarray) -> np.ndarray:
+        """Whole-grid pooled invocation: serve cell (t, b) with arm
+        ``sched_T[t, b]`` (cells flagged -1 are drawn on arm 0 — callers
+        mask them out). Pooled-workload engines only; broadcasts the
+        (cluster, label) payload columns instead of gathering rows, so the
+        jitted router's speculative gather is a single vectorized draw.
+
+        Returns (T, B) class ids."""
+        assert self._workload is not None, "invoke_grid needs a pooled engine"
+        T, B = sched_T.shape
+        arms = self._workload_arm[np.maximum(sched_T.ravel(), 0)]
+        cl = np.broadcast_to(payloads[:, 0], (T, B)).reshape(-1)
+        lab = np.broadcast_to(payloads[:, 1], (T, B)).reshape(-1)
+        return self._workload.invoke_assigned(
+            arms, cl, lab, self._pool_rng
+        ).reshape(T, B)
 
     def invoke_rows(
         self, arm_ids: np.ndarray, queries, rows: np.ndarray

@@ -1,0 +1,368 @@
+"""Plan-cache selection service: "plan once, route many".
+
+Selection (SurGreedyLLM) is by far the most expensive step of routing a
+query class — a Monte-Carlo greedy over the pool — yet its output depends
+only on (cluster p-vector, num_classes, budget, pool costs). The
+:class:`PlanService` therefore memoizes the fully derived *wave plan* of
+each (cluster, budget) pair: the selected arms in invocation order, their
+log belief weights, the Prop. 4 residuals, per-wave costs and the
+empty-class belief. The router's hot path then reduces to a dictionary
+lookup plus array gathers; this is the same structure OptLLM's
+query-to-model assignment and FrugalGPT's offline-learned cascade policy
+use to make cost-aware routing cheap per query.
+
+Consistency is guarded by fingerprints: every plan key carries the engine
+cost-vector digest plus its *own cluster's* p-hat digest, and
+:meth:`PlanService.refresh` (called by the router once per batch) detects
+pool changes. A cost change drops everything (plans, batch tables, the
+selector's selection cache — re-snapshotting the new cost vector into the
+selector); a single re-estimated cluster only invalidates that cluster's
+plans and the batch tables, so online estimator updates keep the rest of
+the cache hot.
+
+Hot-pair precomputation: the service counts how often each (cluster,
+budget) pair is planned; :meth:`prewarm` builds plans ahead of traffic for
+an explicit list of pairs or for the hottest pairs seen so far, so a
+serving replica can warm its cache before taking load (or after an
+invalidation) without paying selection latency on user queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import Counter
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.belief import empty_log_belief, log_weight
+from repro.core.types import clip_probs
+
+
+@dataclasses.dataclass
+class BatchTables:
+    """Per-cluster wave plans stacked into gather-ready wave-major tables.
+
+    One instance covers *every* cluster the estimator knows, at one budget,
+    aligned with ``estimator.cluster_order`` — so routing a batch is a pure
+    dense gather ``tables.order[:, idx]`` with no uniques, no Python loop.
+
+    Attributes:
+      order: (T, C) arm id invoked at wave t for cluster-column c, -1 pad.
+      floats: (3, T, C) stacked [log-weights, Prop. 4 residuals, wave costs]
+        so one fancy-index gathers all three per batch.
+      empty: (C,) empty-class log beliefs.
+      planned: (C,) full selected-set USD.
+      cluster_ids: (C,) cluster ids aligned with the columns.
+    """
+
+    order: np.ndarray
+    floats: np.ndarray
+    empty: np.ndarray
+    planned: np.ndarray
+    cluster_ids: np.ndarray
+
+
+def stack_plans(plans: Sequence["GroupPlan"]):
+    """Stack :class:`GroupPlan`s into padded wave-major tables.
+
+    The single layout authority for both the uniform-budget
+    :class:`BatchTables` and the router's heterogeneous-budget group merge.
+    Returns ``(order (T, G), floats (3, T, G) [weights, residual, costs],
+    empty (G,), planned (G,))`` with -1 / -inf / 0 padding past each plan's
+    length."""
+    G = len(plans)
+    T = max(1, max(p.order.size for p in plans))
+    order = np.full((T, G), -1, np.int64)
+    floats = np.zeros((3, T, G), np.float64)
+    floats[1] = -np.inf
+    empty = np.empty(G, np.float64)
+    planned = np.empty(G, np.float64)
+    for g, plan in enumerate(plans):
+        n = plan.order.size
+        order[:n, g] = plan.order
+        floats[0, :n, g] = plan.weights
+        floats[1, :n, g] = plan.residual
+        floats[2, :n, g] = plan.wave_costs
+        empty[g] = plan.empty
+        planned[g] = plan.planned
+    return order, floats, empty, planned
+
+
+@dataclasses.dataclass
+class GroupPlan:
+    """Fully derived wave plan of one (cluster p-vector, budget) group.
+
+    A plan is everything the wavefront loop needs to route a query of this
+    group without consulting the selector again:
+
+    Attributes:
+      order: (n,) arm ids in decreasing-p invocation order (wave t invokes
+        ``order[t]``).
+      weights: (n,) log belief weight of ``order[t]`` (Eq. 4 in log space).
+      residual: (n,) log F of the arms still ahead at wave t, i.e.
+        ``sum(weights[t:])`` — the Prop. 4 early-stop potential.
+      wave_costs: (n,) USD cost of ``order[t]``.
+      empty: empty-class log belief (the paper's no-vote heuristic).
+      planned: total USD of the selected set (the cost if no query of the
+        group early-stops).
+    """
+
+    order: np.ndarray
+    weights: np.ndarray
+    residual: np.ndarray
+    wave_costs: np.ndarray
+    empty: float
+    planned: float
+
+
+# (cluster id, budget, own-cluster p-digest + cost fingerprint) -> plan
+PlanKey = Tuple[int, float, bytes]
+
+
+class PlanService:
+    """Memoizes :class:`GroupPlan`s keyed by (cluster, budget, pool fingerprint).
+
+    Owned by a :class:`~repro.serving.router.ThriftRouter`; shared across
+    batches (and shareable across routers bound to the same pool). All
+    methods are cheap except a miss, which runs SurGreedy selection once.
+    """
+
+    def __init__(self, selector, estimator, engine, num_classes: int):
+        self.selector = selector
+        self.estimator = estimator
+        self.engine = engine
+        self.num_classes = int(num_classes)
+        self._cache: Dict[PlanKey, GroupPlan] = {}
+        self._table_cache: Dict[Tuple[float, bytes], BatchTables] = {}
+        self._pair_counts: Counter = Counter()
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+        self._cost_fp = self.engine.fingerprint()
+        self._p_digests = self._cluster_digests()
+        self._p_ids = self._cluster_ids_snapshot()
+        self._fingerprint = self.pool_fingerprint()
+
+    # ------------------------------------------------------------------
+    # Pool identity
+    # ------------------------------------------------------------------
+    def _cluster_digests(self) -> Dict[int, bytes]:
+        """Per-cluster digest of the p-hat estimate — plan keys carry their
+        own cluster's digest, so re-estimating one cluster only misses that
+        cluster's plans."""
+        return {
+            int(cid): hashlib.blake2b(
+                np.ascontiguousarray(stats.p_hat, np.float64).tobytes(),
+                digest_size=16,
+            ).digest()
+            for cid, stats in self.estimator.clusters.items()
+        }
+
+    def _cluster_ids_snapshot(self) -> Tuple:
+        """Object-identity snapshot of the estimate arrays. Estimator
+        updates rebind ``p_hat`` (see ``SuccessProbEstimator.update``), so
+        unchanged identities mean unchanged estimates — letting refresh()
+        skip re-hashing every p-vector on the per-batch hot path. In-place
+        mutation of a p_hat array bypasses this shortcut; rebind instead."""
+        return tuple(
+            (int(cid), id(stats.p_hat))
+            for cid, stats in self.estimator.clusters.items()
+        )
+
+    def pool_fingerprint(self) -> bytes:
+        """Digest of everything any plan depends on besides (cluster,
+        budget): the engine cost vector and each cluster's p-hat estimate.
+        Folded into batch-table keys; per-pair plan keys use the finer
+        (cost, own-cluster) granularity."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(self._cost_fp)
+        for cid in sorted(self._p_digests):
+            h.update(np.int64(cid).tobytes())
+            h.update(self._p_digests[cid])
+        return h.digest()
+
+    def refresh(self) -> bool:
+        """Re-fingerprint the pool; on change, invalidate what the change
+        actually touches. Returns True if an invalidation happened.
+
+        * Cost change (re-priced or swapped arms): every plan depends on
+          prices, so all caches drop, the selector's selection cache is
+          cleared and its cost snapshot re-pulled from the engine.
+        * Estimate change (one or more clusters re-calibrated): batch
+          tables rebuild, but per-pair plans carry their own cluster's
+          p-digest in the key, so only the changed clusters' plans miss —
+          the rest keep hitting. Stale entries are pruned.
+        """
+        cost_fp = self.engine.fingerprint()
+        p_ids = self._cluster_ids_snapshot()
+        if cost_fp == self._cost_fp and p_ids == self._p_ids:
+            return False
+        p_digests = self._cluster_digests()
+        self._p_ids = p_ids
+        if cost_fp == self._cost_fp and p_digests == self._p_digests:
+            return False  # arrays rebound but values identical
+        if cost_fp != self._cost_fp:
+            self._cache.clear()
+            self._pair_counts.clear()
+            self.selector.rebind_costs(self.engine.costs)
+        else:
+            changed = {
+                cid for cid in set(p_digests) | set(self._p_digests)
+                if p_digests.get(cid) != self._p_digests.get(cid)
+            }
+            for key in [k for k in self._cache if k[0] in changed]:
+                del self._cache[key]
+        self._table_cache.clear()
+        self._cost_fp = cost_fp
+        self._p_digests = p_digests
+        self._fingerprint = self.pool_fingerprint()
+        self.invalidations += 1
+        return True
+
+    # ------------------------------------------------------------------
+    # Planning
+    # ------------------------------------------------------------------
+    def _plan_key(self, cid: int, budget: float) -> PlanKey:
+        return (int(cid), float(budget),
+                self._p_digests.get(int(cid), b"") + self._cost_fp)
+
+    def plan(self, cid: int, budget: float) -> GroupPlan:
+        """Return the wave plan for (cluster ``cid``, ``budget``), building
+        and caching it on first use."""
+        key = self._plan_key(cid, budget)
+        self._pair_counts[key[:2]] += 1
+        plan = self._cache.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan
+        self.misses += 1
+        plan = self._build(int(cid), float(budget))
+        self._cache[key] = plan
+        return plan
+
+    def _build(self, cid: int, budget: float) -> GroupPlan:
+        p = self.estimator.clusters[cid].p_hat
+        K = self.num_classes
+        pc = clip_probs(p)
+        sel = self.selector.select(p, K, budget)
+        # identical ordering to adaptive_invoke: stable sort on clipped p
+        order = np.asarray(sorted(list(sel.chosen), key=lambda i: -pc[i]), np.int64)
+        w_order = log_weight(pc, K)[order]
+        # residual log F exactly as the sequential loop sums it each round
+        residual = np.asarray(
+            [np.sum(w_order[t:]) for t in range(order.size)], np.float64
+        )
+        wave_costs = np.asarray(self.engine.costs, np.float64)[order]
+        return GroupPlan(
+            order=order,
+            weights=w_order,
+            residual=residual,
+            wave_costs=wave_costs,
+            empty=empty_log_belief(pc),
+            planned=float(wave_costs.sum()) if order.size else 0.0,
+        )
+
+    def batch_tables(
+        self, budget: float, idx: Optional[np.ndarray] = None
+    ) -> BatchTables:
+        """Stacked wave tables over all known clusters at ``budget``.
+
+        The batch-level "plan once, route many" cache: built from the
+        per-pair plans on first use (counting their hits/misses), then a
+        uniform-budget batch routes via one cached table gather — zero
+        selector work, zero per-group Python. Invalidates with the pool
+        fingerprint like every plan.
+
+        ``idx`` (optional (B,) dense cluster indices of the batch) feeds
+        the traffic accounting: per-query (cluster, budget) counts keep
+        :meth:`hot_pairs` meaningful, and a cache hit counts one plan hit
+        per cluster the batch actually contains."""
+        key = (float(budget), self._fingerprint)
+        tables = self._table_cache.get(key)
+        if tables is not None:
+            if idx is None:
+                self.hits += tables.order.shape[1]
+            else:
+                self.hits += self._note_traffic(tables, float(budget), idx)
+            return tables
+        cids = getattr(self.estimator, "cluster_order", None)
+        if cids is None:
+            cids = np.asarray(sorted(self.estimator.clusters))
+        plans = [self.plan(int(c), float(budget)) for c in cids]
+        order, floats, empty, planned = stack_plans(plans)
+        tables = BatchTables(
+            order=order, floats=floats, empty=empty, planned=planned,
+            cluster_ids=np.asarray(cids, np.int64),
+        )
+        self._table_cache[key] = tables
+        if idx is not None:
+            self._note_traffic(tables, float(budget), idx)
+        return tables
+
+    def _note_traffic(
+        self, tables: BatchTables, budget: float, idx: np.ndarray
+    ) -> int:
+        """Fold a batch's per-query (cluster, budget) counts into the
+        hot-pair tracker; returns how many distinct clusters the batch hit."""
+        counts = np.bincount(idx, minlength=tables.cluster_ids.size)
+        present = 0
+        for c, n in zip(tables.cluster_ids, counts):
+            if n:
+                self._pair_counts[(int(c), budget)] += int(n)
+                present += 1
+        return present
+
+    # ------------------------------------------------------------------
+    # Precomputation ahead of traffic
+    # ------------------------------------------------------------------
+    def hot_pairs(self, n: int = 16) -> List[Tuple[int, float]]:
+        """The ``n`` most frequently planned (cluster, budget) pairs."""
+        return [pair for pair, _ in self._pair_counts.most_common(n)]
+
+    def prewarm(
+        self,
+        pairs: Optional[Iterable[Tuple[int, float]]] = None,
+        budgets: Optional[Sequence[float]] = None,
+        top: int = 16,
+    ) -> int:
+        """Build plans ahead of traffic; returns the number of plans built.
+
+        Three modes:
+          * ``pairs`` given — plan exactly those (cluster, budget) pairs;
+          * ``budgets`` given — plan the cross product of every known
+            cluster with each budget (cold-start warmup);
+          * neither — re-plan the ``top`` hottest pairs observed so far
+            (post-invalidation warmup; the hot-pair snapshot is taken
+            *before* refreshing, so it survives a cost invalidation).
+        """
+        hot_before = self.hot_pairs(top) if pairs is None and budgets is None else None
+        self.refresh()
+        if pairs is None:
+            if budgets is not None:
+                pairs = [
+                    (int(c), float(b))
+                    for c in self.estimator.clusters
+                    for b in budgets
+                ]
+            else:
+                pairs = hot_before
+        built = 0
+        for cid, budget in pairs:
+            if int(cid) not in self.estimator.clusters:
+                continue
+            key = self._plan_key(cid, budget)
+            if key not in self._cache:
+                self._cache[key] = self._build(int(cid), float(budget))
+                built += 1
+        return built
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        """Cache counters: hits/misses across lookups, invalidations, size."""
+        return {
+            "plan_hits": self.hits,
+            "plan_misses": self.misses,
+            "plan_invalidations": self.invalidations,
+            "plan_cache_size": len(self._cache),
+        }

@@ -2,49 +2,93 @@
 
 Serving pipeline per batch (Figure 1 of the paper, batched for TPU):
   1. embed queries, map to historical clusters -> p-hat vector per query
-  2. group queries by (cluster, budget); SurGreedyLLM selection per group
-     (cached — selection depends only on the p-vector, K and budget), and the
-     derived wave plan (arm order, log-weights, Prop. 4 residuals) is cached
-     per (p-vector, budget) too
-  3. *wavefront* adaptive invocation across the WHOLE batch: every group's
-     selected arms are laid out as a per-query wave schedule (arm invoked at
-     wave t), heterogeneous (cluster, budget) groups advance through one
-     shared wave loop, and before each wave every in-flight query's
-     early-stop condition F(T*)·H2 <= H1 (Prop. 4) is evaluated as one array
-     op. The wavefront *compacts*: stopped queries are dropped from the
-     index set, so wave t only touches the queries still in flight, and each
-     wave issues one heterogeneous-arm engine call
-     (:meth:`PoolEngine.invoke_rows`). No per-query Python work happens in
-     the loop: belief state is a (B, K) log-belief table updated by
-     scatter-adds, so the engine returns exactly the predictions of
-     per-query ``adaptive_invoke`` at batch throughput.
-  4. belief aggregation: float64 numpy scatter tables by default, or the
-     ``belief_aggregate`` Pallas kernel (``use_kernel=True``) which
-     recomputes the in-flight rows' beliefs from the response history each
-     wave — identical masking semantics, float32 accumulation on TPU.
-     Caveat: the kernel backend evaluates the Prop. 4 stop rule on float32
-     beliefs, so a query whose margin lands within float32 resolution
-     (~1e-7) of the STOP_MARGIN boundary may take one wave more or fewer
-     than the float64 path; everywhere else the two backends are identical.
+  2. group queries by (cluster, budget); SurGreedyLLM selection per group is
+     memoized by the :class:`~repro.serving.plans.PlanService` — selection
+     depends only on (cluster, budget, pool fingerprint) — and the derived
+     wave plan (arm order, log-weights, Prop. 4 residuals) is what the hot
+     path consumes. Hot pairs can be precomputed ahead of traffic and the
+     cache invalidates itself when the pool changes.
+  3. *wavefront* adaptive invocation across the WHOLE batch. Two data-plane
+     implementations with identical semantics for deterministic arms:
+
+     * :meth:`route_batch` (default, ``jit_waves=True``) — the **jitted
+       wave loop**. The per-group plans are padded to one fixed
+       (B, max_waves) layout (bucketed to limit recompilation), every
+       scheduled (query, wave) response is gathered up front in a single
+       heterogeneous-arm engine call, and the entire wave loop — Prop. 4
+       early-stop mask, belief accumulation, in-flight carry — runs as one
+       jitted on-device program in float64. Because responses are
+       pre-gathered, the sequential recurrence collapses into a parallel
+       prefix scan (see :func:`_wave_scan`); Python never touches the
+       loop and there is one dispatch per batch.
+     * :meth:`route_batch_reference` — the compacting host-side wavefront
+       (PR 1). Stopped queries are dropped from the index set each wave and
+       each wave issues one engine call for the rows still in flight, so
+       arms are only ever invoked for queries that need them. This is the
+       fallback for pools where speculative invocation costs real money
+       (live LLM APIs), and the semantics pin for equivalence tests.
+
+     The trade: the jitted loop invokes every *scheduled* (query, wave)
+     cell — including waves the stop rule later masks out — so realized
+     **reported** costs still count only invoked waves, but the engine does
+     speculative work. For oracle/tabular/self-hosted pools that is pure
+     throughput; for metered upstream APIs use ``jit_waves=False``.
+  4. belief aggregation: float64 scatter tables by default, or the
+     ``belief_aggregate`` Pallas kernel (``use_kernel=True``), dispatched
+     from *inside* the jitted scan — identical masking semantics, float32
+     accumulation on TPU. Caveat: the kernel backend evaluates the Prop. 4
+     stop rule on float32 beliefs, so a query whose margin lands within
+     float32 resolution (~1e-7) of the STOP_MARGIN boundary may take one
+     wave more or fewer than the float64 path; everywhere else the two
+     backends are identical.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import functools
+from typing import Any, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
-from repro.core.belief import empty_log_belief, log_weight, tie_break_argmax
+from repro.core.belief import tie_break_argmax
 from repro.core.estimation import SuccessProbEstimator
 from repro.core.selection import STOP_MARGIN, ThriftLLM, adaptive_invoke
-from repro.core.types import clip_probs
+from repro.kernels import ops
 
 from .engine import PoolEngine
+from .plans import GroupPlan, PlanService, stack_plans
+
+# retained name for PR 1 call sites / pickles
+_GroupPlan = GroupPlan
 
 
 class RouteResult:
-    """Batched routing output. ``arms_used`` is derived lazily from the
-    (schedule, invoked) matrices so the hot path never builds Python lists."""
+    """Batched routing output.
+
+    One instance summarizes a whole ``route_batch`` call. Fields:
+
+    Attributes:
+      predictions: (B,) aggregated class id per query (Eq. 4 argmax with
+        shared tie-breaking).
+      costs: (B,) realized USD per query — only waves actually invoked.
+      planned_costs: (B,) USD of each query's full selected set (the spend
+        ceiling if no early stop fires; ``costs <= planned_costs`` always).
+      clusters: (B,) historical cluster each query mapped to.
+      budgets: (B,) per-query budget applied.
+      schedule: (B, T) arm id scheduled at wave t, ``-1`` = no arm (plan
+        shorter than T).
+      responses: (B, T) class id returned at wave t, ``-1`` = wave not run.
+      invoked: (B, T) bool — wave t really ran for this query (the Prop. 4
+        stop rule had not fired and an arm was scheduled).
+      arm_query_counts: (L,) number of queries each pool arm actually
+        served — the scheduler's latency accounting input.
+      waves: number of waves the batch executed before every query stopped.
+
+    ``arms_used`` is derived lazily from the (schedule, invoked) matrices so
+    the hot path never builds Python lists.
+    """
 
     def __init__(
         self,
@@ -82,19 +126,135 @@ class RouteResult:
         return self._arms_used
 
 
-@dataclasses.dataclass
-class _GroupPlan:
-    """Wave plan of one (cluster p-vector, budget) group."""
+# ---------------------------------------------------------------------------
+# The on-device wave loop
+# ---------------------------------------------------------------------------
 
-    order: np.ndarray        # (n,) arm ids in decreasing-p invocation order
-    weights: np.ndarray      # (n,) log belief weight per wave
-    residual: np.ndarray     # (n,) log F of arms t..n-1 (Prop. 4)
-    wave_costs: np.ndarray   # (n,) USD of order[t]
-    empty: float             # empty-class log belief
-    planned: float           # full selected-set cost
+
+def _bucket(n: int, *, base: int) -> int:
+    """Round ``n`` up so the jitted loop compiles once per bucket instead
+    of once per exact (B, T): multiples of ``base`` up to 4x base (tight —
+    padded waves/rows cost real device work), powers of two beyond."""
+    if n <= 4 * base:
+        return max(base, -(-n // base) * base)
+    m = 4 * base
+    while m < n:
+        m *= 2
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "use_kernel"))
+def _wave_scan(
+    schedule: jnp.ndarray,    # (T, B) int32 arm ids, -1 = none (wave-major)
+    responses: jnp.ndarray,   # (T, B) int32 precomputed responses, -1 = none
+    weights: jnp.ndarray,     # (T, B) f64 log belief weight per wave
+    residual: jnp.ndarray,    # (T, B) f64 Prop. 4 log F residuals
+    empty: jnp.ndarray,       # (B,)  f64 empty-class log belief
+    stop_margin,
+    *,
+    num_classes: int,
+    use_kernel: bool,
+):
+    """Entire wavefront loop as one fused on-device program.
+
+    Because the per-wave responses are gathered up front, each query's
+    trajectory is a pure *prefix* of its schedule: if it is still in flight
+    at wave t it has invoked exactly waves 0..t-1. The sequential adaptive
+    loop therefore collapses into a prefix scan: cumulative (T+1, B, K)
+    belief tables (index t = "beliefs before wave t"), after which every
+    wave's Prop. 4 stop decision is evaluated at once and each query's stop
+    wave is the first failing prefix. The prefix accumulation and the
+    K-class top-2 are unrolled over the static (T, K) axes into pure
+    elementwise chains — XLA fuses them into a handful of kernels, the
+    adds happen in exactly the host loop's sequential order (bit-identical
+    float64 beliefs, no reassociation), and everything is wave-major so
+    each step touches contiguous (B,)/(B, K) slabs. One compile per
+    (T, B, K) bucket; the caller pads to buckets.
+
+    Runs in float64 under ``jax.experimental.enable_x64``. Under
+    ``use_kernel`` the prefix histories are instead aggregated by a single
+    prefix-expanded ``belief_aggregate`` Pallas kernel call, so the stop
+    rule sees exactly the float32 beliefs the kernel-backed reference loop
+    sees (the documented ~1e-7 stop-boundary caveat).
+
+    Returns (stop_wave (B,) int — number of waves invoked per query,
+    predictions (B,) int via first-max argmax, log-beliefs (B, K) at the
+    stop wave).
+    """
+    T, B = schedule.shape
+    K = num_classes
+    f_dtype = weights.dtype
+    class_ids = jnp.arange(K, dtype=responses.dtype)
+
+    if use_kernel:
+        # Prefix-expanded kernel dispatch: row (b, t) holds query b's
+        # response history masked to waves < t; one pallas_call aggregates
+        # every prefix of every query.
+        resp_bt = responses.T                               # (B, T)
+        hist = jnp.where(
+            jnp.arange(T + 1)[None, :, None] > jnp.arange(T)[None, None, :],
+            resp_bt[:, None, :],
+            -1,
+        )                                                   # (B, T+1, T)
+        w32 = weights.T.astype(jnp.float32)
+        bel32, _ = ops.belief_aggregate(
+            hist.reshape(B * (T + 1), T),
+            jnp.broadcast_to(w32[:, None, :], (B, T + 1, T)).reshape(-1, T),
+            jnp.broadcast_to(
+                empty.astype(jnp.float32)[:, None], (B, T + 1)
+            ).reshape(-1),
+            K,
+            tile=512,
+        )
+        # f32 values compared in f64, matching the reference kernel path
+        bel = bel32.reshape(B, T + 1, K).astype(f_dtype).transpose(1, 0, 2)
+    else:
+        onehot = responses[:, :, None] == class_ids[None, None, :]  # (T,B,K)
+        contrib = jnp.where(onehot, weights[:, :, None], 0.0)
+        votes = [jnp.zeros((B, K), f_dtype)]
+        cnts = [jnp.zeros((B, K), bool)]
+        for t in range(T):
+            votes.append(votes[-1] + contrib[t])
+            cnts.append(cnts[-1] | onehot[t])
+        cumvote = jnp.stack(votes)                          # (T+1, B, K)
+        cumcnt = jnp.stack(cnts)
+        bel = jnp.where(cumcnt, cumvote, empty[None, :, None])
+
+    # online top-2 over the static K axis; ties keep h2 == h1
+    h1 = jnp.full((T + 1, B), -jnp.inf, f_dtype)
+    h2 = h1
+    for k in range(K):
+        v = bel[:, :, k]
+        gt = v > h1
+        h2 = jnp.where(gt, h1, jnp.maximum(h2, v))
+        h1 = jnp.where(gt, v, h1)
+    stop = ~((schedule >= 0) & (residual + h2[:T] > h1[:T] - stop_margin))
+    s = jnp.where(stop.any(axis=0), jnp.argmax(stop, axis=0), T)  # first stop
+    beliefs = jnp.take_along_axis(bel, s[None, :, None], axis=0)[0]
+    # first-max argmax, identical to the host path's deterministic tie-break
+    preds = jnp.argmax(beliefs, axis=-1)
+    return s, preds, beliefs
 
 
 class ThriftRouter:
+    """Batched ThriftLLM serving router.
+
+    Args:
+      engine: arm pool executor.
+      estimator: cluster -> p-hat success-probability estimator.
+      num_classes: label-space size K.
+      eps, delta, seed: SurGreedy Monte-Carlo parameters (paper Sec. 5).
+      use_kernel: route belief aggregation through the ``belief_aggregate``
+        Pallas kernel (float32 accumulation, dispatched from inside the
+        jitted loop).
+      jit_waves: run the wave loop as one on-device ``lax.scan``
+        (:meth:`route_batch`); ``False`` falls back to the compacting
+        host loop (:meth:`route_batch_reference`) which never invokes arms
+        speculatively.
+      plan_service: optionally share a :class:`PlanService` across routers
+        bound to the same pool; by default each router owns one.
+    """
+
     def __init__(
         self,
         engine: PoolEngine,
@@ -104,89 +264,96 @@ class ThriftRouter:
         delta: float = 0.01,
         seed: int = 0,
         use_kernel: bool = False,
+        jit_waves: bool = True,
+        plan_service: Optional[PlanService] = None,
     ):
         self.engine = engine
         self.estimator = estimator
         self.num_classes = int(num_classes)
         self.use_kernel = bool(use_kernel)
+        self.jit_waves = bool(jit_waves)
         self.selector = ThriftLLM(
             engine.costs, eps=eps, delta=delta, seed=seed, use_kernel=use_kernel
         )
-        self._plan_cache: Dict[Tuple[bytes, float], _GroupPlan] = {}
+        self.plans = plan_service or PlanService(
+            self.selector, estimator, engine, self.num_classes
+        )
 
     # ------------------------------------------------------------------
     # Planning: (cluster, budget) groups -> one cross-group wave schedule
     # ------------------------------------------------------------------
-    def _group_plan(self, cid: int, budget: float) -> _GroupPlan:
-        p = self.estimator.clusters[cid].p_hat
-        key = (p.tobytes(), budget)
-        plan = self._plan_cache.get(key)
-        if plan is not None:
-            return plan
-        K = self.num_classes
-        pc = clip_probs(p)
-        sel = self.selector.select(p, K, budget)
-        # identical ordering to adaptive_invoke: stable sort on clipped p
-        order = np.asarray(sorted(list(sel.chosen), key=lambda i: -pc[i]), np.int64)
-        w_order = log_weight(pc, K)[order]
-        # residual log F exactly as the sequential loop sums it each round
-        residual = np.asarray(
-            [np.sum(w_order[t:]) for t in range(order.size)], np.float64
-        )
-        plan = _GroupPlan(
-            order=order,
-            weights=w_order,
-            residual=residual,
-            wave_costs=self.engine.costs[order],
-            empty=empty_log_belief(pc),
-            planned=float(self.engine.costs[order].sum()) if order.size else 0.0,
-        )
-        self._plan_cache[key] = plan
-        return plan
+    def _group_plan(self, cid: int, budget: float) -> GroupPlan:
+        return self.plans.plan(cid, budget)
 
     def _batch_plan(self, cluster_ids: np.ndarray, budgets: np.ndarray):
-        """Merge per-group plans into batch-wide (B, T) wave matrices.
+        """Merge per-group plans into batch-wide *wave-major* matrices.
 
         Groups are the unique (cluster, budget) pairs; the per-group plan
         rows are stacked once into (G, T) tables and expanded to the batch
-        by a single gather on the group-inverse index."""
-        if budgets[0] == budgets[-1] and (budgets == budgets[0]).all():
-            c_vals, inverse = np.unique(cluster_ids, return_inverse=True)
-            group_keys = [(int(c), float(budgets[0])) for c in c_vals]
-        else:
-            b_vals, b_inv = np.unique(budgets, return_inverse=True)
-            c_vals, c_inv = np.unique(cluster_ids, return_inverse=True)
-            combo_vals, inverse = np.unique(
-                c_inv * b_vals.size + b_inv, return_inverse=True
-            )
-            group_keys = [
-                (int(c_vals[v // b_vals.size]), float(b_vals[v % b_vals.size]))
-                for v in combo_vals
-            ]
-        plans = [self._group_plan(c, b) for c, b in group_keys]
-        G = len(plans)
-        T = max(1, max(p.order.size for p in plans))
-        order_m = np.full((G, T), -1, np.int64)
-        w_m = np.zeros((G, T), np.float64)
-        res_m = np.full((G, T), -np.inf, np.float64)
-        wc_m = np.zeros((G, T), np.float64)
-        empty_v = np.empty(G, np.float64)
-        planned_v = np.empty(G, np.float64)
-        for g, plan in enumerate(plans):
-            n = plan.order.size
-            order_m[g, :n] = plan.order
-            w_m[g, :n] = plan.weights
-            res_m[g, :n] = plan.residual
-            wc_m[g, :n] = plan.wave_costs
-            empty_v[g] = plan.empty
-            planned_v[g] = plan.planned
+        by a single gather on the group-inverse index. Returns
+        ``(schedule (T, B), weights (T, B), residual (T, B),
+        wave_costs (T, B), empty (B,), planned (B,))`` — wave-major so the
+        hot paths touch contiguous (B,) rows per wave with no transposes.
+
+        Heterogeneous-budget batches only; uniform budgets take the
+        ``BatchTables`` fast path in :meth:`_plan_batch`."""
+        b_vals, b_inv = np.unique(budgets, return_inverse=True)
+        c_vals, c_inv = np.unique(cluster_ids, return_inverse=True)
+        combo_vals, inverse = np.unique(
+            c_inv * b_vals.size + b_inv, return_inverse=True
+        )
+        group_keys = [
+            (int(c_vals[v // b_vals.size]), float(b_vals[v % b_vals.size]))
+            for v in combo_vals
+        ]
+        plans = [self.plans.plan(c, b) for c, b in group_keys]
+        order_m, fp_m, empty_v, planned_v = stack_plans(plans)
+        fp_b = fp_m[:, :, inverse]                 # one gather for all floats
         return (
-            order_m[inverse],
-            w_m[inverse],
-            res_m[inverse],
-            wc_m[inverse],
+            order_m[:, inverse],
+            fp_b[0],
+            fp_b[1],
+            fp_b[2],
             empty_v[inverse],
             planned_v[inverse],
+        )
+
+    def _plan_batch(self, embeddings: np.ndarray, budgets: np.ndarray):
+        """Shared planning prologue of both batched paths.
+
+        Uniform-budget batches (the common serving case) take the dense
+        fast path: one nearest-centroid index lookup, one gather from the
+        PlanService's cached :class:`~repro.serving.plans.BatchTables` —
+        no ``np.unique``, no per-group Python. Heterogeneous budgets fall
+        back to the generic group merge in :meth:`_batch_plan`.
+
+        Returns ``(cluster_ids (B,), schedule (T, B), weights (T, B),
+        residual (T, B), wave_costs (T, B), empty (B,), planned (B,))``.
+        """
+        if budgets[0] == budgets[-1] and (budgets == budgets[0]).all():
+            idx = self.estimator.lookup_batch_indices(embeddings)
+            cluster_ids = self.estimator.cluster_order[idx]
+            tabs = self.plans.batch_tables(float(budgets[0]), idx=idx)
+            fp = tabs.floats[:, :, idx]
+            return (
+                cluster_ids, tabs.order[:, idx], fp[0], fp[1], fp[2],
+                tabs.empty[idx], tabs.planned[idx],
+            )
+        cluster_ids = self.estimator.lookup_batch(embeddings)
+        return (cluster_ids,) + self._batch_plan(cluster_ids, budgets)
+
+    def _empty_result(self, budgets: np.ndarray) -> RouteResult:
+        return RouteResult(
+            predictions=np.zeros(0, np.int64),
+            costs=np.zeros(0, np.float64),
+            planned_costs=np.zeros(0, np.float64),
+            clusters=np.zeros(0, np.int64),
+            budgets=np.asarray(budgets),
+            schedule=np.full((0, 1), -1, np.int64),
+            responses=np.full((0, 1), -1, np.int64),
+            invoked=np.zeros((0, 1), bool),
+            arm_query_counts=np.zeros(len(self.engine.arms), np.int64),
+            waves=0,
         )
 
     # ------------------------------------------------------------------
@@ -195,10 +362,6 @@ class ThriftRouter:
     def _kernel_beliefs(
         self, responses: np.ndarray, weights: np.ndarray, empty: np.ndarray
     ) -> np.ndarray:
-        import jax.numpy as jnp
-
-        from repro.kernels import ops
-
         bel, _ = ops.belief_aggregate(
             jnp.asarray(responses, jnp.int32),
             jnp.asarray(weights, jnp.float32),
@@ -216,35 +379,136 @@ class ThriftRouter:
         stop_margin: float = STOP_MARGIN,
         rng: Optional[np.random.Generator] = None,
     ) -> RouteResult:
+        """Route a batch end to end: cluster lookup, plan-cache gather, one
+        on-device wave loop, host-side finalization.
+
+        With ``jit_waves=True`` (default) every scheduled (query, wave)
+        response is fetched in a single heterogeneous engine call and the
+        whole adaptive loop runs as one jitted ``lax.scan``; with
+        ``jit_waves=False`` this delegates to the compacting
+        :meth:`route_batch_reference`. Both return identical
+        predictions/costs/arms-used for deterministic arm pools.
+
+        Args:
+          queries: per-arm payloads (tokens, (cluster, label) pairs, ...).
+          embeddings: (B, d) query embeddings for cluster lookup.
+          budget: scalar or (B,) per-query USD budgets.
+          stop_margin: Prop. 4 slack; keep the default for paper semantics.
+          rng: optional generator for belief-tie breaking (None = argmax).
+        """
+        if not self.jit_waves:
+            return self.route_batch_reference(
+                queries, embeddings, budget, stop_margin=stop_margin, rng=rng
+            )
         B = len(queries)
         K = self.num_classes
         budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
         if B == 0:
-            return RouteResult(
-                predictions=np.zeros(0, np.int64),
-                costs=np.zeros(0, np.float64),
-                planned_costs=np.zeros(0, np.float64),
-                clusters=np.zeros(0, np.int64),
-                budgets=np.asarray(budgets),
-                schedule=np.full((0, 1), -1, np.int64),
-                responses=np.full((0, 1), -1, np.int64),
-                invoked=np.zeros((0, 1), bool),
-                arm_query_counts=np.zeros(len(self.engine.arms), np.int64),
-                waves=0,
-            )
-        cluster_ids = self.estimator.lookup_batch(embeddings)
-        schedule, weights, residual, wave_costs, empty, planned = self._batch_plan(
-            cluster_ids, budgets
+            return self._empty_result(budgets)
+        self.plans.refresh()
+        cluster_ids, sched_T, w_T, res_T, wc_T, empty, planned = self._plan_batch(
+            embeddings, budgets
         )
-        T = schedule.shape[1]
+        T = sched_T.shape[0]
         L = len(self.engine.arms)
         payloads = self.engine.prepare_payloads(queries)
 
-        # wave-major layouts: contiguous (B,) row per wave in the hot loop
-        sched_T = np.ascontiguousarray(schedule.T)
-        w_T = np.ascontiguousarray(weights.T)
-        res_T = np.ascontiguousarray(residual.T)
-        wc_T = np.ascontiguousarray(wave_costs.T)
+        # Speculative response gather: one heterogeneous-arm engine call for
+        # every scheduled (query, wave) cell. The device program then
+        # decides which cells the adaptive loop actually uses.
+        if self.engine.pooled:
+            # all-cells fast path: responses for unscheduled (-1) cells are
+            # drawn on arm 0 and never read — the stop rule fires on the
+            # schedule itself before any such prefix is gathered — which
+            # avoids the nonzero/compact/scatter round-trip entirely.
+            resp_T = self.engine.invoke_grid(sched_T, payloads)
+        else:
+            mask = sched_T >= 0
+            _, rows_b = np.nonzero(mask)
+            resp_T = np.full((T, B), -1, np.int64)
+            if rows_b.size:
+                resp_T[mask] = self.engine.invoke_rows(
+                    sched_T[mask], payloads, rows_b
+                )
+
+        # Pad to compile buckets so serving traffic with drifting batch
+        # sizes / plan depths reuses a handful of compiled programs; the
+        # whole pipeline is wave-major, so padding never transposes.
+        Bp, Tp = _bucket(B, base=8), _bucket(T, base=4)
+        sched_p = np.full((Tp, Bp), -1, np.int32)
+        sched_p[:T, :B] = sched_T
+        resp_p = np.full((Tp, Bp), -1, np.int32)
+        resp_p[:T, :B] = resp_T
+        w_p = np.zeros((Tp, Bp), np.float64)
+        w_p[:T, :B] = w_T
+        res_p = np.full((Tp, Bp), -np.inf, np.float64)
+        res_p[:T, :B] = res_T
+        empty_p = np.zeros(Bp, np.float64)
+        empty_p[:B] = empty
+
+        with enable_x64():
+            s_d, pred_d, beliefs_d = _wave_scan(
+                sched_p, resp_p, w_p, res_p, empty_p, float(stop_margin),
+                num_classes=K, use_kernel=self.use_kernel,
+            )
+            stop_wave = np.asarray(s_d)[:B]      # waves invoked per query
+            if rng is None:
+                predictions = np.asarray(pred_d, np.int64)[:B]
+            else:
+                beliefs = np.asarray(beliefs_d, np.float64)[:B]
+
+        invoked_T = np.arange(T)[:, None] < stop_wave[None, :]
+        costs = np.where(invoked_T, wc_T, 0.0).sum(axis=0)
+        responses_T = np.where(invoked_T, resp_T, -1)
+        arm_query_counts = np.bincount(sched_T[invoked_T], minlength=L)
+        if rng is not None:
+            predictions, _ = tie_break_argmax(beliefs, rng)
+        return RouteResult(
+            predictions=predictions,
+            costs=costs,
+            planned_costs=planned,
+            clusters=cluster_ids,
+            budgets=np.asarray(budgets),
+            schedule=sched_T.T,
+            responses=responses_T.T,
+            invoked=invoked_T.T,
+            arm_query_counts=arm_query_counts,
+            waves=int(invoked_T.any(axis=1).sum()),
+        )
+
+    # ------------------------------------------------------------------
+    def route_batch_reference(
+        self,
+        queries: Any,
+        embeddings: np.ndarray,
+        budget: Any,
+        stop_margin: float = STOP_MARGIN,
+        rng: Optional[np.random.Generator] = None,
+    ) -> RouteResult:
+        """Compacting host-side wavefront (the PR 1 engine) — the semantics
+        reference the jitted :meth:`route_batch` is equivalence-tested
+        against, and the production path for pools where speculative
+        invocation costs real money.
+
+        Stopped queries are dropped from the in-flight index set each wave,
+        so wave t only touches (and only *invokes*) the queries still in
+        flight; belief state is a float64 (B, K) scatter table (or the
+        Pallas kernel under ``use_kernel=True``).
+        """
+        B = len(queries)
+        K = self.num_classes
+        budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
+        if B == 0:
+            return self._empty_result(budgets)
+        self.plans.refresh()
+        # wave-major plan matrices: contiguous (B,) row per wave in the loop
+        cluster_ids, sched_T, w_T, res_T, wc_T, empty, planned = self._plan_batch(
+            embeddings, budgets
+        )
+        T = sched_T.shape[0]
+        L = len(self.engine.arms)
+        payloads = self.engine.prepare_payloads(queries)
+        weights = w_T.T                          # (B, T) view for the kernel
         resp_T = np.full((T, B), -1, np.int64)
 
         vote = np.zeros((B, K), np.float64)      # scatter-add log-weight table
@@ -296,7 +560,7 @@ class ThriftRouter:
             planned_costs=planned,
             clusters=cluster_ids,
             budgets=np.asarray(budgets),
-            schedule=schedule,
+            schedule=sched_T.T,
             responses=responses,
             invoked=invoked,
             arm_query_counts=arm_query_counts,
@@ -304,7 +568,7 @@ class ThriftRouter:
         )
 
     # ------------------------------------------------------------------
-    def route_batch_reference(
+    def route_batch_sequential(
         self,
         queries: Any,
         embeddings: np.ndarray,
@@ -313,21 +577,23 @@ class ThriftRouter:
     ) -> RouteResult:
         """Sequential oracle: one ``adaptive_invoke`` per query.
 
-        The semantics source for :meth:`route_batch` (equivalence-tested in
-        ``tests/test_router_batched.py``) and the baseline of the serving
-        throughput benchmark. Shares the selection cache with the batched
-        path, so both route the same selected sets.
+        The per-query semantics source both batched paths are
+        equivalence-tested against (``tests/test_router_batched.py``) and
+        the baseline of the serving throughput benchmark. Shares the plan
+        service's selection cache, so all paths route the same selected
+        sets.
 
         Exact output equality with :meth:`route_batch` holds for
         *deterministic* arms (responses a pure function of (arm, query),
         e.g. the test TabularArm or LMArm). Stochastic ``OracleArm`` pools
-        consume different rng streams on the two paths (pooled
+        consume different rng streams on the batched paths (pooled
         ``invoke_rows`` draws vs per-arm draws here), so per-seed
         realizations differ even though the distributions match.
         """
         B = len(queries)
         K = self.num_classes
         budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
+        self.plans.refresh()
         cluster_ids = self.estimator.lookup_batch(embeddings)
         L = len(self.engine.arms)
 

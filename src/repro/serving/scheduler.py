@@ -37,6 +37,27 @@ class BatchScheduler:
         self._queue: List[Request] = []
         self.mitigator = StragglerMitigator(num_workers=len(router.engine.arms))
         self.stats: Dict[str, float] = {"batches": 0, "requests": 0, "flushes": 0}
+        self._sync_plan_stats()
+
+    def _sync_plan_stats(self):
+        """Mirror the router's PlanService counters into ``stats`` so the
+        serving control plane sees plan-cache hit/miss/invalidation rates
+        without reaching into router internals."""
+        plans = getattr(self.router, "plans", None)
+        if plans is not None:
+            self.stats.update(plans.stats())
+
+    def prewarm(self, budgets: Optional[List[float]] = None) -> int:
+        """Precompute wave plans ahead of traffic (delegates to the
+        router's PlanService): with ``budgets``, plan every known cluster at
+        each budget; without, re-plan the hottest observed pairs. Returns
+        the number of plans built."""
+        plans = getattr(self.router, "plans", None)
+        if plans is None:
+            return 0
+        built = plans.prewarm(budgets=budgets)
+        self._sync_plan_stats()
+        return built
 
     def submit(self, req: Request):
         self._queue.append(req)
@@ -74,4 +95,5 @@ class BatchScheduler:
         self.stats["batches"] += len(np.unique(budgets))
         self.stats["flushes"] += 1
         self.stats["requests"] += len(batch)
+        self._sync_plan_stats()
         return [(batch, res)]

@@ -1,0 +1,182 @@
+"""PlanService: hit/miss accounting, prewarm, invalidation on pool change."""
+import dataclasses
+
+import numpy as np
+
+from repro.core.clustering import kmeans
+from repro.core.estimation import SuccessProbEstimator
+from repro.data import OracleWorkload
+from repro.serving import (
+    BatchScheduler,
+    PlanService,
+    PoolEngine,
+    Request,
+    ThriftRouter,
+)
+
+
+@dataclasses.dataclass
+class TabularArm:
+    name: str
+    cost: float
+    resp: np.ndarray
+
+    def classify_batch(self, queries) -> np.ndarray:
+        return self.resp[np.asarray(queries, np.int64)]
+
+    def latency_s(self, batch: int) -> float:
+        return 1e-6 * self.cost * batch
+
+
+def _make(K=4, L=8, clusters=5, B=64, seed=3):
+    wl = OracleWorkload(num_classes=K, num_clusters=clusters, num_arms=L, seed=seed)
+    T, emb, _ = wl.response_table(60 * clusters, seed=seed + 1)
+    assign, _ = kmeans(emb, clusters, seed=0)
+    est = SuccessProbEstimator(T, emb, assign)
+    rng = np.random.default_rng(seed + 2)
+    qcid, qemb, qlab = wl.sample_queries(B, rng)
+    R = np.stack(
+        [
+            wl.invoke_batch(a, qcid, qlab, np.random.default_rng(seed + 100 + a))
+            for a in range(L)
+        ]
+    )
+    engine = PoolEngine(
+        [TabularArm(f"t{a}", float(wl.costs[a]), R[a]) for a in range(L)]
+    )
+    router = ThriftRouter(engine, est, num_classes=K)
+    return est, engine, router, qemb
+
+
+def test_plan_cache_hits_and_misses():
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    B = qemb.shape[0]
+    router.route_batch(np.arange(B), qemb, budget)
+    s1 = router.plans.stats()
+    assert s1["plan_misses"] > 0                       # cold cache built plans
+    assert s1["plan_misses"] == s1["plan_cache_size"]
+    router.route_batch(np.arange(B), qemb, budget)
+    s2 = router.plans.stats()
+    assert s2["plan_misses"] == s1["plan_misses"]      # warm: no new builds
+    assert s2["plan_hits"] > s1["plan_hits"]
+    assert s2["plan_cache_size"] == s1["plan_cache_size"]
+
+
+def test_prewarm_ahead_of_traffic_and_hot_pairs():
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    built = router.plans.prewarm(budgets=[budget])
+    assert built == len(est.clusters)                  # every cluster planned
+    B = qemb.shape[0]
+    router.route_batch(np.arange(B), qemb, budget)
+    s = router.plans.stats()
+    assert s["plan_misses"] == 0                       # traffic fully warm
+    assert s["plan_hits"] > 0
+    hot = router.plans.hot_pairs(3)
+    assert hot and all(b == budget for _, b in hot)
+    # explicit-pairs mode builds exactly the requested plans
+    other = budget * 1.5
+    assert router.plans.prewarm(pairs=[(hot[0][0], other)]) == 1
+
+
+def test_invalidation_on_pool_change():
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    B = qemb.shape[0]
+    res_before = router.route_batch(np.arange(B), qemb, budget)
+    size_before = router.plans.stats()["plan_cache_size"]
+    assert size_before > 0
+
+    # re-price the cheapest arm above the budget: stale plans must not serve
+    cheap = int(np.argmin(engine.costs))
+    engine.arms[cheap].cost = budget * 10.0
+    res_after = router.route_batch(np.arange(B), qemb, budget)
+    s = router.plans.stats()
+    assert s["plan_invalidations"] == 1
+    assert s["plan_cache_size"] > 0                    # rebuilt, not stale
+    assert all(cheap not in used for used in res_after.arms_used)
+    assert any(cheap in used for used in res_before.arms_used)
+    # selector snapshot re-pulled: budgets enforced against the new price
+    assert (res_after.costs <= budget + 1e-12).all()
+    # no further invalidation while the pool stays put
+    router.route_batch(np.arange(B), qemb, budget)
+    assert router.plans.stats()["plan_invalidations"] == 1
+
+
+def test_prewarm_hot_pairs_survive_cost_invalidation():
+    """No-arg prewarm after a re-pricing must rebuild the hottest pairs —
+    the hot-pair snapshot is taken before the caches invalidate."""
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    B = qemb.shape[0]
+    router.route_batch(np.arange(B), qemb, budget)
+    hot = set(router.plans.hot_pairs(16))
+    assert hot
+    engine.arms[0].cost = engine.arms[0].cost * 3.0   # re-price -> invalidate
+    built = router.plans.prewarm()
+    assert built == len(hot)                          # hot pairs re-planned
+    assert router.plans.stats()["plan_invalidations"] == 1
+    # the following batch routes entirely from the prewarmed cache
+    before = router.plans.stats()["plan_misses"]
+    router.route_batch(np.arange(B), qemb, budget)
+    assert router.plans.stats()["plan_misses"] == before
+
+
+def test_single_cluster_update_keeps_other_plans():
+    """Re-estimating one cluster invalidates only that cluster's plans;
+    the rest of the cache keeps hitting (per-cluster p-digest keys)."""
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    B = qemb.shape[0]
+    router.route_batch(np.arange(B), qemb, budget)
+    misses_before = router.plans.stats()["plan_misses"]
+    cid = int(next(iter(est.clusters)))
+    est.update(cid, np.ones((4, len(engine.arms))))   # recalibrate one cluster
+    router.route_batch(np.arange(B), qemb, budget)
+    s = router.plans.stats()
+    assert s["plan_invalidations"] == 1
+    assert s["plan_misses"] == misses_before + 1      # only cid re-planned
+
+
+def test_hot_pairs_track_traffic_through_fast_path():
+    """Uniform-budget batches route via cached BatchTables, yet hot-pair
+    counts must still reflect per-query traffic volume."""
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    B = qemb.shape[0]
+    for _ in range(3):
+        router.route_batch(np.arange(B), qemb, budget)
+    counts = router.plans._pair_counts
+    assert sum(counts.values()) >= 3 * B              # per-query, not per-batch
+    top_cluster = router.plans.hot_pairs(1)[0][0]
+    idx = est.lookup_batch_indices(qemb)
+    busiest = int(est.cluster_order[np.argmax(np.bincount(idx))])
+    assert top_cluster == busiest
+
+
+def test_shared_plan_service_across_routers():
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    B = qemb.shape[0]
+    router.route_batch(np.arange(B), qemb, budget)
+    misses = router.plans.stats()["plan_misses"]
+    # a second router bound to the same pool reuses the shared plans
+    router2 = ThriftRouter(engine, est, num_classes=4, plan_service=router.plans)
+    router2.route_batch(np.arange(B), qemb, budget)
+    assert router.plans.stats()["plan_misses"] == misses
+
+
+def test_scheduler_exposes_plan_stats_and_prewarm():
+    est, engine, router, qemb = _make(B=16)
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    sched = BatchScheduler(router, max_batch=16, max_wait_s=0.0)
+    assert "plan_hits" in sched.stats and "plan_misses" in sched.stats
+    built = sched.prewarm(budgets=[budget])
+    assert built == len(est.clusters)
+    for i in range(16):
+        sched.submit(Request(payload=i, embedding=qemb[i], budget=budget))
+    sched.flush()
+    assert sched.stats["plan_misses"] == 0             # prewarmed
+    assert sched.stats["plan_hits"] > 0
+    assert sched.stats["plan_cache_size"] >= built

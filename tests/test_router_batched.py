@@ -1,10 +1,13 @@
-"""Batched wavefront router vs the sequential per-query reference.
+"""Batched wavefront router (jitted + compacting) vs per-query references.
 
-The vectorized engine must return *identical* predictions, per-query costs,
-and arms-used as a loop calling ``adaptive_invoke`` once per query, across
+Three implementations must agree exactly on deterministic pools:
+``route_batch`` (the on-device jitted scan), ``route_batch_reference`` (the
+compacting host wavefront) and a loop calling ``adaptive_invoke`` once per
+query — identical predictions, per-query costs and arms-used, across
 heterogeneous (K, budget, cluster) mixes. Determinism comes from tabular
-arms: each arm's response to query j is precomputed, so invocation order and
-batching cannot change what any arm answers.
+arms: each arm's response to query j is precomputed, so invocation order,
+batching and speculative response gathering cannot change what any arm
+answers.
 """
 import dataclasses
 
@@ -103,16 +106,67 @@ def test_batched_matches_sequential_reference(K, L, clusters, B, seed, quantiles
     np.testing.assert_array_equal(res.arm_query_counts, total)
 
 
+@pytest.mark.parametrize("K,L,clusters,B,seed,quantiles", MIXES)
+def test_jitted_matches_compacting_reference(K, L, clusters, B, seed, quantiles):
+    """route_batch (jitted scan) == route_batch_reference (compacting loop)
+    on every output, including the invoked mask and arm accounting."""
+    wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+    rng = np.random.default_rng(seed + 5)
+    levels = np.quantile(engine.costs, quantiles) * 2.5
+    budgets = rng.choice(levels, size=B)
+    res = router.route_batch(np.arange(B), qemb, budgets)
+    ref = router.route_batch_reference(np.arange(B), qemb, budgets)
+    np.testing.assert_array_equal(res.predictions, ref.predictions)
+    np.testing.assert_allclose(res.costs, ref.costs, rtol=1e-12, atol=0)
+    np.testing.assert_allclose(res.planned_costs, ref.planned_costs, rtol=1e-12, atol=0)
+    np.testing.assert_array_equal(res.invoked, ref.invoked)
+    np.testing.assert_array_equal(res.arm_query_counts, ref.arm_query_counts)
+    assert res.arms_used == ref.arms_used
+    assert res.waves == ref.waves
+
+
 @pytest.mark.parametrize("K,L,clusters,B,seed,quantiles", MIXES[:1])
 def test_reference_route_batch_agrees(K, L, clusters, B, seed, quantiles):
-    """route_batch_reference (engine-backed loop) == batched route_batch."""
+    """All three paths agree: jitted == compacting == per-query sequential."""
     wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
     budget = float(np.quantile(engine.costs, 0.6)) * 2
     res = router.route_batch(np.arange(B), qemb, budget)
     ref = router.route_batch_reference(np.arange(B), qemb, budget)
-    np.testing.assert_array_equal(res.predictions, ref.predictions)
-    np.testing.assert_allclose(res.costs, ref.costs, rtol=1e-12, atol=0)
-    assert res.arms_used == ref.arms_used
+    seq = router.route_batch_sequential(np.arange(B), qemb, budget)
+    for other in (ref, seq):
+        np.testing.assert_array_equal(res.predictions, other.predictions)
+        np.testing.assert_allclose(res.costs, other.costs, rtol=1e-12, atol=0)
+        assert res.arms_used == other.arms_used
+
+
+def test_jit_waves_false_dispatches_to_reference():
+    K, L, clusters, B, seed = 4, 8, 5, 48, 3
+    wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+    router_ref = ThriftRouter(engine, est, num_classes=K, jit_waves=False)
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    res = router.route_batch(np.arange(B), qemb, budget)
+    res_ref = router_ref.route_batch(np.arange(B), qemb, budget)
+    np.testing.assert_array_equal(res.predictions, res_ref.predictions)
+    np.testing.assert_allclose(res.costs, res_ref.costs, rtol=1e-12, atol=0)
+    assert res.arms_used == res_ref.arms_used
+
+
+def test_kernel_backend_matches_on_jitted_and_reference_paths():
+    """use_kernel=True: the Pallas kernel dispatched from inside the jitted
+    scan agrees with the kernel-backed compacting loop and the numpy path."""
+    K, L, clusters, B, seed = 5, 12, 6, 96, 11
+    wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+    router_k = ThriftRouter(engine, est, num_classes=K, use_kernel=True)
+    rng = np.random.default_rng(seed + 5)
+    budgets = rng.choice(np.quantile(engine.costs, [0.3, 0.8]) * 2.5, size=B)
+    res_k = router_k.route_batch(np.arange(B), qemb, budgets)
+    ref_k = router_k.route_batch_reference(np.arange(B), qemb, budgets)
+    res = router.route_batch(np.arange(B), qemb, budgets)
+    np.testing.assert_array_equal(res_k.predictions, ref_k.predictions)
+    np.testing.assert_allclose(res_k.costs, ref_k.costs, rtol=1e-12, atol=0)
+    assert res_k.arms_used == ref_k.arms_used
+    np.testing.assert_array_equal(res_k.predictions, res.predictions)
+    assert res_k.arms_used == res.arms_used
 
 
 def test_kernel_backend_matches_numpy_backend():
