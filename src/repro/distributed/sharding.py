@@ -227,3 +227,23 @@ def batch_specs(batch_tree: Any, rules: AxisRules) -> Any:
 
 def replicated(tree: Any, rules: AxisRules) -> Any:
     return jax.tree.map(lambda _: NamedSharding(rules.mesh, P()), tree)
+
+
+def constrain_params(tree: Any) -> Any:
+    """Pin a parameter/optimizer pytree to its canonical :func:`param_specs`
+    layout under the active rules; identity when no rules are active.
+
+    Applied to train-step *outputs*: without an output pin, XLA is free to
+    pick a different layout for an output leaf than ``param_specs`` assigned
+    the matching input (e.g. replicating a small norm vector on the way in
+    but sharding it over ``model`` on the way out). The next call of a step
+    function jitted with explicit ``in_shardings`` then rejects the
+    now-mismatched committed argument instead of resharding it — which is
+    exactly what broke step 2 of the elastic re-mesh restart path.
+    """
+    r = _ACTIVE
+    if r is None:
+        return tree
+    return jax.tree.map(
+        jax.lax.with_sharding_constraint, tree, param_specs(tree, r)
+    )

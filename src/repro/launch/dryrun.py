@@ -33,6 +33,7 @@ from repro.launch.roofline import (
     model_flops,
     roofline_terms,
     wire_bytes_per_chip,
+    xla_cost_analysis,
 )
 from repro.launch.specs import batch_specs_for, decode_specs_for
 from repro.models import LM, SHAPES, shape_applicable
@@ -129,7 +130,7 @@ def dryrun_cell(
     t_compile = time.time() - t0
 
     mem = _mem_summary(compiled.memory_analysis())
-    cost = dict(compiled.cost_analysis() or {})
+    cost = xla_cost_analysis(compiled)
     text = compiled.as_text()
     colls = hlo_collective_bytes(text)
 

@@ -37,6 +37,31 @@ _DTYPE_BYTES = {
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Version-proof reader for ``compiled.cost_analysis()``.
+
+    Across jaxlib releases this API has returned a flat dict of counters, a
+    *list* of per-computation dicts (so ``cost_analysis()["flops"]`` raises
+    ``TypeError: list indices must be integers``), or None. Normalize to one
+    flat {counter: float} mapping: dicts pass through, list entries are
+    summed key-wise (the common single-entry list is therefore a
+    passthrough too). Every read of ``cost_analysis()`` in this repo must go
+    through this shim.
+    """
+    analysis = compiled.cost_analysis()
+    if analysis is None:
+        return {}
+    if isinstance(analysis, dict):
+        return {k: float(v) for k, v in analysis.items()
+                if isinstance(v, (int, float))}
+    out: Dict[str, float] = {}
+    for entry in analysis:
+        for k, v in dict(entry).items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + float(v)
+    return out
+
+
 def _shape_bytes(type_str: str) -> int:
     """bytes of an HLO type string; tuples sum their elements."""
     total = 0

@@ -1,8 +1,15 @@
 """Serving launcher: stand up an oracle (or freshly-trained) pool, calibrate
-success probabilities, and route a stream of classification queries through
-the ThriftLLM router under a per-query budget.
+success probabilities, and serve a stream of classification queries through
+the continuous-batching front-end under a per-query budget.
+
+Requests arrive as a Poisson process at ``--qps`` (0 = as fast as possible),
+are admitted by the scheduler's arrival/SLO-aware flush policy, ride the
+pipelined budget-group waves, and complete through per-request futures; the
+run reports throughput, p50/p99 latency, accuracy, realized cost and which
+data plane (speculative jit vs compacting reference) served the traffic.
 
     PYTHONPATH=src python -m repro.launch.serve --queries 500 --budget 1e-4
+    PYTHONPATH=src python -m repro.launch.serve --qps 20000 --metered
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import numpy as np
 from repro.core.clustering import kmeans
 from repro.core.estimation import SuccessProbEstimator
 from repro.data import OracleWorkload
-from repro.serving import BatchScheduler, OracleArm, PoolEngine, Request, ThriftRouter
+from repro.serving import BatchScheduler, OracleArm, PoolEngine, ThriftRouter
 
 
 def main() -> None:
@@ -26,37 +33,83 @@ def main() -> None:
     ap.add_argument("--budget", type=float, default=1e-4)
     ap.add_argument("--history", type=int, default=2000)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="Poisson arrival rate; 0 = open the floodgates")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request completion SLO fed to the flush policy")
+    ap.add_argument("--metered", action="store_true",
+                    help="mark every arm as a metered API so the speculation "
+                         "switch picks the compacting reference plane")
     args = ap.parse_args()
 
     wl = OracleWorkload(
         num_classes=args.classes, num_clusters=args.clusters, num_arms=args.arms
     )
-    engine = PoolEngine([OracleArm(f"llm-{i}", wl, i) for i in range(args.arms)])
+    engine = PoolEngine(
+        [OracleArm(f"llm-{i}", wl, i, metered=args.metered)
+         for i in range(args.arms)]
+    )
     T, emb, _ = wl.response_table(args.history)
     assign, _ = kmeans(emb, args.clusters, seed=0)
     est = SuccessProbEstimator(T, emb, assign)
     router = ThriftRouter(engine, est, num_classes=args.classes)
-    sched = BatchScheduler(router, max_batch=args.max_batch, max_wait_s=0.0)
+    sched = BatchScheduler(
+        router, max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3
+    )
+    sched.prewarm(budgets=[args.budget])
 
     rng = np.random.default_rng(1)
     cid, qemb, labels = wl.sample_queries(args.queries, rng)
-    t0 = time.time()
-    for i in range(args.queries):
-        sched.submit(Request(payload=(cid[i], labels[i]), embedding=qemb[i], budget=args.budget))
+    payloads = np.column_stack([cid, labels])
+    slo_s = None if args.slo_ms is None else args.slo_ms / 1e3
 
-    n, correct, cost = 0, 0, 0.0
-    results = []
-    while sched.ready() or (n < args.queries and sched._queue):
-        for group, res in sched.flush():
-            for r, pred, c in zip(group, res.predictions, res.costs):
-                correct += int(pred == r.payload[1])
-                cost += c
-                n += 1
-    dt = time.time() - t0
+    t0 = time.monotonic()
+    blocks = []          # (BlockFuture, label slice) in submission order
+    if args.qps <= 0:
+        blocks.append((sched.submit_many(payloads, qemb, args.budget,
+                                         slo_s=slo_s), labels))
+        sched.drain()
+    else:
+        # Poisson arrivals: exponential gaps, submitted in the bursts the
+        # wall clock actually delivers (columnar blocks, like a real front
+        # door batching its accept loop).
+        arrivals = t0 + np.cumsum(
+            rng.exponential(1.0 / args.qps, args.queries)
+        )
+        sent = 0
+        while sent < args.queries:
+            now = time.monotonic()
+            due = int(np.searchsorted(arrivals, now, side="right"))
+            if due > sent:
+                blocks.append((
+                    sched.submit_many(
+                        payloads[sent:due], qemb[sent:due], args.budget,
+                        slo_s=slo_s, arrival_s=arrivals[sent:due],
+                    ),
+                    labels[sent:due],
+                ))
+                sent = due
+            sched.pump()
+        sched.drain()
+    dt = time.monotonic() - t0
+
+    preds = np.concatenate([b.predictions for b, _ in blocks])
+    lab = np.concatenate([l for _, l in blocks])
+    cost = np.concatenate([b.costs for b, _ in blocks])
+    n = int(sched.stats["completed"])
+    lat = sched.latency_stats()
+    st = sched.stats  # plan + speculation counters
     print(
-        f"routed {n} queries in {dt:.2f}s ({n/max(dt,1e-9):.0f} qps) | "
-        f"accuracy {correct/max(n,1):.3f} | mean cost {cost/max(n,1):.3e} "
-        f"(budget {args.budget:.0e}) | stragglers={sched.mitigator.stragglers()}"
+        f"served {n} queries in {dt:.2f}s ({n/max(dt,1e-9):.0f} qps) | "
+        f"p50 {1e3*lat.get('p50_s', 0):.2f}ms p99 {1e3*lat.get('p99_s', 0):.2f}ms | "
+        f"accuracy {(preds == lab).mean():.3f} | mean cost {cost.mean():.3e} "
+        f"(budget {args.budget:.0e}) | "
+        f"planes jit={st['spec_jit']} ref={st['spec_reference']} | "
+        f"flushes {st['flushes']} groups {st['batches']} | "
+        f"plan hit/miss {st['plan_hits']}/{st['plan_misses']} "
+        f"(prefetched {st['plan_prefetches']}) | "
+        f"stragglers={sched.mitigator.stragglers()}"
     )
 
 

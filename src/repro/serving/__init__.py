@@ -1,11 +1,19 @@
 """Serving runtime: arm engine, ThriftLLM router, plan service, scheduler."""
 from .engine import LMArm, OracleArm, PoolEngine, USD_PER_FLOP
 from .plans import GroupPlan, PlanService
-from .router import RouteResult, ThriftRouter
-from .scheduler import BatchScheduler, Request
+from .router import PendingRoute, RouteResult, ThriftRouter
+from .scheduler import (
+    BatchScheduler,
+    BlockFuture,
+    Request,
+    RequestFuture,
+    RequestResult,
+)
 
 __all__ = [
     "LMArm", "OracleArm", "PoolEngine", "USD_PER_FLOP",
     "GroupPlan", "PlanService",
-    "ThriftRouter", "RouteResult", "BatchScheduler", "Request",
+    "ThriftRouter", "RouteResult", "PendingRoute",
+    "BatchScheduler", "Request", "RequestFuture", "RequestResult",
+    "BlockFuture",
 ]

@@ -35,6 +35,9 @@ class LMArm:
     params: Any
     class_token_ids: np.ndarray
     tokens_per_query: int = 128
+    # Self-hosted model: invoking it costs FLOPs we already own, not metered
+    # API dollars — speculative invocation is free throughput.
+    metered: bool = False
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -61,10 +64,20 @@ class OracleArm:
     workload: Any
     arm_index: int
     seed: int = 0
+    # Set True to model a metered upstream API arm: every invocation bills
+    # real money, so the router's speculation switch (see
+    # ``ThriftRouter.begin_route``) must not gather its responses for waves
+    # the Prop. 4 stop rule may cancel.
+    metered: bool = False
 
     def __post_init__(self):
         self.cost = float(self.workload.costs[self.arm_index])
         self._rng = np.random.default_rng(self.seed + 7919 * self.arm_index)
+        # simulated per-query latency, snapshotted once (latency_s sits on
+        # the scheduler's per-flush accounting path)
+        self._lat_per_query = 1e-4 * self.cost / max(
+            float(self.workload.costs.min()), 1e-12
+        )
 
     def classify_batch(self, queries: Sequence) -> np.ndarray:
         """queries: sequence of (cluster_id, label) — fully vectorized so
@@ -73,7 +86,7 @@ class OracleArm:
         return self.workload.invoke_batch(self.arm_index, q[:, 0], q[:, 1], self._rng)
 
     def latency_s(self, batch: int) -> float:
-        return 1e-4 * self.cost / max(self.workload.costs.min(), 1e-12) * batch
+        return self._lat_per_query * batch
 
 
 @dataclasses.dataclass
@@ -108,6 +121,19 @@ class PoolEngine:
     @property
     def costs(self) -> np.ndarray:
         return np.asarray([a.cost for a in self.arms], np.float64)
+
+    @property
+    def metered_mask(self) -> np.ndarray:
+        """(L,) bool — arms whose invocations bill a metered upstream API.
+        Arms without a ``metered`` attribute count as unmetered (oracle /
+        tabular / self-hosted pools), so speculation stays free for them."""
+        return np.asarray(
+            [bool(getattr(a, "metered", False)) for a in self.arms], bool
+        )
+
+    @property
+    def any_metered(self) -> bool:
+        return bool(self.metered_mask.any())
 
     @property
     def pooled(self) -> bool:

@@ -139,6 +139,7 @@ class PlanService:
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        self.prefetches = 0
         self._cost_fp = self.engine.fingerprint()
         self._p_digests = self._cluster_digests()
         self._p_ids = self._cluster_ids_snapshot()
@@ -357,6 +358,36 @@ class PlanService:
                 built += 1
         return built
 
+    def prefetch_for(self, embeddings: np.ndarray, budgets: np.ndarray) -> int:
+        """Queue-composition plan prefetch: given the (embedding, budget)
+        columns of a *pending* request queue, map them to clusters and build
+        whatever (cluster, budget) plans the coming flush will need — plus
+        the stacked batch tables when the composition is uniform-budget (the
+        common serving case). Called by the scheduler while a batch is
+        accumulating, so SurGreedy selection latency is paid before the
+        flush deadline instead of on the routed batch. Returns the number
+        of plans built; counts them as prefetches, not misses.
+        """
+        self.refresh()
+        embeddings = np.asarray(embeddings, np.float64)
+        if embeddings.shape[0] == 0:
+            return 0
+        idx = self.estimator.lookup_batch_indices(embeddings)
+        cids = self.estimator.cluster_order[idx]
+        budgets = np.asarray(budgets, np.float64)
+        built = 0
+        for cid, budget in {
+            (int(c), float(b)) for c, b in zip(cids, budgets)
+        }:
+            key = self._plan_key(cid, budget)
+            if key not in self._cache:
+                self._cache[key] = self._build(cid, budget)
+                built += 1
+        self.prefetches += built
+        if (budgets == budgets[0]).all():
+            self.batch_tables(float(budgets[0]))
+        return built
+
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, int]:
         """Cache counters: hits/misses across lookups, invalidations, size."""
@@ -364,5 +395,6 @@ class PlanService:
             "plan_hits": self.hits,
             "plan_misses": self.misses,
             "plan_invalidations": self.invalidations,
+            "plan_prefetches": self.prefetches,
             "plan_cache_size": len(self._cache),
         }

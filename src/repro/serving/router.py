@@ -125,6 +125,12 @@ class RouteResult:
             ]
         return self._arms_used
 
+    @property
+    def stop_waves(self) -> np.ndarray:
+        """(B,) number of waves each query invoked before its Prop. 4 stop
+        fired (== the wave index at which its result became final)."""
+        return self.invoked.sum(axis=1)
+
 
 # ---------------------------------------------------------------------------
 # The on-device wave loop
@@ -234,6 +240,259 @@ def _wave_scan(
     # first-max argmax, identical to the host path's deterministic tie-break
     preds = jnp.argmax(beliefs, axis=-1)
     return s, preds, beliefs
+
+
+class PendingRoute:
+    """One in-flight batched route, created by :meth:`ThriftRouter.begin_route`.
+
+    Three kinds:
+
+    * ``"jit"`` — the speculative jitted wave loop. Planning, the
+      speculative response gather and the device dispatch already happened
+      in ``begin_route``; the device program may still be running when this
+      handle is returned (JAX dispatch is asynchronous), so a front-end can
+      overlap the next group's host-side planning/gather with this one's
+      device compute. ``result()`` blocks on the device values and
+      finalizes.
+    * ``"reference"`` — the compacting host wavefront, exposed wave by
+      wave: each ``step()`` call evaluates the Prop. 4 stop rule, retires
+      the queries whose stop fired (returning their rows — and, in
+      deterministic mode, their final predictions, which can never change
+      once a query stops voting), then invokes one wave of arms for the
+      queries still in flight. ``result()`` steps to exhaustion and
+      finalizes; outputs are bit-identical to the PR 1 loop.
+    * ``"empty"`` — a zero-query batch; ``result()`` is immediate.
+
+    The handle is single-use: ``result()`` caches and re-returns.
+    """
+
+    def __init__(self, router: "ThriftRouter", kind: str, result=None, **state):
+        self.router = router
+        self.kind = kind
+        self.spec_cost = state.pop("spec_cost", 0.0)
+        self._result: Optional[RouteResult] = result
+        if result is not None:
+            return
+        self.budgets = state.pop("budgets")
+        self.cluster_ids = state.pop("cluster_ids")
+        self.sched_T = state.pop("sched_T")
+        self.w_T = state.pop("w_T")
+        self.res_T = state.pop("res_T")
+        self.wc_T = state.pop("wc_T")
+        self.empty = state.pop("empty")
+        self.planned = state.pop("planned")
+        self.payloads = state.pop("payloads")
+        self.stop_margin = state.pop("stop_margin")
+        self.rng = state.pop("rng")
+        assert not state, f"unknown PendingRoute state {sorted(state)}"
+        self.B = int(self.budgets.shape[0])
+        self.T = int(self.sched_T.shape[0])
+        self.L = len(router.engine.arms)
+        if kind == "reference":
+            self._init_reference()
+
+    # ------------------------------------------------------------------
+    # jit kind: speculative gather + async device dispatch
+    # ------------------------------------------------------------------
+    def _dispatch_jit(self):
+        router, T, B = self.router, self.T, self.B
+        sched_T, payloads = self.sched_T, self.payloads
+        engine = router.engine
+        # Speculative response gather: one heterogeneous-arm engine call for
+        # every scheduled (query, wave) cell. The device program then
+        # decides which cells the adaptive loop actually uses.
+        if engine.pooled:
+            # all-cells fast path: responses for unscheduled (-1) cells are
+            # drawn on arm 0 and never read — the stop rule fires on the
+            # schedule itself before any such prefix is gathered — which
+            # avoids the nonzero/compact/scatter round-trip entirely.
+            resp_T = engine.invoke_grid(sched_T, payloads)
+        else:
+            mask = sched_T >= 0
+            _, rows_b = np.nonzero(mask)
+            resp_T = np.full((T, B), -1, np.int64)
+            if rows_b.size:
+                resp_T[mask] = engine.invoke_rows(sched_T[mask], payloads, rows_b)
+        self.resp_T = resp_T
+
+        # Pad to compile buckets so serving traffic with drifting batch
+        # sizes / plan depths reuses a handful of compiled programs; the
+        # whole pipeline is wave-major, so padding never transposes.
+        Bp, Tp = _bucket(B, base=8), _bucket(T, base=4)
+        sched_p = np.full((Tp, Bp), -1, np.int32)
+        sched_p[:T, :B] = sched_T
+        resp_p = np.full((Tp, Bp), -1, np.int32)
+        resp_p[:T, :B] = resp_T
+        w_p = np.zeros((Tp, Bp), np.float64)
+        w_p[:T, :B] = self.w_T
+        res_p = np.full((Tp, Bp), -np.inf, np.float64)
+        res_p[:T, :B] = self.res_T
+        empty_p = np.zeros(Bp, np.float64)
+        empty_p[:B] = self.empty
+
+        with enable_x64():
+            self._dev = _wave_scan(
+                sched_p, resp_p, w_p, res_p, empty_p, self.stop_margin,
+                num_classes=router.num_classes, use_kernel=router.use_kernel,
+            )
+
+    def ready(self) -> bool:
+        """Non-blocking: has the dispatched device program finished? Host-
+        driven kinds (reference/empty) are always ready."""
+        if self.kind != "jit" or self._result is not None:
+            return True
+        probe = getattr(self._dev[0], "is_ready", None)
+        return bool(probe()) if probe is not None else True
+
+    def _finalize_jit(self) -> RouteResult:
+        s_d, pred_d, beliefs_d = self._dev
+        B, T, L = self.B, self.T, self.L
+        stop_wave = np.asarray(s_d)[:B]          # waves invoked per query
+        if self.rng is None:
+            predictions = np.asarray(pred_d, np.int64)[:B]
+        else:
+            beliefs = np.asarray(beliefs_d, np.float64)[:B]
+            predictions, _ = tie_break_argmax(beliefs, self.rng)
+        invoked_T = np.arange(T)[:, None] < stop_wave[None, :]
+        costs = np.where(invoked_T, self.wc_T, 0.0).sum(axis=0)
+        responses_T = np.where(invoked_T, self.resp_T, -1)
+        arm_query_counts = np.bincount(self.sched_T[invoked_T], minlength=L)
+        return RouteResult(
+            predictions=predictions,
+            costs=costs,
+            planned_costs=self.planned,
+            clusters=self.cluster_ids,
+            budgets=np.asarray(self.budgets),
+            schedule=self.sched_T.T,
+            responses=responses_T.T,
+            invoked=invoked_T.T,
+            arm_query_counts=arm_query_counts,
+            waves=int(invoked_T.any(axis=1).sum()),
+        )
+
+    # ------------------------------------------------------------------
+    # reference kind: compacting wavefront, one step() per wave
+    # ------------------------------------------------------------------
+    def _init_reference(self):
+        B, K = self.B, self.router.num_classes
+        self.weights = self.w_T.T                # (B, T) view for the kernel
+        self.resp_T = np.full((self.T, B), -1, np.int64)
+        self.vote = np.zeros((B, K), np.float64)  # scatter-add log-weight table
+        self.voted = np.zeros((B, K), bool)       # any vote -> real belief
+        self.costs = np.zeros(B, np.float64)
+        self.arm_query_counts = np.zeros(self.L, np.int64)
+        self.cur = np.arange(B)                   # queries still in flight
+        self.waves = 0
+        self._t = 0
+        self._exhausted = False
+
+    def _beliefs_rows(self, rows: np.ndarray) -> np.ndarray:
+        router = self.router
+        if router.use_kernel:
+            # per-row independent contraction: feeding only in-flight rows
+            # gives identical beliefs at a fraction of the kernel work
+            return router._kernel_beliefs(
+                np.ascontiguousarray(self.resp_T.T[rows]),
+                self.weights[rows], self.empty[rows],
+            )
+        return np.where(
+            self.voted[rows], self.vote[rows], self.empty[rows][:, None]
+        )
+
+    @property
+    def exhausted(self) -> bool:
+        """True once every query has left the wavefront (reference kind)."""
+        return self.kind != "reference" or self._exhausted
+
+    def step(self):
+        """Advance the compacting wavefront one wave (reference kind only).
+
+        Returns ``(rows, predictions)`` for the queries that *completed*
+        this wave — their Prop. 4 stop fired, or the schedule ran out.
+        ``predictions`` carries their final class ids when no tie-break rng
+        is in play (a stopped query receives no further votes, so its
+        argmax is already final); with an rng it is None and every
+        prediction is drawn at finalization, preserving the one-shot path's
+        rng stream. After exhaustion returns empty rows.
+        """
+        assert self.kind == "reference", "step() is for reference routes"
+        K = self.router.num_classes
+        if self._exhausted:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        cur, t = self.cur, self._t
+        bel = self._beliefs_rows(cur)
+        if t >= self.T:
+            # schedule exhausted: everything still in flight completes now
+            self._exhausted = True
+            self.cur = np.zeros(0, np.int64)
+            preds = tie_break_argmax(bel)[0] if self.rng is None else None
+            return cur, preds
+        # Prop. 4 early-stop on the in-flight set, one mask per wave
+        if K >= 2:
+            part = np.partition(bel, K - 2, axis=1)
+            h1, h2 = part[:, K - 1], part[:, K - 2]
+        else:
+            h1, h2 = bel[:, 0], np.full(cur.size, -np.inf)
+        sched_t = self.sched_T[t]
+        keep = (sched_t[cur] >= 0) & (
+            self.res_T[t][cur] + h2 > h1 - self.stop_margin
+        )
+        stopped = cur[~keep]
+        preds = None
+        if self.rng is None and stopped.size:
+            preds = tie_break_argmax(bel[~keep])[0]
+        elif self.rng is None:
+            preds = np.zeros(0, np.int64)
+        self.cur = cur = cur[keep]
+        self._t = t + 1
+        if cur.size == 0:
+            self._exhausted = True
+            return stopped, preds
+        self.waves += 1
+        arms_t = sched_t[cur]
+        votes = self.router.engine.invoke_rows(arms_t, self.payloads, cur)
+        self.arm_query_counts += np.bincount(arms_t, minlength=self.L)
+        self.vote[cur, votes] += self.w_T[t][cur]
+        self.voted[cur, votes] = True
+        self.costs[cur] += self.wc_T[t][cur]
+        self.resp_T[t][cur] = votes
+        return stopped, preds
+
+    def _finalize_reference(self) -> RouteResult:
+        while not self._exhausted:
+            self.step()
+        responses = np.ascontiguousarray(self.resp_T.T)
+        if self.router.use_kernel:
+            beliefs = self.router._kernel_beliefs(
+                responses, self.weights, self.empty
+            )
+        else:
+            beliefs = np.where(self.voted, self.vote, self.empty[:, None])
+        predictions, _ = tie_break_argmax(beliefs, self.rng)
+        invoked = responses >= 0
+        return RouteResult(
+            predictions=predictions,
+            costs=self.costs,
+            planned_costs=self.planned,
+            clusters=self.cluster_ids,
+            budgets=np.asarray(self.budgets),
+            schedule=self.sched_T.T,
+            responses=responses,
+            invoked=invoked,
+            arm_query_counts=self.arm_query_counts,
+            waves=self.waves,
+        )
+
+    # ------------------------------------------------------------------
+    def result(self) -> RouteResult:
+        """Block until the route completes and return its RouteResult
+        (cached — safe to call repeatedly)."""
+        if self._result is None:
+            self._result = (
+                self._finalize_jit() if self.kind == "jit"
+                else self._finalize_reference()
+            )
+        return self._result
 
 
 class ThriftRouter:
@@ -371,6 +630,97 @@ class ThriftRouter:
         return np.asarray(bel, np.float64)
 
     # ------------------------------------------------------------------
+    # Cost metadata for the speculation switch
+    # ------------------------------------------------------------------
+    def speculation_cost(self, sched_T: np.ndarray, wc_T: np.ndarray) -> float:
+        """Mean per-query USD the speculative all-cells gather would bill to
+        *metered* arms over and above what any query could ever realize.
+
+        The jitted path invokes every scheduled (query, wave) cell up front;
+        the compacting reference only invokes waves the Prop. 4 stop rule
+        lets run. The worst-case marginal exposure of speculating is
+        therefore the full scheduled spend on metered arms (the realized
+        part is paid either way; everything else is at risk of being pure
+        waste). Unmetered arms (oracle / tabular / self-hosted) bill
+        nothing real, so their speculative work is free throughput and
+        contributes zero.
+        """
+        metered = self.engine.metered_mask
+        if not metered.any():
+            return 0.0
+        billed = (sched_T >= 0) & metered[np.maximum(sched_T, 0)]
+        return float(np.where(billed, wc_T, 0.0).sum() / max(sched_T.shape[1], 1))
+
+    # ------------------------------------------------------------------
+    # begin/step/finalize routing: the serving front-end's data plane
+    # ------------------------------------------------------------------
+    def begin_route(
+        self,
+        queries: Any,                    # arm-payloads, len B (array or list)
+        embeddings: np.ndarray,          # (B, d)
+        budget: Any,                     # scalar or (B,) per-query budgets
+        stop_margin: float = STOP_MARGIN,
+        rng: Optional[np.random.Generator] = None,
+        mode: str = "auto",
+        speculation_threshold: float = 0.0,
+    ) -> "PendingRoute":
+        """Start routing a batch and return a :class:`PendingRoute` handle.
+
+        This is the non-blocking half of :meth:`route_batch`: planning, the
+        speculation-mode decision and (for the jitted mode) the speculative
+        response gather + device dispatch all happen here; blocking
+        finalization is deferred to ``PendingRoute.result()``. A serving
+        front-end can therefore dispatch group *t+1* while group *t*'s
+        jitted program is still running on device (double-buffered wave
+        pipelining), or advance a reference-mode group wave by wave via
+        ``PendingRoute.step()`` and complete per-query futures as each
+        query's stop wave fires.
+
+        Args:
+          mode: ``"jit"`` forces the speculative jitted wave loop,
+            ``"reference"`` the compacting host wavefront, and ``"auto"``
+            — the cost-aware speculation switch — picks ``jit`` when
+            :meth:`speculation_cost` (mean per-query USD at risk on metered
+            arms) is at most ``speculation_threshold`` and falls back to
+            ``reference`` for metered/expensive pools.
+          speculation_threshold: USD per query the switch may gamble on
+            speculative metered invocations. The default 0.0 speculates
+            only when speculation is entirely free (no metered arm is
+            scheduled).
+        """
+        B = len(queries)
+        budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
+        if B == 0:
+            return PendingRoute(self, "empty", result=self._empty_result(budgets))
+        self.plans.refresh()
+        cluster_ids, sched_T, w_T, res_T, wc_T, empty, planned = self._plan_batch(
+            embeddings, budgets
+        )
+        spec_cost = self.speculation_cost(sched_T, wc_T)
+        if mode == "auto":
+            # a router pinned to the reference plane (jit_waves=False — the
+            # pre-metered-flag way to forbid speculation) keeps it under
+            # auto, regardless of per-arm flags
+            if not self.jit_waves or spec_cost > speculation_threshold:
+                kind = "reference"
+            else:
+                kind = "jit"
+        elif mode in ("jit", "reference"):
+            kind = mode
+        else:
+            raise ValueError(f"unknown route mode {mode!r}")
+        pending = PendingRoute(
+            self, kind,
+            budgets=budgets, cluster_ids=cluster_ids, sched_T=sched_T,
+            w_T=w_T, res_T=res_T, wc_T=wc_T, empty=empty, planned=planned,
+            payloads=self.engine.prepare_payloads(queries),
+            stop_margin=float(stop_margin), rng=rng, spec_cost=spec_cost,
+        )
+        if kind == "jit":
+            pending._dispatch_jit()
+        return pending
+
+    # ------------------------------------------------------------------
     def route_batch(
         self,
         queries: Any,                    # arm-payloads, len B (array or list)
@@ -384,10 +734,12 @@ class ThriftRouter:
 
         With ``jit_waves=True`` (default) every scheduled (query, wave)
         response is fetched in a single heterogeneous engine call and the
-        whole adaptive loop runs as one jitted ``lax.scan``; with
+        whole adaptive loop runs as one jitted program; with
         ``jit_waves=False`` this delegates to the compacting
         :meth:`route_batch_reference`. Both return identical
-        predictions/costs/arms-used for deterministic arm pools.
+        predictions/costs/arms-used for deterministic arm pools. The
+        synchronous convenience wrapper over :meth:`begin_route` +
+        ``PendingRoute.result()``.
 
         Args:
           queries: per-arm payloads (tokens, (cluster, label) pairs, ...).
@@ -396,85 +748,11 @@ class ThriftRouter:
           stop_margin: Prop. 4 slack; keep the default for paper semantics.
           rng: optional generator for belief-tie breaking (None = argmax).
         """
-        if not self.jit_waves:
-            return self.route_batch_reference(
-                queries, embeddings, budget, stop_margin=stop_margin, rng=rng
-            )
-        B = len(queries)
-        K = self.num_classes
-        budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
-        if B == 0:
-            return self._empty_result(budgets)
-        self.plans.refresh()
-        cluster_ids, sched_T, w_T, res_T, wc_T, empty, planned = self._plan_batch(
-            embeddings, budgets
-        )
-        T = sched_T.shape[0]
-        L = len(self.engine.arms)
-        payloads = self.engine.prepare_payloads(queries)
-
-        # Speculative response gather: one heterogeneous-arm engine call for
-        # every scheduled (query, wave) cell. The device program then
-        # decides which cells the adaptive loop actually uses.
-        if self.engine.pooled:
-            # all-cells fast path: responses for unscheduled (-1) cells are
-            # drawn on arm 0 and never read — the stop rule fires on the
-            # schedule itself before any such prefix is gathered — which
-            # avoids the nonzero/compact/scatter round-trip entirely.
-            resp_T = self.engine.invoke_grid(sched_T, payloads)
-        else:
-            mask = sched_T >= 0
-            _, rows_b = np.nonzero(mask)
-            resp_T = np.full((T, B), -1, np.int64)
-            if rows_b.size:
-                resp_T[mask] = self.engine.invoke_rows(
-                    sched_T[mask], payloads, rows_b
-                )
-
-        # Pad to compile buckets so serving traffic with drifting batch
-        # sizes / plan depths reuses a handful of compiled programs; the
-        # whole pipeline is wave-major, so padding never transposes.
-        Bp, Tp = _bucket(B, base=8), _bucket(T, base=4)
-        sched_p = np.full((Tp, Bp), -1, np.int32)
-        sched_p[:T, :B] = sched_T
-        resp_p = np.full((Tp, Bp), -1, np.int32)
-        resp_p[:T, :B] = resp_T
-        w_p = np.zeros((Tp, Bp), np.float64)
-        w_p[:T, :B] = w_T
-        res_p = np.full((Tp, Bp), -np.inf, np.float64)
-        res_p[:T, :B] = res_T
-        empty_p = np.zeros(Bp, np.float64)
-        empty_p[:B] = empty
-
-        with enable_x64():
-            s_d, pred_d, beliefs_d = _wave_scan(
-                sched_p, resp_p, w_p, res_p, empty_p, float(stop_margin),
-                num_classes=K, use_kernel=self.use_kernel,
-            )
-            stop_wave = np.asarray(s_d)[:B]      # waves invoked per query
-            if rng is None:
-                predictions = np.asarray(pred_d, np.int64)[:B]
-            else:
-                beliefs = np.asarray(beliefs_d, np.float64)[:B]
-
-        invoked_T = np.arange(T)[:, None] < stop_wave[None, :]
-        costs = np.where(invoked_T, wc_T, 0.0).sum(axis=0)
-        responses_T = np.where(invoked_T, resp_T, -1)
-        arm_query_counts = np.bincount(sched_T[invoked_T], minlength=L)
-        if rng is not None:
-            predictions, _ = tie_break_argmax(beliefs, rng)
-        return RouteResult(
-            predictions=predictions,
-            costs=costs,
-            planned_costs=planned,
-            clusters=cluster_ids,
-            budgets=np.asarray(budgets),
-            schedule=sched_T.T,
-            responses=responses_T.T,
-            invoked=invoked_T.T,
-            arm_query_counts=arm_query_counts,
-            waves=int(invoked_T.any(axis=1).sum()),
-        )
+        mode = "jit" if self.jit_waves else "reference"
+        return self.begin_route(
+            queries, embeddings, budget, stop_margin=stop_margin, rng=rng,
+            mode=mode,
+        ).result()
 
     # ------------------------------------------------------------------
     def route_batch_reference(
@@ -493,79 +771,14 @@ class ThriftRouter:
         Stopped queries are dropped from the in-flight index set each wave,
         so wave t only touches (and only *invokes*) the queries still in
         flight; belief state is a float64 (B, K) scatter table (or the
-        Pallas kernel under ``use_kernel=True``).
+        Pallas kernel under ``use_kernel=True``). Implemented as
+        :meth:`begin_route` with ``mode="reference"`` stepped to
+        completion.
         """
-        B = len(queries)
-        K = self.num_classes
-        budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
-        if B == 0:
-            return self._empty_result(budgets)
-        self.plans.refresh()
-        # wave-major plan matrices: contiguous (B,) row per wave in the loop
-        cluster_ids, sched_T, w_T, res_T, wc_T, empty, planned = self._plan_batch(
-            embeddings, budgets
-        )
-        T = sched_T.shape[0]
-        L = len(self.engine.arms)
-        payloads = self.engine.prepare_payloads(queries)
-        weights = w_T.T                          # (B, T) view for the kernel
-        resp_T = np.full((T, B), -1, np.int64)
-
-        vote = np.zeros((B, K), np.float64)      # scatter-add log-weight table
-        voted = np.zeros((B, K), bool)           # any vote -> real belief
-        costs = np.zeros(B, np.float64)
-        arm_query_counts = np.zeros(L, np.int64)
-        cur = np.arange(B)                       # queries still in flight
-        waves = 0
-
-        for t in range(T):
-            # Prop. 4 early-stop on the in-flight set, one mask per wave
-            if self.use_kernel:
-                # per-row independent contraction: feeding only in-flight rows
-                # gives identical beliefs at a fraction of the kernel work
-                bel = self._kernel_beliefs(
-                    np.ascontiguousarray(resp_T.T[cur]), weights[cur], empty[cur]
-                )
-            else:
-                bel = np.where(voted[cur], vote[cur], empty[cur][:, None])
-            if K >= 2:
-                part = np.partition(bel, K - 2, axis=1)
-                h1, h2 = part[:, K - 1], part[:, K - 2]
-            else:
-                h1, h2 = bel[:, 0], np.full(cur.size, -np.inf)
-            sched_t = sched_T[t]
-            keep = (sched_t[cur] >= 0) & (res_T[t][cur] + h2 > h1 - stop_margin)
-            cur = cur[keep]
-            if cur.size == 0:
-                break
-            waves += 1
-            arms_t = sched_t[cur]
-            votes = self.engine.invoke_rows(arms_t, payloads, cur)
-            arm_query_counts += np.bincount(arms_t, minlength=L)
-            vote[cur, votes] += w_T[t][cur]
-            voted[cur, votes] = True
-            costs[cur] += wc_T[t][cur]
-            resp_T[t][cur] = votes
-
-        responses = np.ascontiguousarray(resp_T.T)
-        if self.use_kernel:
-            beliefs = self._kernel_beliefs(responses, weights, empty)
-        else:
-            beliefs = np.where(voted, vote, empty[:, None])
-        predictions, _ = tie_break_argmax(beliefs, rng)
-        invoked = responses >= 0
-        return RouteResult(
-            predictions=predictions,
-            costs=costs,
-            planned_costs=planned,
-            clusters=cluster_ids,
-            budgets=np.asarray(budgets),
-            schedule=sched_T.T,
-            responses=responses,
-            invoked=invoked,
-            arm_query_counts=arm_query_counts,
-            waves=waves,
-        )
+        return self.begin_route(
+            queries, embeddings, budget, stop_margin=stop_margin, rng=rng,
+            mode="reference",
+        ).result()
 
     # ------------------------------------------------------------------
     def route_batch_sequential(

@@ -1,15 +1,59 @@
-"""Request batching scheduler with straggler hedging.
+"""Continuous-batching serving front-end with cost-aware speculation.
 
-Requests accumulate until ``max_batch`` or ``max_wait_s``; each flushed
-batch goes through the ThriftRouter. Per-arm latency estimates feed the
-StragglerMitigator — slow arms are pushed to the tail of the invocation
-wavefront, where Prop. 4 early-stopping most often makes them unnecessary.
+The PR 2 scheduler was a one-shot flush loop: requests accumulated until
+``max_batch``/``max_wait_s`` and each flush blocked on one ``route_batch``
+call. This module turns it into a streaming front-end shaped like the
+serving systems the paper's setting implies (FrugalGPT's cascade server,
+OptLLM's per-query assignment — see PAPERS.md):
+
+* **Admission queue** — ``submit``/``submit_many`` enqueue requests (block
+  submission is columnar: one segment of arrays, no per-request object
+  churn on the hot path) and return completion futures. The flush policy is
+  arrival-time and SLO-aware: a batch is admitted when it fills
+  ``max_batch``, when the oldest request has waited ``max_wait_s``, or when
+  a request's ``slo_s`` deadline (minus the dispatch margin) comes due —
+  whichever is earliest.
+* **Pipelined budget-group waves** — each admitted batch splits into its
+  budget groups and every group is dispatched through
+  :meth:`ThriftRouter.begin_route`, which returns a :class:`PendingRoute`
+  *before* the device program finishes. Up to ``max_inflight`` groups ride
+  in flight at once (double-buffered by default): group *t+1*'s planning
+  and speculative gather run while group *t*'s jitted wave program is still
+  executing, and retirement prefers groups whose device work already
+  finished.
+* **Per-request completion futures** — callers hold a
+  :class:`RequestFuture` (or a columnar :class:`BlockFuture`) instead of
+  waiting for a batch return. Reference-mode groups are stepped wave by
+  wave and each query's future completes as its Prop. 4 stop wave fires;
+  jitted groups complete when their single fused program lands. Results
+  carry per-request latency, realized cost, stop wave and the data-plane
+  mode that served them.
+* **Cost-aware speculation switch** — ``speculation="auto"`` (default)
+  lets every group pick its data plane: the speculative jitted wave loop
+  when the scheduled arms' marginal metered invocation cost
+  (:meth:`ThriftRouter.speculation_cost`) is at most
+  ``speculation_threshold``, the compacting ``route_batch_reference`` plane
+  otherwise. Oracle/tabular/self-hosted pools therefore always jit;
+  metered API pools never pay for speculatively gathered waves the stop
+  rule would have cancelled. This closes the ROADMAP's "speculate only
+  when arm invocation is cheap" item.
+* **Plan prefetch keyed by queue composition** — while the queue is
+  filling (admission deadline not yet due), the scheduler snapshots the
+  queued (cluster, budget) composition and asks the PlanService to build
+  any missing wave plans (:meth:`PlanService.prefetch_for`), so selection
+  latency is paid before the flush instead of on it.
+
+The PR 2 one-shot API survives unchanged: ``flush()`` admits one batch,
+routes it synchronously as a single heterogeneous-budget call and returns
+``[(requests, RouteResult)]``; per-arm latency accounting still feeds the
+StragglerMitigator exactly as before.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -22,22 +66,263 @@ class Request:
     embedding: np.ndarray
     budget: float
     arrival_s: float = dataclasses.field(default_factory=time.monotonic)
+    slo_s: Optional[float] = None    # target completion deadline (rel. arrival)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Completion record delivered through a request's future."""
+
+    prediction: int
+    cost: float
+    planned_cost: float
+    cluster: int
+    budget: float
+    stop_wave: int                   # waves invoked before Prop. 4 stopped it
+    mode: str                        # data plane that served it: jit | reference
+    latency_s: float                 # completion time - arrival time
+
+
+class RequestFuture:
+    """Single-request completion handle returned by :meth:`BatchScheduler.submit`."""
+
+    __slots__ = ("_sched", "request", "_result")
+
+    def __init__(self, sched: "BatchScheduler", request: Request):
+        self._sched = sched
+        self.request = request
+        self._result: Optional[RequestResult] = None
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self, wait: bool = True) -> RequestResult:
+        """The request's result; with ``wait`` (default) drives the
+        scheduler until this request completes."""
+        if self._result is None and wait:
+            self._sched._force(self)
+        if self._result is None:
+            raise RuntimeError("request not completed; pump() or drain() first")
+        return self._result
+
+    # columnar fill interface shared with BlockFuture
+    def _fill(self, pos, predictions, costs, planned, clusters, budgets,
+              stop_waves, mode, latencies):
+        self._result = RequestResult(
+            prediction=int(predictions[0]),
+            cost=float(costs[0]),
+            planned_cost=float(planned[0]),
+            cluster=int(clusters[0]),
+            budget=float(budgets[0]),
+            stop_wave=int(stop_waves[0]),
+            mode=mode,
+            latency_s=float(latencies[0]),
+        )
+
+
+class BlockFuture:
+    """Columnar completion handle for a :meth:`BatchScheduler.submit_many`
+    block: per-request results land in preallocated arrays as each budget
+    group retires, with no per-request Python objects anywhere on the path.
+    """
+
+    __slots__ = (
+        "_sched", "n", "_ndone", "predictions", "costs", "planned_costs",
+        "clusters", "budgets", "stop_waves", "latencies_s", "modes",
+    )
+
+    def __init__(self, sched: "BatchScheduler", n: int):
+        self._sched = sched
+        self.n = n
+        self._ndone = 0
+        self.predictions = np.full(n, -1, np.int64)
+        self.costs = np.zeros(n, np.float64)
+        self.planned_costs = np.zeros(n, np.float64)
+        self.clusters = np.full(n, -1, np.int64)
+        self.budgets = np.zeros(n, np.float64)
+        self.stop_waves = np.zeros(n, np.int64)
+        self.latencies_s = np.zeros(n, np.float64)
+        self.modes = np.zeros(n, dtype="U9")
+
+    def done(self) -> bool:
+        return self._ndone >= self.n
+
+    def result(self, wait: bool = True) -> "BlockFuture":
+        if not self.done() and wait:
+            self._sched._force(self)
+        if not self.done():
+            raise RuntimeError("block not completed; pump() or drain() first")
+        return self
+
+    def _fill(self, pos, predictions, costs, planned, clusters, budgets,
+              stop_waves, mode, latencies):
+        self.predictions[pos] = predictions
+        self.costs[pos] = costs
+        self.planned_costs[pos] = planned
+        self.clusters[pos] = clusters
+        self.budgets[pos] = budgets
+        self.stop_waves[pos] = stop_waves
+        self.modes[pos] = mode
+        self.latencies_s[pos] = latencies
+        self._ndone += len(pos)
+
+
+class _Segment:
+    """One enqueued block: columnar request arrays + the future they feed.
+
+    ``submit`` makes 1-row segments around a RequestFuture; ``submit_many``
+    makes one n-row segment around a BlockFuture. Admission slices segments
+    off the queue head FIFO, splitting the last one if the batch fills
+    mid-segment.
+    """
+
+    __slots__ = ("payloads", "emb", "budgets", "arrival", "slo",
+                 "sink", "pos", "requests")
+
+    def __init__(self, payloads, emb, budgets, arrival, slo, sink, pos,
+                 requests=None):
+        self.payloads = payloads      # (n, ...) array or list
+        self.emb = emb                # (n, d)
+        self.budgets = budgets        # (n,)
+        self.arrival = arrival        # (n,)
+        self.slo = slo                # (n,) with nan = no SLO
+        self.sink = sink              # RequestFuture | BlockFuture
+        self.pos = pos                # (n,) rows of `sink` these fill
+        self.requests = requests      # Optional[List[Request]] (submit path)
+
+    def __len__(self) -> int:
+        return self.budgets.shape[0]
+
+    def split(self, k: int) -> "_Segment":
+        """Pop the first ``k`` rows off as a new segment (FIFO admission)."""
+        head = _Segment(
+            self.payloads[:k], self.emb[:k], self.budgets[:k],
+            self.arrival[:k], self.slo[:k], self.sink, self.pos[:k],
+            self.requests[:k] if self.requests is not None else None,
+        )
+        self.payloads = self.payloads[k:]
+        self.emb = self.emb[k:]
+        self.budgets = self.budgets[k:]
+        self.arrival = self.arrival[k:]
+        self.slo = self.slo[k:]
+        self.pos = self.pos[k:]
+        if self.requests is not None:
+            self.requests = self.requests[k:]
+        return head
+
+
+class _Group:
+    """One dispatched budget group riding in flight."""
+
+    __slots__ = ("pending", "arrival", "part_sinks", "part_id", "part_pos",
+                 "n", "requests")
+
+    def __init__(self, pending, arrival, part_sinks, part_id, part_pos,
+                 requests=None):
+        self.pending = pending        # router.PendingRoute
+        self.arrival = arrival        # (n,)
+        self.part_sinks = part_sinks  # list of futures contributing rows
+        self.part_id = part_id        # (n,) index into part_sinks; None = one part
+        self.part_pos = part_pos      # (n,) row of the sink each query fills
+        self.n = arrival.shape[0]
+        self.requests = requests
 
 
 class BatchScheduler:
+    """Continuous-batching front-end over a :class:`ThriftRouter`.
+
+    Streaming use — submit anytime, drive with ``pump()`` (non-blocking
+    progress) or ``drain()`` (run the backlog dry); hold futures::
+
+        fut = sched.submit(Request(payload, emb, budget, slo_s=0.05))
+        blk = sched.submit_many(payloads, embs, budget)   # columnar block
+        sched.pump()          # admit/dispatch/retire whatever is due
+        res = fut.result()    # drives the scheduler until this completes
+
+    Batch-compat use (PR 2 semantics, used by the equivalence tests)::
+
+        sched.submit(...); ...
+        for requests, route_result in sched.flush():
+            ...
+
+    Args:
+      router: the ThriftRouter data plane.
+      max_batch: admission batch size cap.
+      max_wait_s: oldest-request wait that forces admission.
+      max_inflight: budget groups allowed in flight at once (2 =
+        double-buffered waves; 1 degenerates to the PR 2 serial loop).
+      speculation: ``"auto"`` (cost-aware switch), ``"jit"`` or
+        ``"reference"`` to pin the data plane.
+      speculation_threshold: USD per query the auto switch may gamble on
+        speculatively invoked *metered* arms (see
+        :meth:`ThriftRouter.speculation_cost`).
+      slo_margin_s: dispatch headroom subtracted from a request's ``slo_s``
+        when computing its admission deadline.
+      prefetch_plans: build missing wave plans from the queued (cluster,
+        budget) composition while waiting for the flush deadline.
+      coalesce: saturation batch growth — when the backlog exceeds
+        ``max_batch`` (arrivals outpacing service), one admission may take
+        up to ``coalesce * max_batch`` requests, amortizing per-dispatch
+        cost into bigger device batches exactly when latency is already
+        queue-bound. 1 (default) keeps admissions at ``max_batch``; the
+        legacy ``flush()`` API never coalesces.
+    """
+
     def __init__(
         self,
         router,
         max_batch: int = 64,
         max_wait_s: float = 0.02,
+        max_inflight: int = 2,
+        speculation: str = "auto",
+        speculation_threshold: float = 0.0,
+        slo_margin_s: float = 0.002,
+        prefetch_plans: bool = True,
+        coalesce: int = 1,
     ):
+        if speculation not in ("auto", "jit", "reference"):
+            raise ValueError(f"unknown speculation mode {speculation!r}")
         self.router = router
-        self.max_batch = max_batch
-        self.max_wait_s = max_wait_s
-        self._queue: List[Request] = []
+        self.max_batch = int(max_batch)
+        self.coalesce = max(1, int(coalesce))
+        self.max_wait_s = float(max_wait_s)
+        self.max_inflight = max(1, int(max_inflight))
+        self.speculation = speculation
+        self.speculation_threshold = float(speculation_threshold)
+        self.slo_margin_s = float(slo_margin_s)
+        self.prefetch_plans = bool(prefetch_plans)
+        self._queue: collections.deque = collections.deque()  # of _Segment
+        self._qlen = 0
+        self._queue_version = 0
+        self._prefetched_version = -1
+        self._inflight: collections.deque = collections.deque()  # of _Group
+        self._latencies: List[np.ndarray] = []
+        self._lat_window = 1 << 17        # newest samples kept for percentiles
+        self._lat_buffered = 0
         self.mitigator = StragglerMitigator(num_workers=len(router.engine.arms))
-        self.stats: Dict[str, float] = {"batches": 0, "requests": 0, "flushes": 0}
+        self.arm_query_totals = np.zeros(len(router.engine.arms), np.int64)
+        self._stats: Dict[str, float] = {
+            "batches": 0,        # budget groups routed (PR 1/2 meaning)
+            "requests": 0,       # requests admitted into routed batches
+            "flushes": 0,        # admission events
+            "submitted": 0,
+            "completed": 0,
+            "spec_jit": 0,       # groups served by the speculative jit plane
+            "spec_reference": 0, # groups served by the compacting plane
+            "inflight_peak": 0,
+        }
         self._sync_plan_stats()
+
+    # ------------------------------------------------------------------
+    # Plan service plumbing (PR 2 API, unchanged)
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Control-plane counters, with the router's PlanService hit/miss/
+        invalidation counters mirrored in on read (so the hot retire path
+        never rebuilds the dict)."""
+        self._sync_plan_stats()
+        return self._stats
 
     def _sync_plan_stats(self):
         """Mirror the router's PlanService counters into ``stats`` so the
@@ -45,7 +330,7 @@ class BatchScheduler:
         without reaching into router internals."""
         plans = getattr(self.router, "plans", None)
         if plans is not None:
-            self.stats.update(plans.stats())
+            self._stats.update(plans.stats())
 
     def prewarm(self, budgets: Optional[List[float]] = None) -> int:
         """Precompute wave plans ahead of traffic (delegates to the
@@ -59,41 +344,389 @@ class BatchScheduler:
         self._sync_plan_stats()
         return built
 
-    def submit(self, req: Request):
-        self._queue.append(req)
+    def _prefetch(self):
+        """Queue-composition plan prefetch: whenever the queued set has
+        changed since the last look, hand its (embedding, budget) columns to
+        the PlanService so missing plans are built before the flush."""
+        if not self.prefetch_plans or not self._queue:
+            return
+        if self._queue_version == self._prefetched_version:
+            return
+        self._prefetched_version = self._queue_version
+        plans = getattr(self.router, "plans", None)
+        if plans is None:
+            return
+        emb = np.concatenate([s.emb for s in self._queue])
+        budgets = np.concatenate([s.budgets for s in self._queue])
+        plans.prefetch_for(emb, budgets)
+        self._sync_plan_stats()
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> RequestFuture:
+        """Enqueue one request; returns its completion future."""
+        fut = RequestFuture(self, req)
+        self._queue.append(_Segment(
+            [req.payload],
+            np.asarray(req.embedding, np.float64)[None, :],
+            np.asarray([req.budget], np.float64),
+            np.asarray([req.arrival_s], np.float64),
+            np.asarray([np.nan if req.slo_s is None else req.slo_s]),
+            fut, np.zeros(1, np.int64), requests=[req],
+        ))
+        self._qlen += 1
+        self._queue_version += 1
+        self._stats["submitted"] += 1
+        return fut
+
+    def submit_many(
+        self,
+        payloads,
+        embeddings: np.ndarray,
+        budgets,
+        slo_s: Optional[float] = None,
+        arrival_s=None,
+    ) -> BlockFuture:
+        """Columnar block submission: ``n`` requests enter as one segment of
+        arrays and resolve into one :class:`BlockFuture` — the high-rate
+        path (an arrival process delivers bursts, not single requests)."""
+        emb = np.asarray(embeddings, np.float64)
+        n = emb.shape[0]
+        if n == 0:
+            return BlockFuture(self, 0)   # already done; never enqueued
+        budgets = np.broadcast_to(np.asarray(budgets, np.float64), (n,)).copy()
+        if arrival_s is None:
+            arrival = np.full(n, time.monotonic())
+        else:
+            arrival = np.broadcast_to(
+                np.asarray(arrival_s, np.float64), (n,)
+            ).copy()
+        slo = np.full(n, np.nan if slo_s is None else float(slo_s))
+        blk = BlockFuture(self, n)
+        self._queue.append(_Segment(
+            payloads, emb, budgets, arrival, slo, blk, np.arange(n),
+        ))
+        self._qlen += n
+        self._queue_version += 1
+        self._stats["submitted"] += n
+        return blk
+
+    def _seg_deadline(self, seg: _Segment) -> float:
+        """Earliest time any request in the segment must be admitted:
+        arrival + max_wait, tightened by per-request SLOs."""
+        wait = np.minimum(
+            self.max_wait_s,
+            np.where(np.isnan(seg.slo), self.max_wait_s,
+                     np.maximum(seg.slo - self.slo_margin_s, 0.0)),
+        )
+        return float((seg.arrival + wait).min())
+
+    def next_deadline(self) -> Optional[float]:
+        """Monotonic time the queue's most urgent request must flush by
+        (None when idle) — lets an event loop sleep instead of polling."""
+        if not self._queue:
+            return None
+        return min(self._seg_deadline(s) for s in self._queue)
 
     def ready(self) -> bool:
+        """Is a batch due for admission? Full batch, oldest-request wait
+        expiry, or an SLO deadline — whichever comes first."""
         if not self._queue:
             return False
-        if len(self._queue) >= self.max_batch:
+        if self._qlen >= self.max_batch:
             return True
-        return time.monotonic() - self._queue[0].arrival_s >= self.max_wait_s
+        return time.monotonic() >= self.next_deadline()
 
-    def flush(self):
-        """Route one batch; heterogeneous budgets ride one wave schedule.
+    def _take_batch(self, coalesce: bool = True) -> List[_Segment]:
+        """Pop one admission off the queue head (FIFO), splitting the
+        boundary segment if needed. Admissions are ``max_batch`` requests,
+        except under saturation (backlog > ``max_batch``) where they may
+        grow to ``coalesce * max_batch`` — latency is already queue-bound
+        there, so bigger device batches are free throughput."""
+        limit = self.max_batch
+        if coalesce and self._qlen > limit:
+            limit = min(self._qlen, self.coalesce * self.max_batch)
+        take: List[_Segment] = []
+        n = 0
+        while self._queue and n < limit:
+            seg = self._queue[0]
+            room = limit - n
+            if len(seg) <= room:
+                take.append(self._queue.popleft())
+            else:
+                take.append(seg.split(room))
+            n += len(take[-1])
+        self._qlen -= n
+        self._queue_version += 1
+        return take
 
-        The router handles (cluster, budget) grouping internally, so the
-        whole flush is a single ``route_batch`` call. Accounting:
-        ``stats["batches"]`` counts the budget groups actually routed, and
-        the StragglerMitigator only sees the latency of arms the wavefront
-        really invoked (``RouteResult.arm_query_counts``) — idle arms record
-        zero work instead of a phantom full-batch latency.
-        """
-        if not self._queue:
-            return []
-        batch = self._queue[: self.max_batch]
-        self._queue = self._queue[self.max_batch :]
-        payloads = [r.payload for r in batch]
-        embs = np.stack([r.embedding for r in batch])
-        budgets = np.asarray([r.budget for r in batch], np.float64)
-        res = self.router.route_batch(payloads, embs, budgets)
+    @staticmethod
+    def _cat_payloads(parts: Sequence[Any]):
+        if len(parts) == 1:
+            return parts[0]
+        if all(isinstance(p, np.ndarray) for p in parts):
+            return np.concatenate(parts)
+        out: List[Any] = []
+        for p in parts:
+            out.extend(list(p))
+        return out
+
+    @staticmethod
+    def _index_payloads(payloads, rows: np.ndarray):
+        if isinstance(payloads, np.ndarray):
+            return payloads[rows]
+        return [payloads[i] for i in rows]
+
+    # ------------------------------------------------------------------
+    # Dispatch / retire: the pipelined data plane
+    # ------------------------------------------------------------------
+    def _route_mode(self) -> str:
+        # "auto" defers to begin_route's switch (which also honors a router
+        # pinned to the reference plane via jit_waves=False)
+        return self.speculation
+
+    @staticmethod
+    def _stack_segments(take: List[_Segment]):
+        """Columnar view of an admitted batch; the single-segment case (the
+        block-submission hot path) is zero-copy."""
+        if len(take) == 1:
+            s = take[0]
+            return s.payloads, s.emb, s.budgets, s.arrival, [s.sink], None, s.pos
+        payloads = BatchScheduler._cat_payloads([s.payloads for s in take])
+        emb = np.concatenate([s.emb for s in take])
+        budgets = np.concatenate([s.budgets for s in take])
+        arrival = np.concatenate([s.arrival for s in take])
+        part_sinks = [s.sink for s in take]
+        part_id = np.concatenate([
+            np.full(len(s), i, np.int64) for i, s in enumerate(take)
+        ])
+        part_pos = np.concatenate([s.pos for s in take])
+        return payloads, emb, budgets, arrival, part_sinks, part_id, part_pos
+
+    def _dispatch_batch(self):
+        """Admit one batch and dispatch its budget groups into flight."""
+        take = self._take_batch()
+        if not take:
+            return
+        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos = (
+            self._stack_segments(take)
+        )
+        self._stats["flushes"] += 1
+        self._stats["requests"] += budgets.shape[0]
+        mode = self._route_mode()
+        if (budgets == budgets[0]).all():
+            group_rows = [None]                    # whole batch, no split
+        else:
+            # one group per budget, first-occurrence order, FIFO inside
+            _, first = np.unique(budgets, return_index=True)
+            group_rows = [
+                np.flatnonzero(budgets == budgets[i]) for i in np.sort(first)
+            ]
+        for rows in group_rows:
+            if rows is None:
+                g_payloads, g_emb, g_budgets = payloads, emb, budgets
+                g_arrival, g_id, g_pos = arrival, part_id, part_pos
+            else:
+                g_payloads = self._index_payloads(payloads, rows)
+                g_emb, g_budgets = emb[rows], budgets[rows]
+                g_arrival, g_pos = arrival[rows], part_pos[rows]
+                g_id = part_id[rows] if part_id is not None else None
+            pending = self.router.begin_route(
+                g_payloads, g_emb, g_budgets, mode=mode,
+                speculation_threshold=self.speculation_threshold,
+            )
+            self._stats["spec_" + pending.kind] += 1
+            self._stats["batches"] += 1
+            self._inflight.append(
+                _Group(pending, g_arrival, part_sinks, g_id, g_pos)
+            )
+        self._stats["inflight_peak"] = max(
+            self._stats["inflight_peak"], len(self._inflight)
+        )
+
+    def _resolve_rows(self, group: _Group, rows: np.ndarray, predictions,
+                      costs, planned, clusters, budgets, stop_waves, mode,
+                      now: float):
+        """Columnar completion: fill each contributing future's slice."""
+        latencies = now - group.arrival[rows]
+        self._latencies.append(latencies)
+        self._lat_buffered += latencies.shape[0]
+        if self._lat_buffered > 2 * self._lat_window:
+            self._trim_latencies()
+        self._stats["completed"] += rows.shape[0]
+        if group.part_id is None:
+            group.part_sinks[0]._fill(
+                group.part_pos[rows], predictions, costs, planned, clusters,
+                budgets, stop_waves, mode, latencies,
+            )
+            return
+        gid = group.part_id[rows]
+        for pid in np.unique(gid):
+            sel = gid == pid
+            group.part_sinks[pid]._fill(
+                group.part_pos[rows[sel]], predictions[sel], costs[sel],
+                planned[sel], clusters[sel], budgets[sel], stop_waves[sel],
+                mode, latencies[sel],
+            )
+
+    def _retire(self, group: _Group) -> int:
+        """Complete one in-flight group: step reference-mode groups wave by
+        wave (futures fire at each query's stop wave), block on jit-mode
+        device results, then account latencies and plan stats."""
+        pending = group.pending
+        if pending.kind == "reference" and pending.rng is None:
+            all_rows = np.arange(group.n)
+            resolved = np.zeros(group.n, bool)
+            while not pending.exhausted:
+                wave = pending._t
+                rows, preds = pending.step()
+                if rows.size:
+                    self._resolve_rows(
+                        group, rows, preds, pending.costs[rows],
+                        pending.planned[rows], pending.cluster_ids[rows],
+                        pending.budgets[rows],
+                        np.full(rows.shape[0], min(wave, pending.T), np.int64),
+                        "reference", time.monotonic(),
+                    )
+                    resolved[rows] = True
+            res = pending.result()
+            left = all_rows[~resolved]
+            if left.size:   # defensive: every row should resolve via steps
+                self._resolve_rows(
+                    group, left, res.predictions[left], res.costs[left],
+                    res.planned_costs[left], res.clusters[left],
+                    res.budgets[left], res.stop_waves[left],
+                    "reference", time.monotonic(),
+                )
+        else:
+            res = pending.result()
+            self._resolve_rows(
+                group, np.arange(group.n), res.predictions, res.costs,
+                res.planned_costs, res.clusters, res.budgets,
+                res.stop_waves, pending.kind, time.monotonic(),
+            )
+        self._account(res)
+        return group.n
+
+    def _account(self, res):
         lat = [
             arm.latency_s(int(n)) if n else 0.0
             for arm, n in zip(self.router.engine.arms, res.arm_query_counts)
         ]
         self.mitigator.record_step(lat)
-        self.stats["batches"] += len(np.unique(budgets))
-        self.stats["flushes"] += 1
-        self.stats["requests"] += len(batch)
+        self.arm_query_totals += np.asarray(res.arm_query_counts, np.int64)
         self._sync_plan_stats()
-        return [(batch, res)]
+
+    # ------------------------------------------------------------------
+    # Driving
+    # ------------------------------------------------------------------
+    def pump(self) -> int:
+        """Make progress without avoidable blocking; returns requests
+        completed during the call. Retires every group whose device work
+        already finished, admits/dispatches batches that are due (blocking
+        on the oldest group only when the pipeline is full), and spends
+        idle queue time prefetching plans for the queued composition."""
+        done = 0
+        while True:
+            while self._inflight and self._inflight[0].pending.ready():
+                done += self._retire(self._inflight.popleft())
+            if self.ready():
+                if len(self._inflight) >= self.max_inflight:
+                    done += self._retire(self._inflight.popleft())
+                self._dispatch_batch()
+                continue
+            break
+        if self._queue:
+            self._prefetch()
+        return done
+
+    def drain(self) -> int:
+        """Run the backlog dry: admit everything queued (ignoring
+        deadlines), keep ``max_inflight`` groups in flight, retire all.
+        Returns requests completed."""
+        done = 0
+        while self._queue or self._inflight:
+            while self._queue and len(self._inflight) < self.max_inflight:
+                self._dispatch_batch()
+            done += self._retire(self._inflight.popleft())
+        return done
+
+    def _force(self, fut) -> None:
+        """Drive until ``fut`` completes (future.result() entry point)."""
+        while not fut.done() and self._inflight:
+            self._retire(self._inflight.popleft())
+        if not fut.done():
+            self.drain()
+
+    # ------------------------------------------------------------------
+    # Latency accounting
+    # ------------------------------------------------------------------
+    def _trim_latencies(self):
+        """Keep only the newest ``_lat_window`` samples, so a long-running
+        server's latency history stays bounded (the percentile summary is a
+        sliding window, like the StragglerMitigator's)."""
+        lat = np.concatenate(self._latencies)[-self._lat_window:]
+        self._latencies = [lat]
+        self._lat_buffered = lat.shape[0]
+
+    def latency_stats(self) -> Dict[str, float]:
+        """Completion-latency summary: ``count`` covers everything ever
+        completed; the percentiles cover the newest ``_lat_window``
+        (default 128k) samples."""
+        if not self._latencies:
+            return {"count": 0}
+        self._trim_latencies()
+        lat = self._latencies[0]
+        return {
+            "count": int(self._stats["completed"]),
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "mean_s": float(lat.mean()),
+            "max_s": float(lat.max()),
+        }
+
+    # ------------------------------------------------------------------
+    # PR 2 one-shot API (kept for batch callers and the equivalence tests)
+    # ------------------------------------------------------------------
+    def flush(self) -> List[Tuple[List[Request], Any]]:
+        """Admit one batch and route it synchronously as a single
+        heterogeneous-budget call; returns ``[(requests, RouteResult)]``.
+
+        Accounting matches PR 2: ``stats["batches"]`` counts the budget
+        groups actually routed and the StragglerMitigator only sees the
+        latency of arms the wavefront really invoked. Futures of the
+        flushed requests complete before this returns.
+        """
+        take = self._take_batch(coalesce=False)
+        if not take:
+            return []
+        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos = (
+            self._stack_segments(take)
+        )
+        pending = self.router.begin_route(
+            payloads, emb, budgets, mode=self._route_mode(),
+            speculation_threshold=self.speculation_threshold,
+        )
+        res = pending.result()
+        self._stats["spec_" + pending.kind] += 1
+        self._stats["batches"] += len(np.unique(budgets))
+        self._stats["flushes"] += 1
+        self._stats["requests"] += budgets.shape[0]
+        group = _Group(pending, arrival, part_sinks, part_id, part_pos)
+        self._resolve_rows(
+            group, np.arange(group.n), res.predictions, res.costs,
+            res.planned_costs, res.clusters, res.budgets, res.stop_waves,
+            pending.kind, time.monotonic(),
+        )
+        self._account(res)
+        requests: List[Request] = []
+        for s in take:
+            if s.requests is not None:
+                requests.extend(s.requests)
+            else:
+                requests.extend(
+                    Request(p, e, float(b), arrival_s=float(a))
+                    for p, e, b, a in zip(s.payloads, s.emb, s.budgets, s.arrival)
+                )
+        return [(requests, res)]

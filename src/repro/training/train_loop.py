@@ -9,6 +9,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import constrain_params
 from repro.models import LM
 
 from .compression import CompressionConfig, compress_grads, init_residuals
@@ -74,6 +75,8 @@ def make_train_step(
         if new_res is not None and comp_cfg.codec != "none":
             new_opt["residuals"] = new_res
         out_metrics = {"loss": loss, **opt_stats, **comp_stats}
-        return new_params, new_opt, out_metrics
+        # pin outputs to the canonical param layout so step N+1's explicit
+        # in_shardings still match (see constrain_params for the failure)
+        return constrain_params(new_params), constrain_params(new_opt), out_metrics
 
     return train_step
