@@ -18,6 +18,16 @@ capacity at batch-256 admission (submit -> admission queue -> pipelined
 budget-group waves -> futures), and a Poisson arrival run at a fraction of
 that capacity recording per-request p50/p99 completion latency.
 
+Finally the ``feedback`` section measures the online estimation loop on
+synthetic *drifted* traffic: the arms the served plans rely on degrade
+mid-stream, and three pipelines route the same post-drift request stream —
+frozen plans (no feedback), the feedback-enabled front-end (ground-truth
+labels recorded per chunk, folded at admission boundaries, drift-gated
+replans), and an oracle replan (re-estimated from post-drift truth). The
+acceptance bar: online recovers >= 90% of the oracle's drifted-cluster
+tail accuracy while frozen does not; ``overhead_vs_frozen`` reports the
+wall-time cost of carrying the loop.
+
 Writes ``BENCH_serving.json``; if the output file already holds an earlier
 report, its summary is appended to ``history`` so the perf trajectory
 (seed -> wavefront -> jitted -> continuous) stays in one file.
@@ -236,6 +246,142 @@ def steady_state(router, wl, budget: float, batch: int, n_queries: int,
     }
 
 
+def feedback_drift(num_classes: int, num_arms: int, history: int,
+                   chunks: int, chunk: int, seed: int = 29) -> dict:
+    """Online-feedback recovery on synthetic drifted traffic.
+
+    Builds a fresh oracle pool over *true* cluster ids (the drift is
+    injected into the workload truth, so clustering error is not part of
+    this measurement), caches plans, then degrades every arm the served
+    plans rely on — for half the clusters — to barely-above-random (0.30 >
+    1/K, keeping selection inside the paper's p > 1/K regime). The same
+    post-drift stream is routed by the frozen, online and oracle pipelines;
+    accuracy is reported over the drifted clusters' tail traffic (the
+    second half of the stream, after the online loop has had labels to
+    adapt with). Overhead is decomposed: ``steady_overhead_vs_frozen`` is
+    the per-chunk cost of carrying the loop when no drift fires (label
+    bookkeeping + version checks), ``replan_time_s`` the cold SurGreedy
+    selection time the drift chunks paid to re-plan.
+    """
+    C = 4
+    K, L = num_classes, num_arms
+
+    def pool(arm_seed):
+        wl = OracleWorkload(num_classes=K, num_clusters=C, num_arms=L, seed=3)
+        T, emb, cid_h = wl.response_table(history * C, seed=4)
+        est = SuccessProbEstimator(T, emb, cid_h)
+        engine = PoolEngine(
+            [OracleArm(f"a{i}", wl, i, seed=arm_seed) for i in range(L)]
+        )
+        return wl, est, engine, ThriftRouter(engine, est, num_classes=K)
+
+    wl, est, engine, router = pool(11)
+    wl_f, _, _, frozen_router = pool(13)
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    sched = BatchScheduler(router, max_batch=chunk, max_wait_s=0.0,
+                           feedback=True)
+    # frozen baseline rides the SAME front-end, just without feedback, so
+    # the overhead ratio isolates the loop (labels, folds, version checks,
+    # replans) instead of scheduler-vs-bare-engine differences
+    frozen = BatchScheduler(frozen_router, max_batch=chunk, max_wait_s=0.0)
+
+    # pre-drift warmup (not timed, not scored): fills the plan caches and
+    # compiles the wave program on both pipelines, so `overhead_vs_frozen`
+    # measures the feedback loop (labels, folds, drift-gated replans)
+    # rather than first-call jit compilation. Replans can deepen plans
+    # across wave-depth buckets, so every bucket a replan could land in is
+    # compiled up front — warm on any long-running server.
+    wrng = np.random.default_rng(seed + 1)
+    wcid, wemb, wlab = wl.sample_queries(chunk, wrng)
+    wq = np.column_stack([wcid, wlab])
+    sched.submit_many(wq, wemb, budget)
+    sched.drain()
+    frozen.submit_many(wq, wemb, budget)
+    frozen.drain()
+    router.prewarm_compile(chunk)
+
+    # drift: the served plans' arms degrade for half the clusters
+    targets = list(range(C // 2))
+    drifted_arms = sorted({
+        int(a) for t in targets for a in router.plans.plan(t, budget).order
+    })
+    for t in targets:
+        wl.drift_arms(router.plans.plan(t, budget).order, 0.30, clusters=[t])
+    wl_f.p_true[:] = wl.p_true
+
+    # oracle replan: re-estimated from post-drift truth
+    T2, emb2, cid2 = wl.response_table(history * C, seed=14)
+    oracle = ThriftRouter(
+        PoolEngine([OracleArm(f"o{i}", wl, i, seed=12) for i in range(L)]),
+        SuccessProbEstimator(T2, emb2, cid2),
+        num_classes=K,
+    )
+
+    rng = np.random.default_rng(seed)
+    stream = [wl.sample_queries(chunk, rng) for _ in range(chunks)]
+    accs = {"online": [], "oracle": [], "frozen": []}
+    t_online, t_frozen, drift_chunk = [], [], []
+    for cid, qemb, lab in stream:
+        m = np.isin(cid, targets)
+        q = np.column_stack([cid, lab])
+        drifts_before = sched.stats["feedback_drifts"]
+        t0 = time.perf_counter()
+        blk = sched.submit_many(q, qemb, budget)
+        sched.drain()
+        sched.record_outcomes(blk.request_ids, lab)
+        t_online.append(time.perf_counter() - t0)
+        drift_chunk.append(sched.stats["feedback_drifts"] > drifts_before)
+        t0 = time.perf_counter()
+        fblk = frozen.submit_many(q, qemb, budget)
+        frozen.drain()
+        t_frozen.append(time.perf_counter() - t0)
+        ores = oracle.route_batch(q, qemb, budget)
+        accs["online"].append(float((blk.predictions[m] == lab[m]).mean()))
+        accs["oracle"].append(float((ores.predictions[m] == lab[m]).mean()))
+        accs["frozen"].append(float((fblk.predictions[m] == lab[m]).mean()))
+
+    tail = chunks // 2
+    online, oracle_acc, frozen_acc = (
+        float(np.mean(accs[k][tail:])) for k in ("online", "oracle", "frozen")
+    )
+    st = dict(sched.stats)
+    # overhead decomposition: drift chunks pay cold SurGreedy selection for
+    # the re-planned clusters (the cost the plan cache amortizes everywhere
+    # else); steady chunks pay only label bookkeeping + version checks
+    steady_online = [t for t, d in zip(t_online, drift_chunk) if not d]
+    steady_ratio = (
+        float(np.median(steady_online) / np.median(t_frozen))
+        if steady_online else float("nan")
+    )
+    replan_s = max(0.0, float(
+        sum(t for t, d in zip(t_online, drift_chunk) if d)
+        - (np.median(steady_online) if steady_online else 0.0) * sum(drift_chunk)
+    ))
+    return {
+        "chunks": chunks,
+        "chunk": chunk,
+        "drifted_clusters": targets,
+        "drifted_arms": drifted_arms,
+        "online_acc": online,
+        "oracle_acc": oracle_acc,
+        "frozen_acc": frozen_acc,
+        "recovery": online / max(oracle_acc, 1e-12),
+        "frozen_vs_oracle": frozen_acc / max(oracle_acc, 1e-12),
+        "acc_trajectory": {k: [round(a, 4) for a in v] for k, v in accs.items()},
+        "overhead_vs_frozen": float(sum(t_online) / max(sum(t_frozen), 1e-12)),
+        "steady_overhead_vs_frozen": steady_ratio,
+        "replan_time_s": replan_s,
+        "drift_chunks": int(sum(drift_chunk)),
+        "feedback_labels": int(st["feedback_labels"]),
+        "feedback_applies": int(st["feedback_applies"]),
+        "feedback_drifts": int(st["feedback_drifts"]),
+        "plan_stale_dropped": int(st["plan_stale_dropped"]),
+        "plan_misses": int(st["plan_misses"]),
+        "estimator_version": int(est.version),
+        "estimator_plan_version": int(est.plan_version),
+    }
+
+
 def _time_all(fns, repeats: int):
     """Best-of-``repeats`` wall time per engine, *interleaved* round-robin
     so a load spike on the shared host penalizes every engine equally
@@ -330,6 +476,22 @@ def run(args) -> dict:
         f" | planes jit={steady['spec_jit']} ref={steady['spec_reference']}"
     )
 
+    # online estimation feedback on drifted traffic
+    feedback = feedback_drift(
+        args.classes, args.arms, history=args.feedback_history,
+        chunks=args.feedback_chunks, chunk=args.feedback_chunk,
+    )
+    print(
+        f"feedback (drifted traffic): online {feedback['online_acc']:.3f} "
+        f"vs oracle {feedback['oracle_acc']:.3f} "
+        f"({feedback['recovery']:.2f} recovery) vs frozen "
+        f"{feedback['frozen_acc']:.3f} ({feedback['frozen_vs_oracle']:.2f})"
+        f" | drifts {feedback['feedback_drifts']} replans "
+        f"{feedback['plan_stale_dropped']} | steady overhead "
+        f"{feedback['steady_overhead_vs_frozen']:.2f}x frozen, replans "
+        f"{feedback['replan_time_s']:.2f}s over {feedback['drift_chunks']} chunks"
+    )
+
     report = {
         "bench": "serving_throughput",
         "engine": "continuous-batching",
@@ -341,6 +503,7 @@ def run(args) -> dict:
         },
         "rows": rows,
         "steady_state": steady,
+        "feedback": feedback,
         "plan_cache": router.plans.stats(),
         "history": _load_history(args.out),
     }
@@ -388,6 +551,14 @@ def _load_history(path: str) -> list:
                       "p50_ms", "p99_ms", "vs_jit_engine")
             if k in steady
         }
+    feedback = prev.get("feedback")
+    if feedback:
+        entry["feedback"] = {
+            k: feedback[k]
+            for k in ("online_acc", "oracle_acc", "frozen_acc", "recovery",
+                      "overhead_vs_frozen")
+            if k in feedback
+        }
     history.append(entry)
     return history
 
@@ -413,6 +584,18 @@ def main() -> None:
         help="steady-state offered load as a fraction of measured capacity",
     )
     ap.add_argument(
+        "--feedback-chunks", type=int, default=8,
+        help="drifted-traffic chunks streamed through the feedback loop",
+    )
+    ap.add_argument(
+        "--feedback-chunk", type=int, default=256,
+        help="requests per drifted-traffic chunk",
+    )
+    ap.add_argument(
+        "--feedback-history", type=int, default=120,
+        help="historical responses per cluster for the feedback scenario",
+    )
+    ap.add_argument(
         "--smoke", action="store_true",
         help="tiny sweep for CI: small batches, few repeats",
     )
@@ -424,6 +607,9 @@ def main() -> None:
         args.history = min(args.history, 600)
         args.steady_batch = min(args.steady_batch, 64)
         args.steady_queries = args.steady_queries or 4 * args.steady_batch
+        args.feedback_chunks = min(args.feedback_chunks, 6)
+        args.feedback_chunk = min(args.feedback_chunk, 128)
+        args.feedback_history = min(args.feedback_history, 80)
     run(args)
 
 

@@ -4,7 +4,12 @@ FrugalGPT-style cascade, LLM-Blender-style use-all, top-k weighted, best
 single arm), and the adaptive (Alg. 3) cost saving vs plain SurGreedyLLM.
 
 Run:  PYTHONPATH=src python examples/budget_sweep.py
+Tiny (smoke-tested by tests/test_examples.py):
+      PYTHONPATH=src python examples/budget_sweep.py --queries 30 --history 300 \
+          --budgets 1e-4 5e-4
 """
+import argparse
+
 import numpy as np
 
 import jax
@@ -37,26 +42,33 @@ def run_baseline_agg(chosen, wl, p_hat, queries, rng, K, costs):
     return acc / len(queries), cost / len(queries)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--queries", type=int, default=600)
+    ap.add_argument("--history", type=int, default=3000)
+    ap.add_argument("--budgets", type=float, nargs="*", default=BUDGETS)
+    args = ap.parse_args(argv)
+    budgets = list(args.budgets)
+
     K = 4
     wl = OracleWorkload(num_classes=K, num_clusters=6, num_arms=12, seed=0)
     engine = PoolEngine([OracleArm(f"llm{i}", wl, i, seed=5) for i in range(12)])
     costs = engine.costs
 
-    T, emb, _ = wl.response_table(3000, seed=1)
+    T, emb, _ = wl.response_table(args.history, seed=1)
     assign, _ = kmeans(emb, 6, seed=0)
     est = SuccessProbEstimator(T, emb, assign)
     router = ThriftRouter(engine, est, num_classes=K)
 
     rng = np.random.default_rng(7)
-    cid, qemb, labels = wl.sample_queries(600, rng)
+    cid, qemb, labels = wl.sample_queries(args.queries, rng)
     queries = list(zip(cid, labels))
     cl_of = est.lookup_batch(qemb)
 
     print(f"{'budget':>9} | {'Thrift':>14} | {'SurGreedy':>14} | {'cascade':>14} | "
           f"{'top-k':>14} | {'single':>14}")
     print(f"{'':>9} | " + " | ".join([f"{'acc':>6} {'cost':>7}"] * 5))
-    for budget in BUDGETS:
+    for budget in budgets:
         # --- ThriftLLM (adaptive)
         res = router.route_batch(queries, qemb, budget)
         th = ((res.predictions == labels).mean(), res.costs.mean())

@@ -6,7 +6,11 @@ at several budgets — printing the accuracy/cost frontier plus the adaptive
 early-stop saving.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+Tiny (smoke-tested by tests/test_examples.py):
+      PYTHONPATH=src python examples/quickstart.py --queries 80 --history 300
 """
+import argparse
+
 import numpy as np
 
 from repro.core.clustering import kmeans
@@ -15,21 +19,28 @@ from repro.data import OracleWorkload
 from repro.serving import OracleArm, PoolEngine, ThriftRouter
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--queries", type=int, default=1000,
+                    help="test queries per budget")
+    ap.add_argument("--history", type=int, default=3000,
+                    help="historical responses for calibration")
+    args = ap.parse_args(argv)
+
     # --- pool: 12 arms, stronger = pricier; 6 query classes, K=4 labels
     wl = OracleWorkload(num_classes=4, num_clusters=6, num_arms=12, seed=0)
     engine = PoolEngine([OracleArm(f"llm-{i}", wl, i, seed=9) for i in range(12)])
     print("pool costs (USD/query):", np.round(engine.costs, 7))
 
     # --- calibrate from historical responses (Section 3.1)
-    T, emb, _ = wl.response_table(3000, seed=1)
+    T, emb, _ = wl.response_table(args.history, seed=1)
     assign, _ = kmeans(emb, 6, seed=0)
     est = SuccessProbEstimator(T, emb, assign)
     router = ThriftRouter(engine, est, num_classes=4)
 
     # --- test queries
     rng = np.random.default_rng(42)
-    cid, qemb, labels = wl.sample_queries(1000, rng)
+    cid, qemb, labels = wl.sample_queries(args.queries, rng)
     queries = list(zip(cid, labels))
 
     print(f"\n{'budget':>12} {'accuracy':>9} {'mean cost':>11} {'saving':>7} {'arms':>5}")

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
-# CI: hygiene guards, router/serving correctness, a serving-throughput smoke
-# (one-shot engines + the continuous-batching steady-state path) with JSON
-# well-formedness assertions, a docs link check, then the FULL tier-1 suite
-# with zero tolerated failures — there is no allowlist of known-bad tests.
+# CI: hygiene guards, router/serving correctness, a no-skip gate on the
+# property suites (hypothesis or the in-repo fallback engine — they must
+# RUN), a serving-throughput smoke (one-shot engines + the steady-state
+# continuous-batching path + the online feedback-vs-drift section) with
+# JSON well-formedness and history-preservation assertions, a docs link
+# check, then the FULL tier-1 suite with zero tolerated failures — there
+# is no allowlist of known-bad tests.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -17,13 +20,33 @@ echo "pycache hygiene OK"
 
 python -m pytest -x -q tests/test_router_batched.py tests/test_serving.py \
     tests/test_scheduler_continuous.py tests/test_plans.py \
-    tests/test_core_selection.py tests/test_properties.py
+    tests/test_core_selection.py tests/test_feedback.py
+
+# property suites must RUN — on the real hypothesis engine when installed,
+# on the in-repo tests/_hypolite.py fallback otherwise. A skip here means
+# the importorskip hole is back; fail loudly instead of masking it. (This
+# is their one gated run; the fast batch above deliberately omits them.)
+PROP_OUT=$(python -m pytest -q -rs tests/test_properties.py \
+    tests/test_estimation_properties.py 2>&1) || {
+    echo "$PROP_OUT"; exit 1; }
+echo "$PROP_OUT" | tail -1
+if echo "$PROP_OUT" | grep -qiE "skipped"; then
+    echo "FAIL: property tests were skipped — they must always run" >&2
+    echo "$PROP_OUT" >&2
+    exit 1
+fi
+echo "property suites ran (no skips)"
 
 # serving-throughput smoke: the benchmark must run end to end — including
-# the steady-state continuous-batching scheduler path — and write a
-# well-formed report (without clobbering the committed trajectory)
+# the steady-state continuous-batching scheduler path and the online
+# feedback-vs-drift section — and write a well-formed report (without
+# clobbering the committed trajectory). The pre-seeded stub verifies the
+# history-preservation contract: an existing report must fold into the new
+# file's `history`, never be clobbered.
 SMOKE_OUT="${TMPDIR:-/tmp}/BENCH_serving_smoke.json"
 rm -f "$SMOKE_OUT"
+printf '%s' '{"engine": "ci-history-stub", "rows": [{"batch": 1, "qps": 1.0}]}' \
+    > "$SMOKE_OUT"
 python -m benchmarks.serving_throughput --smoke --out "$SMOKE_OUT"
 SMOKE_OUT="$SMOKE_OUT" python - <<'PY'
 import json, os
@@ -40,9 +63,35 @@ for key in ("saturated_qps", "oneshot_qps", "vs_jit_engine", "steady_qps",
     assert key in steady, f"steady_state missing {key}"
     assert steady[key] > 0, f"steady_state has bad {key}"
 assert steady["spec_jit"] + steady["spec_reference"] > 0, "no groups routed"
+
+# the online-feedback drift section: present, well-formed, and directionally
+# right even at smoke scale (the committed full-size report carries the
+# >= 0.9 oracle-recovery acceptance bar)
+fb = report["feedback"]
+for key in ("online_acc", "oracle_acc", "frozen_acc", "recovery",
+            "frozen_vs_oracle", "steady_overhead_vs_frozen", "replan_time_s",
+            "feedback_labels", "feedback_drifts", "plan_stale_dropped",
+            "estimator_version", "acc_trajectory"):
+    assert key in fb, f"feedback missing {key}"
+for key in ("online_acc", "oracle_acc", "frozen_acc"):
+    assert 0.0 < fb[key] <= 1.0, f"feedback has bad {key}: {fb[key]}"
+assert fb["feedback_labels"] > 0, "no labels flowed through the loop"
+assert fb["feedback_drifts"] > 0, "drift never detected on drifted traffic"
+assert fb["plan_stale_dropped"] > 0, "drift never re-selected a plan"
+assert fb["estimator_version"] > 0, "estimator never versioned"
+assert fb["online_acc"] > fb["frozen_acc"], "feedback did not beat frozen plans"
+assert fb["recovery"] > fb["frozen_vs_oracle"], "no recovery over frozen"
+
+# history preservation: the pre-existing report (the stub seeded above)
+# must survive as a history entry
+hist = report["history"]
+assert isinstance(hist, list) and hist, "prior report was clobbered, not kept"
+assert hist[-1].get("engine") == "ci-history-stub", f"history lost: {hist[-1]}"
+
 print("serving smoke OK:", [(r["batch"], round(r["qps"])) for r in report["rows"]],
       "| steady", round(steady["saturated_qps"]),
-      f"({steady['vs_jit_engine']:.2f}x jit), p99 {steady['p99_ms']:.2f}ms")
+      f"({steady['vs_jit_engine']:.2f}x jit), p99 {steady['p99_ms']:.2f}ms",
+      f"| feedback recovery {fb['recovery']:.2f} (frozen {fb['frozen_vs_oracle']:.2f})")
 PY
 
 # docs link check: README.md / docs/serving.md must not reference files

@@ -231,6 +231,21 @@ class ThriftLLM:
         self.costs = np.asarray(costs, np.float64)
         self._cache.clear()
 
+    def trim_cache(self, max_entries: int) -> int:
+        """Drop the oldest cached selections beyond ``max_entries``.
+
+        Selection keys embed the p-vector, so once an estimate moves (the
+        online-feedback steady state) its old entries can never be hit
+        again — without trimming, continuous drift would grow the memo
+        indefinitely. Insertion order doubles as age (never-rekeyed dict).
+        Returns the number of entries dropped."""
+        drop = len(self._cache) - int(max_entries)
+        if drop <= 0:
+            return 0
+        for key in list(self._cache)[:drop]:
+            del self._cache[key]
+        return drop
+
     def theta(self, p: np.ndarray, budget: float) -> int:
         afford = np.flatnonzero(self.costs <= budget + 1e-15)
         p_star = float(np.max(clip_probs(p)[afford])) if afford.size else 1.0

@@ -57,6 +57,23 @@ class OracleWorkload:
         labels = rng.integers(self.num_classes, size=n)
         return cid, emb, labels
 
+    def drift_arms(self, arms, p, clusters=None) -> np.ndarray:
+        """Shift arms' *true* per-cluster accuracy mid-stream — the
+        online-feedback scenario (a provider silently swaps or degrades a
+        model; FrugalGPT/MetaLLM's drift setting). Sets
+        ``p_true[clusters, arm] = p`` for each arm in ``arms`` (all
+        clusters when ``clusters`` is None) and returns the previous
+        values, so a benchmark can restore them."""
+        arms = np.atleast_1d(np.asarray(arms, np.int64))
+        rows = (
+            np.arange(self.num_clusters)
+            if clusters is None
+            else np.atleast_1d(np.asarray(clusters, np.int64))
+        )
+        old = self.p_true[np.ix_(rows, arms)].copy()
+        self.p_true[np.ix_(rows, arms)] = np.clip(p, 0.0, 1.0)
+        return old
+
     def invoke(
         self, arm: int, cluster: int, label: int, rng: np.random.Generator
     ) -> int:

@@ -1,5 +1,7 @@
-"""Serving runtime: arm engine, ThriftLLM router, plan service, scheduler."""
+"""Serving runtime: arm engine, ThriftLLM router, plan service, scheduler,
+online estimation feedback."""
 from .engine import LMArm, OracleArm, PoolEngine, USD_PER_FLOP
+from .feedback import FeedbackLog, FeedbackReport
 from .plans import GroupPlan, PlanService
 from .router import PendingRoute, RouteResult, ThriftRouter
 from .scheduler import (
@@ -12,6 +14,7 @@ from .scheduler import (
 
 __all__ = [
     "LMArm", "OracleArm", "PoolEngine", "USD_PER_FLOP",
+    "FeedbackLog", "FeedbackReport",
     "GroupPlan", "PlanService",
     "ThriftRouter", "RouteResult", "PendingRoute",
     "BatchScheduler", "Request", "RequestFuture", "RequestResult",

@@ -1,0 +1,312 @@
+"""Online estimation feedback from served traffic.
+
+The paper estimates per-(cluster, arm) success probabilities once, offline
+(Sec. 3.1). In production the estimates drift — FrugalGPT and MetaLLM (see
+PAPERS.md) both show router quality degrading as per-model accuracy moves
+and recovering under online reward feedback. This module closes that loop
+for the serving stack:
+
+* **FeedbackLog.observe** — the scheduler registers every served request at
+  completion, keyed by request id: its cluster plus the (arm, response)
+  pairs of the waves that actually ran. Predictions come for free from the
+  request futures; ground truth arrives later, asynchronously.
+* **record / record_many** — a ground-truth label arrives for a request id.
+  The label is matched against the stored responses, giving one per-arm
+  correctness row for *invoked* arms only, which accumulates into
+  per-(cluster, arm) success/attempt count buffers. Nothing touches the
+  estimator yet — labels can arrive mid-wave without perturbing routing.
+* **apply** — called by the scheduler at admission boundaries (never
+  mid-wave): buffered counts fold into the estimator as one vectorized
+  :meth:`~repro.core.estimation.SuccessProbEstimator.update_counts` call
+  per touched cluster, bumping the strictly monotone estimator ``version``.
+
+**Drift gating.** A fold only invalidates a cluster's cached plans when the
+estimate *actually moved*: the candidate post-fold estimate is compared
+per-arm against the plan-visible snapshot (the estimate the current plans
+were built from) with a Wilson interval-overlap test (reusing
+:func:`~repro.core.estimation.wilson_interval`). Disjoint intervals on any
+observed arm ⇒ drift ⇒ the fold is plan-visible (the cluster's plan
+``version`` bumps and the PlanService's version-keyed caches miss lazily).
+Overlapping intervals ⇒ confirming feedback ⇒ the fold still tightens the
+estimate but the plan version stays put, so hot-path plan cache hits
+survive.
+
+Known limitation (the classic bandit trade-off, out of scope here): once a
+plan stops invoking an arm, served traffic yields no more feedback for it,
+so a *recovered* arm is only rediscovered by re-estimation or exploration.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.estimation import (
+    SuccessProbEstimator,
+    fold_counts,
+    wilson_interval,
+)
+
+
+@dataclasses.dataclass
+class FeedbackReport:
+    """What one admission-boundary :meth:`FeedbackLog.apply` folded in."""
+
+    labels: int = 0                     # labeled requests folded
+    clusters: Tuple[int, ...] = ()      # clusters that received feedback
+    drifted: Tuple[int, ...] = ()       # subset whose plans invalidated
+    version: int = 0                    # estimator version after the fold
+
+
+class FeedbackLog:
+    """Asynchronous ground-truth feedback, keyed by request id.
+
+    Owned by a :class:`~repro.serving.scheduler.BatchScheduler` (pass
+    ``feedback=True``) or constructed standalone and shared across
+    schedulers bound to the same estimator.
+
+    Args:
+      estimator: the :class:`SuccessProbEstimator` to stream feedback into.
+      delta: interval failure target for the refreshed Hoeffding CIs.
+      drift_delta: failure target of the Wilson intervals in the drift
+        test — smaller widens the intervals, making the detector *less*
+        trigger-happy (more feedback needed before plans re-select).
+      max_watch: outcome-retention window: only the newest ``max_watch``
+        observed requests are retained — older unlabeled outcomes are
+        evicted, and already-labeled ids age out of the bookkeeping too,
+        so memory stays bounded whether or not labels ever arrive.
+    """
+
+    def __init__(
+        self,
+        estimator: SuccessProbEstimator,
+        delta: float = 0.01,
+        drift_delta: float = 0.05,
+        max_watch: int = 1 << 20,
+    ):
+        self.estimator = estimator
+        self.delta = float(delta)
+        self.drift_delta = float(drift_delta)
+        self.max_watch = int(max_watch)
+        # request-id authority: schedulers bound to this log draw ids here,
+        # so sharing one log across schedulers can never collide keys
+        self._next_id = 0
+        # request id -> (block id, row); blocks hold whole retired-group
+        # matrices (columnar, no per-request slicing on the retire path)
+        self._watch: Dict[int, Tuple[int, int]] = {}
+        self._watch_order: Deque[int] = collections.deque()
+        # block id -> [clusters (B,), schedule (B,T), responses (B,T),
+        #              invoked (B,T), live row refcount]
+        self._blocks: Dict[int, List] = {}
+        self._next_block = 0
+        # cluster -> [successes (L,), attempts (L,), labeled queries]
+        self._pending: Dict[int, List] = {}
+        self._pending_labels = 0
+        self.labels = 0          # labels matched to a watched request
+        self.unmatched = 0       # labels for unknown/evicted/duplicate ids
+        self.evicted = 0         # watched outcomes dropped by max_watch
+        self.applies = 0         # admission-boundary folds that did work
+        self.drifts = 0          # cluster-folds that invalidated plans
+
+    def next_ids(self, n: int) -> np.ndarray:
+        """Reserve ``n`` fresh request ids. The log is the id authority so
+        that multiple schedulers sharing it stay collision-free."""
+        start = self._next_id
+        self._next_id += int(n)
+        return np.arange(start, start + n, dtype=np.int64)
+
+    # ------------------------------------------------------------------
+    # Serving-side registration
+    # ------------------------------------------------------------------
+    def observe(
+        self,
+        ids: np.ndarray,            # (B,) request ids
+        clusters: np.ndarray,       # (B,)
+        schedule: np.ndarray,       # (B, T) arm id per wave, -1 = none
+        responses: np.ndarray,      # (B, T) class id per wave, -1 = not run
+        invoked: np.ndarray,        # (B, T) wave actually ran
+    ) -> None:
+        """Register a retired group's outcomes to await ground truth.
+
+        Columnar: the group's (schedule, responses, invoked) matrices are
+        stored whole (one block, no per-request slicing on the retire
+        path); a request's invoked-arm rows are extracted lazily when its
+        label arrives — feedback stays masked to invoked arms, matching
+        what a real deployment can observe. Never touches the estimator or
+        any rng, so enabling feedback with zero labels is
+        routing-identical to feedback disabled.
+        """
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return
+        bid = self._next_block
+        self._next_block += 1
+        self._blocks[bid] = [
+            np.asarray(clusters, np.int64), schedule, responses, invoked,
+            int(ids.size),
+        ]
+        watch, order = self._watch, self._watch_order
+        for i, rid in enumerate(ids.tolist()):
+            watch[rid] = (bid, i)
+            order.append(rid)
+        # retention: the deque (not the dict) is the bounded object, so
+        # ids whose labels already arrived are trimmed too — a healthily
+        # labeled long-running server can't leak bookkeeping
+        while len(order) > self.max_watch:
+            self._evict(order.popleft())
+
+    def _evict(self, rid: int) -> None:
+        ent = self._watch.pop(rid, None)
+        if ent is not None:
+            self.evicted += 1
+            self._release_block(ent[0])
+
+    def _release_block(self, bid: int, rows: int = 1) -> None:
+        blk = self._blocks[bid]
+        blk[4] -= rows
+        if blk[4] == 0:          # last live row gone: free the matrices
+            del self._blocks[bid]
+
+    @property
+    def watching(self) -> int:
+        """Completed requests currently awaiting a label."""
+        return len(self._watch)
+
+    @property
+    def pending(self) -> int:
+        """Labeled requests buffered for the next admission-boundary fold."""
+        return self._pending_labels
+
+    # ------------------------------------------------------------------
+    # Label arrival
+    # ------------------------------------------------------------------
+    def record(self, request_id: int, label: int) -> bool:
+        """Ground truth arrived for a served request; returns True if the
+        id matched a watched outcome. Buffers per-(cluster, arm) counts;
+        the estimator is only touched at the next :meth:`apply`."""
+        return self.record_many([request_id], [label]) == 1
+
+    def _buf(self, cid: int) -> List:
+        buf = self._pending.get(cid)
+        if buf is None:
+            L = self.estimator.num_arms
+            buf = self._pending[cid] = [
+                np.zeros(L, np.float64), np.zeros(L, np.float64), 0,
+            ]
+        return buf
+
+    def record_many(self, request_ids, labels) -> int:
+        """Batch label ingestion; returns how many ids matched.
+
+        Columnar like the rest of the serving stack: ids resolve to
+        (block, row) via one dict pop each, then every block's matched
+        rows accumulate into the per-(cluster, arm) buffers with a few
+        scatter-adds — no per-request numpy work."""
+        ids = np.asarray(request_ids, np.int64).ravel()
+        labs = np.asarray(labels, np.int64).ravel()
+        by_block: Dict[int, Tuple[List[int], List[int]]] = {}
+        matched = 0
+        for rid, lab in zip(ids.tolist(), labs.tolist()):
+            ent = self._watch.pop(rid, None)
+            if ent is None:
+                self.unmatched += 1
+                continue
+            matched += 1
+            rows, row_labs = by_block.setdefault(ent[0], ([], []))
+            rows.append(ent[1])
+            row_labs.append(lab)
+        for bid, (rows, row_labs) in by_block.items():
+            clusters, schedule, responses, invoked, _ = self._blocks[bid]
+            rows = np.asarray(rows, np.int64)
+            row_labs = np.asarray(row_labs, np.int64)
+            mask = invoked[rows]                                  # (k, T)
+            correct = (responses[rows] == row_labs[:, None]) & mask
+            cl = clusters[rows]
+            for cid in np.unique(cl):
+                sel = cl == cid
+                m = mask[sel]
+                arms = schedule[rows[sel]][m]
+                buf = self._buf(int(cid))
+                # arms repeat across requests: scatter-add, not fancy +=
+                np.add.at(buf[0], arms, correct[sel][m].astype(np.float64))
+                np.add.at(buf[1], arms, 1.0)
+                buf[2] += int(sel.sum())
+            self._release_block(bid, rows.size)
+        self._pending_labels += matched
+        self.labels += matched
+        return matched
+
+    # ------------------------------------------------------------------
+    # Admission-boundary fold
+    # ------------------------------------------------------------------
+    def _moved(self, st, cand_p: np.ndarray, cand_counts: np.ndarray,
+               observed: np.ndarray) -> bool:
+        """Interval-overlap drift test: did the estimate actually move?
+
+        Compares the candidate post-fold estimate against the *plan-visible
+        snapshot* (what the cached plans were built from), per arm, at each
+        side's own counts. Disjoint Wilson intervals on any arm the feedback
+        observed ⇒ drift. Comparing against the snapshot (not the previous
+        fold) means slow drift still accumulates to a detection instead of
+        hiding inside per-batch noise.
+        """
+        lo_old, hi_old = wilson_interval(
+            st.plan_p_hat, st.plan_arm_counts, self.drift_delta
+        )
+        lo_new, hi_new = wilson_interval(cand_p, cand_counts, self.drift_delta)
+        disjoint = (lo_new > hi_old) | (hi_new < lo_old)
+        return bool((disjoint & observed).any())
+
+    def apply(self) -> FeedbackReport:
+        """Fold buffered feedback into the estimator — one vectorized
+        ``update_counts`` per touched cluster, drift-gated plan visibility.
+
+        Called by the scheduler at admission boundaries (never mid-wave),
+        so every query of a batch routes against one consistent estimator
+        version. A no-op (empty report) when nothing is buffered.
+        """
+        if not self._pending:
+            return FeedbackReport(version=self.estimator.version)
+        est = self.estimator
+        touched, drifted = [], []
+        labels = self._pending_labels
+        for cid in sorted(self._pending):
+            succ, att, nq = self._pending[cid]
+            st = est.clusters[cid]
+            observed = att > 0
+            # the exact fold update_counts will commit, pre-computed (via
+            # the shared fold_counts) so the drift decision sees it first
+            cand_p, cand_counts = fold_counts(st.p_hat, st.arm_counts, succ, att)
+            moved = self._moved(st, cand_p, cand_counts, observed)
+            est.update_counts(
+                cid, succ, att, queries=nq, delta=self.delta,
+                plan_visible=moved,
+            )
+            touched.append(cid)
+            if moved:
+                drifted.append(cid)
+        self._pending.clear()
+        self._pending_labels = 0
+        self.applies += 1
+        self.drifts += len(drifted)
+        return FeedbackReport(
+            labels=labels,
+            clusters=tuple(touched),
+            drifted=tuple(drifted),
+            version=est.version,
+        )
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        """Feedback counters (mirrored into ``BatchScheduler.stats``)."""
+        return {
+            "feedback_labels": self.labels,
+            "feedback_unmatched": self.unmatched,
+            "feedback_pending": self._pending_labels,
+            "feedback_watching": len(self._watch),
+            "feedback_evicted": self.evicted,
+            "feedback_applies": self.applies,
+            "feedback_drifts": self.drifts,
+        }

@@ -11,14 +11,19 @@ lookup plus array gathers; this is the same structure OptLLM's
 query-to-model assignment and FrugalGPT's offline-learned cascade policy
 use to make cost-aware routing cheap per query.
 
-Consistency is guarded by fingerprints: every plan key carries the engine
-cost-vector digest plus its *own cluster's* p-hat digest, and
-:meth:`PlanService.refresh` (called by the router once per batch) detects
-pool changes. A cost change drops everything (plans, batch tables, the
-selector's selection cache — re-snapshotting the new cost vector into the
-selector); a single re-estimated cluster only invalidates that cluster's
-plans and the batch tables, so online estimator updates keep the rest of
-the cache hot.
+Consistency is guarded by *versioned keys*: every plan key carries the
+engine cost-vector digest plus its own cluster's plan ``version`` (the
+estimator version of the cluster's last plan-visible change), and batch
+tables key on the estimator's global ``plan_version``. Stale entries
+therefore invalidate **lazily** — a re-estimated cluster's old plans can
+never serve again because no lookup ever constructs their key — and
+:meth:`PlanService.refresh` (called by the router once per batch) is
+reduced to a cheap version/cost compare: on an estimate change it only
+counts the invalidation and prunes the dead entries; on a cost change it
+drops everything and re-snapshots the new cost vector into the selector.
+Online feedback (``serving/feedback.py``) bumps cluster versions only for
+clusters whose estimates actually drifted, so feedback that confirms
+current estimates keeps every cache hot.
 
 Hot-pair precomputation: the service counts how often each (cluster,
 budget) pair is planned; :meth:`prewarm` builds plans ahead of traffic for
@@ -29,7 +34,6 @@ invalidation) without paying selection latency on user queries.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from collections import Counter
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -116,8 +120,8 @@ class GroupPlan:
     planned: float
 
 
-# (cluster id, budget, own-cluster p-digest + cost fingerprint) -> plan
-PlanKey = Tuple[int, float, bytes]
+# (cluster id, budget, own-cluster plan version, cost fingerprint) -> plan
+PlanKey = Tuple[int, float, int, bytes]
 
 
 class PlanService:
@@ -134,99 +138,90 @@ class PlanService:
         self.engine = engine
         self.num_classes = int(num_classes)
         self._cache: Dict[PlanKey, GroupPlan] = {}
-        self._table_cache: Dict[Tuple[float, bytes], BatchTables] = {}
+        self._table_cache: Dict[Tuple[float, bytes, int], BatchTables] = {}
         self._pair_counts: Counter = Counter()
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
         self.prefetches = 0
+        self.stale_dropped = 0
         self._cost_fp = self.engine.fingerprint()
-        self._p_digests = self._cluster_digests()
-        self._p_ids = self._cluster_ids_snapshot()
-        self._fingerprint = self.pool_fingerprint()
+        self._plan_version = self._estimator_version()
 
     # ------------------------------------------------------------------
     # Pool identity
     # ------------------------------------------------------------------
-    def _cluster_digests(self) -> Dict[int, bytes]:
-        """Per-cluster digest of the p-hat estimate — plan keys carry their
-        own cluster's digest, so re-estimating one cluster only misses that
-        cluster's plans."""
-        return {
-            int(cid): hashlib.blake2b(
-                np.ascontiguousarray(stats.p_hat, np.float64).tobytes(),
-                digest_size=16,
-            ).digest()
-            for cid, stats in self.estimator.clusters.items()
-        }
+    def _estimator_version(self) -> int:
+        """The estimator's global plan version — bumped whenever any
+        cluster's estimate changes in a plan-visible way (a direct
+        ``update`` call, or drifting feedback; confirming feedback leaves
+        it put). Batch-table keys carry it; per-pair plan keys carry the
+        finer per-cluster version. NOTE: assigning ``p_hat`` directly
+        bypasses the version machinery — follow such edits with
+        ``estimator.touch(cid)`` or the caches cannot see them."""
+        return int(getattr(self.estimator, "plan_version", 0))
 
-    def _cluster_ids_snapshot(self) -> Tuple:
-        """Object-identity snapshot of the estimate arrays. Estimator
-        updates rebind ``p_hat`` (see ``SuccessProbEstimator.update``), so
-        unchanged identities mean unchanged estimates — letting refresh()
-        skip re-hashing every p-vector on the per-batch hot path. In-place
-        mutation of a p_hat array bypasses this shortcut; rebind instead."""
-        return tuple(
-            (int(cid), id(stats.p_hat))
-            for cid, stats in self.estimator.clusters.items()
-        )
-
-    def pool_fingerprint(self) -> bytes:
-        """Digest of everything any plan depends on besides (cluster,
-        budget): the engine cost vector and each cluster's p-hat estimate.
-        Folded into batch-table keys; per-pair plan keys use the finer
-        (cost, own-cluster) granularity."""
-        h = hashlib.blake2b(digest_size=16)
-        h.update(self._cost_fp)
-        for cid in sorted(self._p_digests):
-            h.update(np.int64(cid).tobytes())
-            h.update(self._p_digests[cid])
-        return h.digest()
+    def _cluster_version(self, cid: int) -> int:
+        st = self.estimator.clusters.get(int(cid))
+        return int(st.version) if st is not None else -1
 
     def refresh(self) -> bool:
-        """Re-fingerprint the pool; on change, invalidate what the change
-        actually touches. Returns True if an invalidation happened.
+        """Re-check the pool identity; returns True if anything invalidated.
 
-        * Cost change (re-priced or swapped arms): every plan depends on
-          prices, so all caches drop, the selector's selection cache is
-          cleared and its cost snapshot re-pulled from the engine.
-        * Estimate change (one or more clusters re-calibrated): batch
-          tables rebuild, but per-pair plans carry their own cluster's
-          p-digest in the key, so only the changed clusters' plans miss —
-          the rest keep hitting. Stale entries are pruned.
+        Invalidation is **lazy** for estimate changes: plan and table keys
+        carry estimator versions, so a stale entry can never serve even if
+        refresh is never called — this method just counts the invalidation
+        and prunes the dead entries so the cache doesn't grow unboundedly
+        under continuous feedback. A *cost* change (re-priced or swapped
+        arms) is handled eagerly because the selector's internal cost
+        snapshot must be re-pulled from the engine before the next build.
         """
         cost_fp = self.engine.fingerprint()
-        p_ids = self._cluster_ids_snapshot()
-        if cost_fp == self._cost_fp and p_ids == self._p_ids:
+        plan_version = self._estimator_version()
+        if cost_fp == self._cost_fp and plan_version == self._plan_version:
             return False
-        p_digests = self._cluster_digests()
-        self._p_ids = p_ids
-        if cost_fp == self._cost_fp and p_digests == self._p_digests:
-            return False  # arrays rebound but values identical
         if cost_fp != self._cost_fp:
             self._cache.clear()
+            self._table_cache.clear()
             self._pair_counts.clear()
             self.selector.rebind_costs(self.engine.costs)
+            self._cost_fp = cost_fp
         else:
-            changed = {
-                cid for cid in set(p_digests) | set(self._p_digests)
-                if p_digests.get(cid) != self._p_digests.get(cid)
-            }
-            for key in [k for k in self._cache if k[0] in changed]:
-                del self._cache[key]
-        self._table_cache.clear()
-        self._cost_fp = cost_fp
-        self._p_digests = p_digests
-        self._fingerprint = self.pool_fingerprint()
+            self._prune_stale()
+        self._plan_version = plan_version
         self.invalidations += 1
         return True
+
+    def _prune_stale(self) -> int:
+        """Drop cache entries whose version/cost key no longer matches the
+        live pool (they can never be looked up again). Returns plans
+        dropped; accumulated in ``stale_dropped`` — the replan counter the
+        serving stats expose, since every pruned plan is one the feedback
+        loop forced a re-selection of."""
+        live = [k for k in self._cache if k == self._plan_key(k[0], k[1])]
+        dropped = len(self._cache) - len(live)
+        if dropped:
+            self._cache = {k: self._cache[k] for k in live}
+        version = self._estimator_version()
+        self._table_cache = {
+            k: v for k, v in self._table_cache.items()
+            if k[1] == self._cost_fp and k[2] == version
+        }
+        # the selector memoizes on p-vector bytes: entries for dead
+        # estimates can never hit again, so bound them too or continuous
+        # drift grows the memo forever (oldest-first, live plans stay)
+        self.selector.trim_cache(max(128, 4 * len(self._cache)))
+        self.stale_dropped += dropped
+        return dropped
 
     # ------------------------------------------------------------------
     # Planning
     # ------------------------------------------------------------------
     def _plan_key(self, cid: int, budget: float) -> PlanKey:
-        return (int(cid), float(budget),
-                self._p_digests.get(int(cid), b"") + self._cost_fp)
+        # the cluster's live plan version is read at every lookup, so a
+        # version bump makes old entries unreachable without any scan
+        return (int(cid), float(budget), self._cluster_version(cid),
+                self._cost_fp)
 
     def plan(self, cid: int, budget: float) -> GroupPlan:
         """Return the wave plan for (cluster ``cid``, ``budget``), building
@@ -279,7 +274,7 @@ class PlanService:
         the traffic accounting: per-query (cluster, budget) counts keep
         :meth:`hot_pairs` meaningful, and a cache hit counts one plan hit
         per cluster the batch actually contains."""
-        key = (float(budget), self._fingerprint)
+        key = (float(budget), self._cost_fp, self._estimator_version())
         tables = self._table_cache.get(key)
         if tables is not None:
             if idx is None:
@@ -397,4 +392,5 @@ class PlanService:
             "plan_invalidations": self.invalidations,
             "plan_prefetches": self.prefetches,
             "plan_cache_size": len(self._cache),
+            "plan_stale_dropped": self.stale_dropped,
         }

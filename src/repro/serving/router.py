@@ -6,8 +6,10 @@ Serving pipeline per batch (Figure 1 of the paper, batched for TPU):
      memoized by the :class:`~repro.serving.plans.PlanService` — selection
      depends only on (cluster, budget, pool fingerprint) — and the derived
      wave plan (arm order, log-weights, Prop. 4 residuals) is what the hot
-     path consumes. Hot pairs can be precomputed ahead of traffic and the
-     cache invalidates itself when the pool changes.
+     path consumes. Hot pairs can be precomputed ahead of traffic; plan
+     keys carry estimator *versions*, so a cost change or a drifting
+     online-feedback fold (``serving/feedback.py``) invalidates exactly
+     the plans it obsoletes — lazily, with no scan on the hot path.
   3. *wavefront* adaptive invocation across the WHOLE batch. Two data-plane
      implementations with identical semantics for deterministic arms:
 
@@ -270,6 +272,10 @@ class PendingRoute:
         self.router = router
         self.kind = kind
         self.spec_cost = state.pop("spec_cost", 0.0)
+        # estimator plan-version the group's plans were gathered at —
+        # observability for the online-feedback loop (a served group can be
+        # attributed to the estimate generation that planned it)
+        self.plan_version = state.pop("plan_version", 0)
         self._result: Optional[RouteResult] = result
         if result is not None:
             return
@@ -715,10 +721,55 @@ class ThriftRouter:
             w_T=w_T, res_T=res_T, wc_T=wc_T, empty=empty, planned=planned,
             payloads=self.engine.prepare_payloads(queries),
             stop_margin=float(stop_margin), rng=rng, spec_cost=spec_cost,
+            plan_version=getattr(self.estimator, "plan_version", 0),
         )
         if kind == "jit":
             pending._dispatch_jit()
         return pending
+
+    # ------------------------------------------------------------------
+    def prewarm_compile(
+        self,
+        max_batch: int,
+        max_waves: Optional[int] = None,
+        all_batch_buckets: bool = False,
+    ) -> int:
+        """Pre-compile the jitted wave program ahead of traffic.
+
+        Compiles every *wave-depth* bucket a plan could schedule (plans
+        re-selected by online feedback may deepen across a bucket), at the
+        batch bucket of ``max_batch`` — the bucket full admissions land in.
+        Partial flushes and split budget groups land in *smaller* batch
+        buckets; pass ``all_batch_buckets=True`` to compile those too (one
+        program per (B, T) bucket pair — thorough, proportionally slower),
+        as a serving replica taking ragged traffic should. ``max_waves``
+        defaults to the pool size (no plan can schedule more arms than
+        exist). Returns the number of bucket programs visited; no-op for
+        routers pinned to the reference plane."""
+        if not self.jit_waves:
+            return 0
+        if all_batch_buckets:
+            b_buckets = sorted({
+                _bucket(b, base=8) for b in range(1, max(1, int(max_batch)) + 1)
+            })
+        else:
+            b_buckets = [_bucket(int(max_batch), base=8)]
+        waves = int(max_waves) if max_waves is not None else len(self.engine.arms)
+        t_buckets = sorted({_bucket(t, base=4) for t in range(1, max(1, waves) + 1)})
+        for Bp in b_buckets:
+            for Tp in t_buckets:
+                with enable_x64():
+                    _wave_scan(
+                        np.full((Tp, Bp), -1, np.int32),
+                        np.full((Tp, Bp), -1, np.int32),
+                        np.zeros((Tp, Bp), np.float64),
+                        np.full((Tp, Bp), -np.inf, np.float64),
+                        np.zeros(Bp, np.float64),
+                        STOP_MARGIN,
+                        num_classes=self.num_classes,
+                        use_kernel=self.use_kernel,
+                    )
+        return len(b_buckets) * len(t_buckets)
 
     # ------------------------------------------------------------------
     def route_batch(

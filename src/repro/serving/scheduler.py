@@ -41,7 +41,17 @@ OptLLM's per-query assignment — see PAPERS.md):
   filling (admission deadline not yet due), the scheduler snapshots the
   queued (cluster, budget) composition and asks the PlanService to build
   any missing wave plans (:meth:`PlanService.prefetch_for`), so selection
-  latency is paid before the flush instead of on it.
+  latency is paid before the flush instead of on it. (A feedback fold at
+  the next admission can obsolete a prefetched plan for a *drifted*
+  cluster — the price of replanning, not a correctness issue.)
+* **Online estimation feedback** — with ``feedback=True`` the scheduler
+  registers every completed request's (cluster, invoked arms, responses)
+  in a :class:`~repro.serving.feedback.FeedbackLog`; ground truth reported
+  later via :meth:`BatchScheduler.record_outcome` buffers per-(cluster,
+  arm) success counts, which fold into the estimator at admission
+  boundaries (never mid-wave), bump the estimator version, and — only for
+  clusters whose estimates actually drifted (Wilson interval-overlap
+  test) — lazily invalidate the version-keyed plan caches.
 
 The PR 2 one-shot API survives unchanged: ``flush()`` admits one batch,
 routes it synchronously as a single heterogeneous-budget call and returns
@@ -58,6 +68,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.distributed.fault import StragglerMitigator
+
+from .feedback import FeedbackLog, FeedbackReport
 
 
 @dataclasses.dataclass
@@ -81,16 +93,24 @@ class RequestResult:
     stop_wave: int                   # waves invoked before Prop. 4 stopped it
     mode: str                        # data plane that served it: jit | reference
     latency_s: float                 # completion time - arrival time
+    request_id: int = -1             # feedback key for record_outcome()
 
 
 class RequestFuture:
-    """Single-request completion handle returned by :meth:`BatchScheduler.submit`."""
+    """Single-request completion handle returned by :meth:`BatchScheduler.submit`.
 
-    __slots__ = ("_sched", "request", "_result")
+    ``request_id`` is the scheduler-assigned key for asynchronous
+    ground-truth feedback: once the future completes, the caller may report
+    the true label via ``scheduler.record_outcome(fut.request_id, label)``.
+    """
 
-    def __init__(self, sched: "BatchScheduler", request: Request):
+    __slots__ = ("_sched", "request", "request_id", "_result")
+
+    def __init__(self, sched: "BatchScheduler", request: Request,
+                 request_id: int = -1):
         self._sched = sched
         self.request = request
+        self.request_id = request_id
         self._result: Optional[RequestResult] = None
 
     def done(self) -> bool:
@@ -117,6 +137,7 @@ class RequestFuture:
             stop_wave=int(stop_waves[0]),
             mode=mode,
             latency_s=float(latencies[0]),
+            request_id=self.request_id,
         )
 
 
@@ -129,12 +150,17 @@ class BlockFuture:
     __slots__ = (
         "_sched", "n", "_ndone", "predictions", "costs", "planned_costs",
         "clusters", "budgets", "stop_waves", "latencies_s", "modes",
+        "request_ids",
     )
 
-    def __init__(self, sched: "BatchScheduler", n: int):
+    def __init__(self, sched: "BatchScheduler", n: int,
+                 request_ids: Optional[np.ndarray] = None):
         self._sched = sched
         self.n = n
         self._ndone = 0
+        self.request_ids = (
+            np.full(n, -1, np.int64) if request_ids is None else request_ids
+        )
         self.predictions = np.full(n, -1, np.int64)
         self.costs = np.zeros(n, np.float64)
         self.planned_costs = np.zeros(n, np.float64)
@@ -177,10 +203,10 @@ class _Segment:
     """
 
     __slots__ = ("payloads", "emb", "budgets", "arrival", "slo",
-                 "sink", "pos", "requests")
+                 "sink", "pos", "ids", "requests")
 
     def __init__(self, payloads, emb, budgets, arrival, slo, sink, pos,
-                 requests=None):
+                 ids, requests=None):
         self.payloads = payloads      # (n, ...) array or list
         self.emb = emb                # (n, d)
         self.budgets = budgets        # (n,)
@@ -188,6 +214,7 @@ class _Segment:
         self.slo = slo                # (n,) with nan = no SLO
         self.sink = sink              # RequestFuture | BlockFuture
         self.pos = pos                # (n,) rows of `sink` these fill
+        self.ids = ids                # (n,) scheduler-assigned request ids
         self.requests = requests      # Optional[List[Request]] (submit path)
 
     def __len__(self) -> int:
@@ -198,6 +225,7 @@ class _Segment:
         head = _Segment(
             self.payloads[:k], self.emb[:k], self.budgets[:k],
             self.arrival[:k], self.slo[:k], self.sink, self.pos[:k],
+            self.ids[:k],
             self.requests[:k] if self.requests is not None else None,
         )
         self.payloads = self.payloads[k:]
@@ -206,6 +234,7 @@ class _Segment:
         self.arrival = self.arrival[k:]
         self.slo = self.slo[k:]
         self.pos = self.pos[k:]
+        self.ids = self.ids[k:]
         if self.requests is not None:
             self.requests = self.requests[k:]
         return head
@@ -215,15 +244,16 @@ class _Group:
     """One dispatched budget group riding in flight."""
 
     __slots__ = ("pending", "arrival", "part_sinks", "part_id", "part_pos",
-                 "n", "requests")
+                 "ids", "n", "requests")
 
     def __init__(self, pending, arrival, part_sinks, part_id, part_pos,
-                 requests=None):
+                 ids=None, requests=None):
         self.pending = pending        # router.PendingRoute
         self.arrival = arrival        # (n,)
         self.part_sinks = part_sinks  # list of futures contributing rows
         self.part_id = part_id        # (n,) index into part_sinks; None = one part
         self.part_pos = part_pos      # (n,) row of the sink each query fills
+        self.ids = ids                # (n,) request ids (feedback key)
         self.n = arrival.shape[0]
         self.requests = requests
 
@@ -266,6 +296,14 @@ class BatchScheduler:
         cost into bigger device batches exactly when latency is already
         queue-bound. 1 (default) keeps admissions at ``max_batch``; the
         legacy ``flush()`` API never coalesces.
+      feedback: online estimation feedback from served traffic. ``True``
+        builds a :class:`~repro.serving.feedback.FeedbackLog` over the
+        router's estimator; or pass a FeedbackLog instance (shareable
+        across schedulers bound to the same estimator). ``None``/``False``
+        (default) disables it — zero overhead, PR 3 behavior. With
+        feedback on, report ground truth via :meth:`record_outcome` /
+        :meth:`record_outcomes`; pending labels fold into the estimator at
+        the next admission boundary (never mid-wave).
     """
 
     def __init__(
@@ -279,10 +317,15 @@ class BatchScheduler:
         slo_margin_s: float = 0.002,
         prefetch_plans: bool = True,
         coalesce: int = 1,
+        feedback=None,
     ):
         if speculation not in ("auto", "jit", "reference"):
             raise ValueError(f"unknown speculation mode {speculation!r}")
         self.router = router
+        if feedback is True:
+            feedback = FeedbackLog(router.estimator)
+        self.feedback: Optional[FeedbackLog] = feedback or None
+        self._next_id = 0
         self.max_batch = int(max_batch)
         self.coalesce = max(1, int(coalesce))
         self.max_wait_s = float(max_wait_s)
@@ -327,10 +370,47 @@ class BatchScheduler:
     def _sync_plan_stats(self):
         """Mirror the router's PlanService counters into ``stats`` so the
         serving control plane sees plan-cache hit/miss/invalidation rates
-        without reaching into router internals."""
+        without reaching into router internals. With feedback enabled, the
+        FeedbackLog's label/drift counters are mirrored too — together they
+        are the hit/miss/replan/drift dashboard of the online loop."""
         plans = getattr(self.router, "plans", None)
         if plans is not None:
             self._stats.update(plans.stats())
+        if self.feedback is not None:
+            self._stats.update(self.feedback.stats())
+
+    # ------------------------------------------------------------------
+    # Online ground-truth feedback (see serving/feedback.py)
+    # ------------------------------------------------------------------
+    def record_outcome(self, request_id: int, label: int) -> bool:
+        """Report the ground-truth label of a completed request (keyed by
+        ``RequestFuture.request_id`` / ``BlockFuture.request_ids``). The
+        label is buffered and folds into the estimator at the next
+        admission boundary — routing in flight is never perturbed. Returns
+        True if the id matched a watched outcome."""
+        if self.feedback is None:
+            raise RuntimeError(
+                "feedback is disabled; construct BatchScheduler(..., feedback=True)"
+            )
+        return self.feedback.record(request_id, label)
+
+    def record_outcomes(self, request_ids, labels) -> int:
+        """Batch :meth:`record_outcome`; returns how many ids matched."""
+        if self.feedback is None:
+            raise RuntimeError(
+                "feedback is disabled; construct BatchScheduler(..., feedback=True)"
+            )
+        return self.feedback.record_many(request_ids, labels)
+
+    def apply_feedback(self) -> Optional[FeedbackReport]:
+        """Fold any pending labels into the estimator now. Called
+        automatically at every admission boundary; public so a quiescent
+        server (no traffic arriving) can still absorb late labels."""
+        if self.feedback is None or not self.feedback.pending:
+            return None
+        report = self.feedback.apply()
+        self._sync_plan_stats()
+        return report
 
     def prewarm(self, budgets: Optional[List[float]] = None) -> int:
         """Precompute wave plans ahead of traffic (delegates to the
@@ -364,16 +444,28 @@ class BatchScheduler:
     # ------------------------------------------------------------------
     # Admission
     # ------------------------------------------------------------------
+    def _alloc_ids(self, n: int) -> np.ndarray:
+        """Fresh request ids. With feedback bound, the FeedbackLog is the
+        id authority, so schedulers sharing one log never collide keys."""
+        if self.feedback is not None:
+            return self.feedback.next_ids(n)
+        start = self._next_id
+        self._next_id += n
+        return np.arange(start, start + n, dtype=np.int64)
+
     def submit(self, req: Request) -> RequestFuture:
-        """Enqueue one request; returns its completion future."""
-        fut = RequestFuture(self, req)
+        """Enqueue one request; returns its completion future (which carries
+        the ``request_id`` to feed :meth:`record_outcome` later)."""
+        rid = int(self._alloc_ids(1)[0])
+        fut = RequestFuture(self, req, request_id=rid)
         self._queue.append(_Segment(
             [req.payload],
             np.asarray(req.embedding, np.float64)[None, :],
             np.asarray([req.budget], np.float64),
             np.asarray([req.arrival_s], np.float64),
             np.asarray([np.nan if req.slo_s is None else req.slo_s]),
-            fut, np.zeros(1, np.int64), requests=[req],
+            fut, np.zeros(1, np.int64), np.asarray([rid], np.int64),
+            requests=[req],
         ))
         self._qlen += 1
         self._queue_version += 1
@@ -403,9 +495,10 @@ class BatchScheduler:
                 np.asarray(arrival_s, np.float64), (n,)
             ).copy()
         slo = np.full(n, np.nan if slo_s is None else float(slo_s))
-        blk = BlockFuture(self, n)
+        ids = self._alloc_ids(n)
+        blk = BlockFuture(self, n, request_ids=ids)
         self._queue.append(_Segment(
-            payloads, emb, budgets, arrival, slo, blk, np.arange(n),
+            payloads, emb, budgets, arrival, slo, blk, np.arange(n), ids,
         ))
         self._qlen += n
         self._queue_version += 1
@@ -492,7 +585,8 @@ class BatchScheduler:
         block-submission hot path) is zero-copy."""
         if len(take) == 1:
             s = take[0]
-            return s.payloads, s.emb, s.budgets, s.arrival, [s.sink], None, s.pos
+            return (s.payloads, s.emb, s.budgets, s.arrival, [s.sink], None,
+                    s.pos, s.ids)
         payloads = BatchScheduler._cat_payloads([s.payloads for s in take])
         emb = np.concatenate([s.emb for s in take])
         budgets = np.concatenate([s.budgets for s in take])
@@ -502,14 +596,20 @@ class BatchScheduler:
             np.full(len(s), i, np.int64) for i, s in enumerate(take)
         ])
         part_pos = np.concatenate([s.pos for s in take])
-        return payloads, emb, budgets, arrival, part_sinks, part_id, part_pos
+        ids = np.concatenate([s.ids for s in take])
+        return payloads, emb, budgets, arrival, part_sinks, part_id, part_pos, ids
 
     def _dispatch_batch(self):
-        """Admit one batch and dispatch its budget groups into flight."""
+        """Admit one batch and dispatch its budget groups into flight.
+
+        Pending ground-truth feedback folds into the estimator *here* — the
+        admission boundary — so every query of the batch routes against one
+        consistent estimator version and a fold can never land mid-wave."""
+        self.apply_feedback()
         take = self._take_batch()
         if not take:
             return
-        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos = (
+        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos, ids = (
             self._stack_segments(take)
         )
         self._stats["flushes"] += 1
@@ -526,11 +626,11 @@ class BatchScheduler:
         for rows in group_rows:
             if rows is None:
                 g_payloads, g_emb, g_budgets = payloads, emb, budgets
-                g_arrival, g_id, g_pos = arrival, part_id, part_pos
+                g_arrival, g_id, g_pos, g_ids = arrival, part_id, part_pos, ids
             else:
                 g_payloads = self._index_payloads(payloads, rows)
                 g_emb, g_budgets = emb[rows], budgets[rows]
-                g_arrival, g_pos = arrival[rows], part_pos[rows]
+                g_arrival, g_pos, g_ids = arrival[rows], part_pos[rows], ids[rows]
                 g_id = part_id[rows] if part_id is not None else None
             pending = self.router.begin_route(
                 g_payloads, g_emb, g_budgets, mode=mode,
@@ -539,7 +639,7 @@ class BatchScheduler:
             self._stats["spec_" + pending.kind] += 1
             self._stats["batches"] += 1
             self._inflight.append(
-                _Group(pending, g_arrival, part_sinks, g_id, g_pos)
+                _Group(pending, g_arrival, part_sinks, g_id, g_pos, ids=g_ids)
             )
         self._stats["inflight_peak"] = max(
             self._stats["inflight_peak"], len(self._inflight)
@@ -606,16 +706,23 @@ class BatchScheduler:
                 res.planned_costs, res.clusters, res.budgets,
                 res.stop_waves, pending.kind, time.monotonic(),
             )
-        self._account(res)
+        self._account(res, group)
         return group.n
 
-    def _account(self, res):
+    def _account(self, res, group: Optional[_Group] = None):
         lat = [
             arm.latency_s(int(n)) if n else 0.0
             for arm, n in zip(self.router.engine.arms, res.arm_query_counts)
         ]
         self.mitigator.record_step(lat)
         self.arm_query_totals += np.asarray(res.arm_query_counts, np.int64)
+        if self.feedback is not None and group is not None and group.ids is not None:
+            # register the group's outcomes so later ground-truth labels can
+            # be matched to (cluster, invoked arms, responses) by request id
+            self.feedback.observe(
+                group.ids, res.clusters, res.schedule, res.responses,
+                res.invoked,
+            )
         self._sync_plan_stats()
 
     # ------------------------------------------------------------------
@@ -698,10 +805,11 @@ class BatchScheduler:
         latency of arms the wavefront really invoked. Futures of the
         flushed requests complete before this returns.
         """
+        self.apply_feedback()
         take = self._take_batch(coalesce=False)
         if not take:
             return []
-        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos = (
+        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos, ids = (
             self._stack_segments(take)
         )
         pending = self.router.begin_route(
@@ -713,13 +821,13 @@ class BatchScheduler:
         self._stats["batches"] += len(np.unique(budgets))
         self._stats["flushes"] += 1
         self._stats["requests"] += budgets.shape[0]
-        group = _Group(pending, arrival, part_sinks, part_id, part_pos)
+        group = _Group(pending, arrival, part_sinks, part_id, part_pos, ids=ids)
         self._resolve_rows(
             group, np.arange(group.n), res.predictions, res.costs,
             res.planned_costs, res.clusters, res.budgets, res.stop_waves,
             pending.kind, time.monotonic(),
         )
-        self._account(res)
+        self._account(res, group)
         requests: List[Request] = []
         for s in take:
             if s.requests is not None:

@@ -1,0 +1,221 @@
+"""Property tests on the online estimation loop (Sec. 3.1 + feedback).
+
+Invariants the serving feedback subsystem leans on:
+  * folding feedback is order-invariant and count-consistent — any batch
+    interleaving reaches the same estimate;
+  * Hoeffding / Wilson / median-boosted intervals always contain p_hat and
+    shrink monotonically in n;
+  * the estimator version is strictly monotone under any interleaving of
+    feedback folds, and plan visibility is exactly what bumps the
+    per-cluster plan versions.
+
+Runs on the real ``hypothesis`` engine when installed, else on the
+in-repo ``_hypolite`` fallback — scripts/ci.sh fails if these skip.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: see requirements-test.txt
+    from _hypolite import given, settings, strategies as st
+
+from repro.core.estimation import (
+    SuccessProbEstimator,
+    hoeffding_interval,
+    median_boost_rounds,
+    median_boosted_interval,
+    wilson_interval,
+)
+
+
+def _tiny_estimator(L: int, clusters: int = 1, n: int = 8, seed: int = 0):
+    """Cheap estimator: `clusters` well-separated clusters of n rows each."""
+    rng = np.random.default_rng(seed)
+    table = (rng.random((n * clusters, L)) < 0.7).astype(float)
+    d = max(clusters, 2)
+    emb = np.repeat(np.eye(d)[:clusters], n, axis=0) * 10.0
+    cids = np.repeat(np.arange(clusters), n)
+    return SuccessProbEstimator(table, emb, cids, min_cluster_size=1)
+
+
+def _random_feedback(rng, k: int, L: int):
+    """k random (successes, attempts, queries) feedback batches over L arms,
+    with attempts masked per arm (served traffic observes arms unevenly)."""
+    batches = []
+    for _ in range(k):
+        attempts = rng.integers(0, 4, L).astype(float)
+        successes = np.floor(rng.random(L) * (attempts + 1))
+        batches.append((successes, attempts, int(attempts.max(initial=0))))
+    return batches
+
+
+# ---------------------------------------------------------------------------
+# update: order-invariance + count consistency
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 6), st.integers(1, 5))
+def test_update_counts_order_invariant_and_count_consistent(seed, k, L):
+    rng = np.random.default_rng(seed)
+    batches = _random_feedback(rng, k, L)
+    est_fwd = _tiny_estimator(L)
+    est_rev = _tiny_estimator(L)
+    for succ, att, nq in batches:
+        est_fwd.update_counts(0, succ, att, queries=nq)
+    for succ, att, nq in batches[::-1]:
+        est_rev.update_counts(0, succ, att, queries=nq)
+    a, b = est_fwd.clusters[0], est_rev.clusters[0]
+    # same estimate whichever order the feedback batches landed in
+    np.testing.assert_allclose(a.p_hat, b.p_hat, rtol=0, atol=1e-9)
+    # counts are exact bookkeeping, not approximations
+    np.testing.assert_array_equal(a.arm_counts, b.arm_counts)
+    expect_counts = 8.0 + sum(att for _, att, _ in batches)
+    np.testing.assert_array_equal(a.arm_counts, expect_counts)
+    assert a.count == b.count == 8 + sum(nq for _, _, nq in batches)
+    # and the fold is count-consistent: estimate == total successes / total
+    est_ref = _tiny_estimator(L)
+    base_succ = est_ref.clusters[0].p_hat * 8.0
+    total_succ = base_succ + sum(succ for succ, _, _ in batches)
+    np.testing.assert_allclose(
+        a.p_hat * a.arm_counts, total_succ, rtol=0, atol=1e-9
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 20), st.integers(2, 4))
+def test_update_rows_equals_one_shot_fold(seed, n, L):
+    """Folding (n, L) outcome rows one by one == folding them as one batch."""
+    rng = np.random.default_rng(seed)
+    rows = (rng.random((n, L)) < rng.random(L)).astype(float)
+    est_one = _tiny_estimator(L)
+    est_many = _tiny_estimator(L)
+    est_one.update(0, rows)
+    for r in rows:
+        est_many.update(0, r)
+    np.testing.assert_allclose(
+        est_one.clusters[0].p_hat, est_many.clusters[0].p_hat,
+        rtol=0, atol=1e-9,
+    )
+    assert est_one.clusters[0].count == est_many.clusters[0].count
+
+
+# ---------------------------------------------------------------------------
+# intervals: containment + monotone shrink in n
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    st.lists(st.floats(0.0, 1.0), min_size=1, max_size=6),
+    st.integers(1, 500),
+    st.integers(1, 500),
+    st.floats(0.001, 0.2),
+)
+def test_hoeffding_wilson_contain_and_shrink(ps, n1, n2, delta):
+    p = np.asarray(ps)
+    n_small, n_big = min(n1, n2), max(n1, n2)
+    for fn in (hoeffding_interval, wilson_interval):
+        lo_s, hi_s = fn(p, n_small, delta)
+        lo_b, hi_b = fn(p, n_big, delta)
+        # always contain p_hat (1e-9: clipping noise at the 0/1 endpoints)
+        assert (lo_s - 1e-9 <= p).all() and (p <= hi_s + 1e-9).all()
+        assert (lo_b - 1e-9 <= p).all() and (p <= hi_b + 1e-9).all()
+        # width shrinks monotonically in n
+        assert ((hi_b - lo_b) <= (hi_s - lo_s) + 1e-9).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.floats(0.0, 1.0), min_size=2, max_size=5),
+    st.floats(0.001, 0.2),
+)
+def test_intervals_vectorized_counts_match_scalar(ps, delta):
+    """Per-arm array n (the feedback path) == stacking scalar calls."""
+    p = np.asarray(ps)
+    ns = np.arange(1, p.size + 1) * 7
+    for fn in (hoeffding_interval, wilson_interval):
+        lo_v, hi_v = fn(p, ns, delta)
+        for i, n in enumerate(ns):
+            lo_i, hi_i = fn(p[i : i + 1], int(n), delta)
+            np.testing.assert_allclose(lo_v[i], lo_i[0], rtol=0, atol=1e-12)
+            np.testing.assert_allclose(hi_v[i], hi_i[0], rtol=0, atol=1e-12)
+    # n = 0 entries degrade to the vacuous interval, not a division error
+    lo, hi = hoeffding_interval(p, np.zeros(p.size), delta)
+    assert (lo == 0).all() and (hi == 1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6), st.integers(8, 64), st.integers(2, 5))
+def test_median_boosted_contains_and_bound_shrinks(seed, n, L):
+    rng = np.random.default_rng(seed)
+    table = (rng.random((n, L)) < rng.random(L)).astype(float)
+    delta, delta_l = 0.05, 0.25
+    p, lo, hi = median_boosted_interval(table, delta, seed=seed)
+    # the reported interval always contains the reported estimate
+    assert (lo - 1e-9 <= p).all() and (p <= hi + 1e-9).all()
+    # realized width never exceeds the subsample Hoeffding bound, and that
+    # bound shrinks monotonically in n (the estimator is randomized, so the
+    # *bound* is the monotone object)
+    def bound(m):
+        sub = max(1, int(m * 0.5))
+        return 2.0 * np.sqrt(np.log(2.0 / delta_l) / (2.0 * sub))
+
+    assert ((hi - lo) <= bound(n) + 1e-9).all()
+    assert bound(2 * n) <= bound(n) + 1e-12
+    # Lemma 5 repetition count grows as the failure target tightens
+    assert median_boost_rounds(L, delta / 10, delta_l) >= median_boost_rounds(
+        L, delta, delta_l
+    )
+
+
+# ---------------------------------------------------------------------------
+# estimator version: strictly monotone under any interleaving
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 12), st.integers(2, 3))
+def test_version_strictly_monotone_under_interleaving(seed, k, clusters):
+    rng = np.random.default_rng(seed)
+    L = 3
+    est = _tiny_estimator(L, clusters=clusters)
+    assert est.version == 0 and est.plan_version == 0
+    seen = [0]
+    for _ in range(k):
+        cid = int(rng.integers(clusters))
+        plan_visible = bool(rng.integers(2))
+        if rng.integers(2):
+            est.update(cid, (rng.random((2, L)) < 0.5).astype(float))
+            plan_visible = True  # direct updates are always plan-visible
+        else:
+            succ, att, nq = _random_feedback(rng, 1, L)[0]
+            est.update_counts(cid, succ, att, queries=nq,
+                              plan_visible=plan_visible)
+        # strictly monotone: every fold bumps, regardless of interleaving
+        assert est.version == seen[-1] + 1
+        seen.append(est.version)
+        if plan_visible:
+            assert est.clusters[cid].version == est.version
+            assert est.plan_version == est.version
+        # cluster/plan versions never outrun the global version
+        assert all(c.version <= est.version for c in est.clusters.values())
+        assert est.plan_version <= est.version
+
+
+def test_plan_visibility_gates_plan_version():
+    """Confirming feedback (plan_visible=False) advances the estimator
+    version but leaves the plan version — and the plan snapshot — put."""
+    est = _tiny_estimator(3)
+    st0 = est.clusters[0]
+    snap_p = st0.plan_p_hat
+    est.update_counts(0, np.ones(3), np.full(3, 2.0), queries=2,
+                      plan_visible=False)
+    assert est.version == 1 and est.plan_version == 0
+    assert est.clusters[0].version == 0
+    assert est.clusters[0].plan_p_hat is snap_p      # snapshot untouched
+    est.update_counts(0, np.ones(3), np.full(3, 2.0), queries=2,
+                      plan_visible=True)
+    assert est.version == 2 and est.plan_version == 2
+    assert est.clusters[0].version == 2
+    assert est.clusters[0].plan_p_hat is est.clusters[0].p_hat

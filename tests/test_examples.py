@@ -1,0 +1,55 @@
+"""Examples smoke tests: the documented entry points must actually run.
+
+Runs ``examples/quickstart.py`` and ``examples/budget_sweep.py`` as real
+subprocesses (the way the README tells a user to) under a tiny config, so
+an API refactor that breaks the public examples fails the suite instead of
+rotting silently.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run_example(script: str, *args: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / script), *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO,
+        timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"{script} exited {proc.returncode}\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}"
+    )
+    return proc.stdout
+
+
+def test_quickstart_runs_tiny():
+    out = _run_example("quickstart.py", "--queries", "80", "--history", "300")
+    assert "pool costs" in out
+    assert "budget" in out and "accuracy" in out
+    # the frontier table printed one row per default budget
+    assert sum(1 for line in out.splitlines() if line.strip().startswith("1e-")
+               or " 1e-" in line or "e-0" in line) >= 1
+    assert "ThriftLLM=" in out           # the single-arm comparison ran
+
+
+def test_budget_sweep_runs_tiny():
+    out = _run_example(
+        "budget_sweep.py",
+        "--queries", "30", "--history", "300", "--budgets", "1e-4", "5e-4",
+    )
+    assert "Thrift" in out and "cascade" in out
+    # one table row per requested budget + the blender footer
+    rows = [l for l in out.splitlines() if l.strip().startswith(("1e-04", "5e-04"))]
+    assert len(rows) == 2, out
+    assert "LLM-Blender-style" in out

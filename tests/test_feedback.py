@@ -1,0 +1,367 @@
+"""Online estimation feedback: equivalence, drift gating, lazy versioned
+invalidation, and the drifted-traffic recovery acceptance bar.
+
+Four contracts:
+  * a scheduler with feedback *enabled* but zero labels recorded is
+    bit-identical to PR 3 behavior (and continuous == one-shot still
+    holds), with no plan-cache hit-rate regression;
+  * feedback that merely confirms current estimates folds into the
+    estimator without invalidating a single plan (drift gating);
+  * plan-cache keys carry estimator versions, so a stale plan can never
+    serve — even when ``refresh()`` is never called (lazy invalidation) —
+    and a drifted-arm scenario re-selects plans only for drifted clusters;
+  * on synthetic drifted traffic, the feedback-enabled front-end recovers
+    >= 90% of the oracle-replan accuracy while the frozen-plan baseline
+    does not (the ISSUE 4 acceptance criterion, mirrored by the bench's
+    ``feedback`` section).
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core.clustering import kmeans
+from repro.core.estimation import SuccessProbEstimator
+from repro.data import OracleWorkload
+from repro.serving import (
+    BatchScheduler,
+    FeedbackLog,
+    OracleArm,
+    PoolEngine,
+    Request,
+    ThriftRouter,
+)
+
+
+@dataclasses.dataclass
+class TabularArm:
+    """Deterministic arm: response to query j is the precomputed resp[j]."""
+
+    name: str
+    cost: float
+    resp: np.ndarray
+
+    def classify_batch(self, queries) -> np.ndarray:
+        return self.resp[np.asarray(queries, np.int64)]
+
+    def latency_s(self, batch: int) -> float:
+        return 1e-6 * self.cost * batch
+
+
+def _tabular_pool(K=4, L=8, clusters=5, B=96, seed=3):
+    """Deterministic pool (bit-identical equivalence testing)."""
+    wl = OracleWorkload(num_classes=K, num_clusters=clusters, num_arms=L, seed=seed)
+    T, emb, _ = wl.response_table(60 * clusters, seed=seed + 1)
+    assign, _ = kmeans(emb, clusters, seed=0)
+    est = SuccessProbEstimator(T, emb, assign)
+    rng = np.random.default_rng(seed + 2)
+    qcid, qemb, qlab = wl.sample_queries(B, rng)
+    R = np.stack(
+        [
+            wl.invoke_batch(a, qcid, qlab, np.random.default_rng(seed + 100 + a))
+            for a in range(L)
+        ]
+    )
+    engine = PoolEngine(
+        [TabularArm(f"t{a}", float(wl.costs[a]), R[a]) for a in range(L)]
+    )
+    router = ThriftRouter(engine, est, num_classes=K)
+    return est, engine, router, qemb, qlab
+
+
+def _oracle_pool(K=4, C=4, L=12, hist=120, seed=3, arm_seed=11, est_seed=4):
+    """Oracle pool over *true* cluster ids — the drift scenario's substrate
+    (truth is mutable via ``OracleWorkload.drift_arms``)."""
+    wl = OracleWorkload(num_classes=K, num_clusters=C, num_arms=L, seed=seed)
+    T, emb, cid_h = wl.response_table(hist * C, seed=est_seed)
+    est = SuccessProbEstimator(T, emb, cid_h)
+    engine = PoolEngine(
+        [OracleArm(f"a{i}", wl, i, seed=arm_seed) for i in range(L)]
+    )
+    router = ThriftRouter(engine, est, num_classes=K)
+    return wl, est, engine, router
+
+
+# ---------------------------------------------------------------------------
+# Zero-feedback equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_zero_labels_is_bit_identical_and_no_hit_rate_regression():
+    """Feedback enabled + zero labels == feedback disabled, exactly:
+    same predictions/costs/stop waves on an interleaved-budget stream,
+    same plan-cache hit/miss counters, estimator never versioned."""
+    est_a, engine, router_a, qemb, _ = _tabular_pool(B=96)
+    est_b, _, router_b, _, _ = _tabular_pool(B=96)
+    rng = np.random.default_rng(11)
+    levels = np.quantile(engine.costs, [0.4, 0.8]) * 2.5
+    budgets = rng.choice(levels, size=96)
+
+    sched_fb = BatchScheduler(router_a, max_batch=32, max_wait_s=0.0,
+                              feedback=True)
+    sched_off = BatchScheduler(router_b, max_batch=32, max_wait_s=0.0)
+    blk_fb = sched_fb.submit_many(np.arange(96), qemb, budgets)
+    blk_off = sched_off.submit_many(np.arange(96), qemb, budgets)
+    sched_fb.drain()
+    sched_off.drain()
+
+    np.testing.assert_array_equal(blk_fb.predictions, blk_off.predictions)
+    np.testing.assert_allclose(blk_fb.costs, blk_off.costs, rtol=1e-15, atol=0)
+    np.testing.assert_array_equal(blk_fb.stop_waves, blk_off.stop_waves)
+    # plan-cache hit rate must not regress with feedback enabled
+    for key in ("plan_hits", "plan_misses", "plan_invalidations",
+                "plan_stale_dropped"):
+        assert sched_fb.stats[key] == sched_off.stats[key], key
+    # nothing ever touched the estimator
+    assert est_a.version == 0 and est_a.plan_version == 0
+    assert sched_fb.stats["feedback_labels"] == 0
+    assert sched_fb.stats["feedback_watching"] == 96  # outcomes registered
+    assert sched_fb.apply_feedback() is None          # no-op with no labels
+
+
+def test_continuous_with_feedback_matches_oneshot_stream():
+    """PR 3's continuous == one-shot equivalence survives the feedback
+    plumbing (request ids, outcome registration at retirement)."""
+    est, engine, router, qemb, _ = _tabular_pool(B=64)
+    _, _, router2, _, _ = _tabular_pool(B=64)
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+
+    sched = BatchScheduler(router, max_batch=16, max_wait_s=0.0, feedback=True)
+    futs = [
+        sched.submit(Request(payload=j, embedding=qemb[j], budget=budget))
+        for j in range(64)
+    ]
+    sched.drain()
+    preds = np.zeros(64, np.int64)
+    costs = np.zeros(64, np.float64)
+    for s in range(0, 64, 16):
+        rows = np.arange(s, s + 16)
+        res = router2.route_batch(rows, qemb[rows], budget)
+        preds[rows] = res.predictions
+        costs[rows] = res.costs
+    np.testing.assert_array_equal([f.result().prediction for f in futs], preds)
+    np.testing.assert_allclose(
+        [f.result().cost for f in futs], costs, rtol=1e-15, atol=0
+    )
+    # futures expose the feedback key
+    assert [f.request_id for f in futs] == list(range(64))
+    assert all(f.result().request_id == f.request_id for f in futs)
+
+
+# ---------------------------------------------------------------------------
+# Drift gating + versioned lazy invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_confirming_feedback_keeps_plans_hot():
+    """Labels consistent with current estimates fold in (version bumps,
+    counts grow) without invalidating any plan or batch table."""
+    wl, est, engine, router = _oracle_pool()
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    sched = BatchScheduler(router, max_batch=128, max_wait_s=0.0, feedback=True)
+    rng = np.random.default_rng(7)
+
+    cid, qemb, lab = wl.sample_queries(256, rng)
+    blk = sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+    sched.drain()
+    misses0 = sched.stats["plan_misses"]
+    sched.record_outcomes(blk.request_ids, lab)       # truth unchanged
+
+    cid, qemb, lab = wl.sample_queries(256, rng)
+    blk = sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+    sched.drain()
+    st = sched.stats
+    assert st["feedback_applies"] == 1 and st["feedback_drifts"] == 0
+    assert est.version > 0                     # feedback really folded
+    assert est.plan_version == 0               # ...but stayed plan-invisible
+    assert all(c.version == 0 for c in est.clusters.values())
+    assert st["plan_misses"] == misses0        # every plan kept hitting
+    assert st["plan_stale_dropped"] == 0
+
+
+def test_stale_version_keys_never_serve_without_refresh():
+    """Lazy invalidation: a plan-visible estimator change makes old keys
+    unreachable immediately — plan() and batch_tables() rebuild even if
+    refresh() is never called — and refresh() prunes the corpses."""
+    _, est, engine, router = _oracle_pool()
+    plans = router.plans
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    cid = int(est.cluster_order[0])
+
+    p0 = plans.plan(cid, budget)
+    t0 = plans.batch_tables(budget)
+    assert plans.plan(cid, budget) is p0               # warm
+    assert plans.batch_tables(budget) is t0
+    size0 = len(plans._cache)
+
+    est.update(cid, np.ones((40, len(engine.arms))))   # plan-visible change
+    # NO refresh() call — the version in the key does the invalidation
+    p1 = plans.plan(cid, budget)
+    t1 = plans.batch_tables(budget)
+    assert p1 is not p0 and t1 is not t0
+    assert not np.array_equal(p1.weights, p0.weights) or not np.array_equal(
+        p1.order, p0.order
+    )
+    assert len(plans._cache) == size0 + 1              # corpse still cached
+    assert plans.refresh() is True                     # detected + pruned
+    assert len(plans._cache) == size0
+    assert plans.stats()["plan_stale_dropped"] == 1
+    assert plans.plan(cid, budget) is p1               # fresh entry survives
+
+
+def test_drift_replans_only_drifted_clusters():
+    """A drifted arm re-selects plans for the drifted cluster alone; the
+    other clusters' plans and versions stay put."""
+    wl, est, engine, router = _oracle_pool()
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    sched = BatchScheduler(router, max_batch=256, max_wait_s=0.0, feedback=True)
+    rng = np.random.default_rng(5)
+
+    target = 0
+    plan_arms = router.plans.plan(target, budget).order
+    wl.drift_arms(plan_arms, 0.30, clusters=[target])
+
+    drifted = False
+    for _ in range(4):
+        cid, qemb, lab = wl.sample_queries(256, rng)
+        blk = sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+        sched.drain()
+        sched.record_outcomes(blk.request_ids, lab)
+        if sched.stats["feedback_drifts"]:
+            drifted = True
+    sched.apply_feedback()
+    assert drifted or sched.stats["feedback_drifts"] > 0
+    # only the drifted cluster's estimate went plan-visible
+    assert est.clusters[target].version > 0
+    others = [c for c in est.clusters if c != target]
+    assert all(est.clusters[c].version == 0 for c in others)
+    # and only its plan was re-selected: the arm mix moved away from the
+    # broken ensemble while other clusters kept their cached plans
+    new_plan = router.plans.plan(target, budget)
+    assert not np.array_equal(np.sort(new_plan.order), np.sort(plan_arms))
+    assert sched.stats["plan_stale_dropped"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: drifted-traffic recovery
+# ---------------------------------------------------------------------------
+
+
+def test_online_feedback_recovers_oracle_accuracy_frozen_does_not():
+    """ISSUE 4 acceptance: an arm's true accuracy shifts mid-stream; the
+    feedback-enabled front-end recovers >= 90% of the oracle-replan
+    accuracy on the drifted clusters' tail traffic, the frozen-plan
+    baseline does not. (Same scenario as the bench's ``feedback``
+    section, sized for CI.)"""
+    wl, est, engine, router = _oracle_pool()
+    K, L = 4, len(engine.arms)
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    sched = BatchScheduler(router, max_batch=256, max_wait_s=0.0, feedback=True)
+
+    # mid-stream shift: the served plans' arms degrade to barely-above-
+    # random (0.30 > 1/K keeps selection inside the paper's p > 1/K regime)
+    targets = [0, 1]
+    for t in targets:
+        wl.drift_arms(router.plans.plan(t, budget).order, 0.30, clusters=[t])
+
+    # oracle replan: re-estimated from post-drift truth
+    T2, emb2, cid2 = wl.response_table(120 * est.cluster_order.size, seed=14)
+    oracle = ThriftRouter(
+        PoolEngine([OracleArm(f"o{i}", wl, i, seed=12) for i in range(L)]),
+        SuccessProbEstimator(T2, emb2, cid2),
+        num_classes=K,
+    )
+    # frozen baseline: an identical pre-drift pool (same seeds -> same stale
+    # estimates) whose truth drifts the same way, but no feedback ever folds
+    wl_f, _, _, frozen = _oracle_pool(arm_seed=13)
+    wl_f.p_true[:] = wl.p_true
+
+    rng = np.random.default_rng(5)
+    accs, oaccs, faccs = [], [], []
+    for _ in range(8):
+        cid, qemb, lab = wl.sample_queries(256, rng)
+        m = np.isin(cid, targets)
+        q = np.column_stack([cid, lab])
+        blk = sched.submit_many(q, qemb, budget)
+        sched.drain()
+        ores = oracle.route_batch(q, qemb, budget)
+        fres = frozen.route_batch(q, qemb, budget)
+        accs.append(float((blk.predictions[m] == lab[m]).mean()))
+        oaccs.append(float((ores.predictions[m] == lab[m]).mean()))
+        faccs.append(float((fres.predictions[m] == lab[m]).mean()))
+        sched.record_outcomes(blk.request_ids, lab)   # online loop closes
+
+    online, oracle_acc, frozen_acc = (
+        float(np.mean(a[4:])) for a in (accs, oaccs, faccs)
+    )
+    assert online >= 0.9 * oracle_acc, (online, oracle_acc, accs)
+    assert frozen_acc < 0.9 * oracle_acc, (frozen_acc, oracle_acc, faccs)
+    # the loop really drove the recovery
+    st = sched.stats
+    assert st["feedback_drifts"] >= 1 and st["plan_stale_dropped"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# FeedbackLog unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_feedback_log_unmatched_eviction_and_shared_use():
+    _, est, engine, router = _oracle_pool()
+    log = FeedbackLog(est, max_watch=4)
+    sched = BatchScheduler(router, max_batch=8, max_wait_s=0.0, feedback=log)
+    assert sched.feedback is log                       # instance shareable
+    assert log.record(999, 0) is False                 # unknown id
+    assert log.stats()["feedback_unmatched"] == 1
+
+    rng = np.random.default_rng(1)
+    wl = engine.arms[0].workload
+    cid, qemb, lab = wl.sample_queries(8, rng)
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    blk = sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+    sched.drain()
+    # retention cap: only the newest 4 outcomes are still watched
+    assert log.watching == 4 and log.stats()["feedback_evicted"] == 4
+    assert log.record(int(blk.request_ids[0]), int(lab[0])) is False  # evicted
+    assert log.record(int(blk.request_ids[-1]), int(lab[-1])) is True
+    assert log.record(int(blk.request_ids[-1]), int(lab[-1])) is False  # dup
+    assert log.pending == 1
+    report = log.apply()
+    assert report.labels == 1 and report.version == est.version
+    assert log.pending == 0
+
+
+def test_shared_log_ids_unique_and_labeled_ids_age_out():
+    """Two schedulers sharing one FeedbackLog draw collision-free request
+    ids from it, and a healthily-labeled server's bookkeeping stays
+    bounded (labeled ids age out of the retention window; blocks free as
+    their last row is consumed)."""
+    _, est, engine, router = _oracle_pool()
+    _, _, _, router2 = _oracle_pool(arm_seed=17)
+    log = FeedbackLog(est, max_watch=64)
+    s1 = BatchScheduler(router, max_batch=8, max_wait_s=0.0, feedback=log)
+    s2 = BatchScheduler(router2, max_batch=8, max_wait_s=0.0, feedback=log)
+    wl = engine.arms[0].workload
+    rng = np.random.default_rng(2)
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+
+    cid, qemb, lab = wl.sample_queries(8, rng)
+    q = np.column_stack([cid, lab])
+    b1 = s1.submit_many(q, qemb, budget)
+    s1.drain()
+    b2 = s2.submit_many(q, qemb, budget)
+    s2.drain()
+    assert not set(b1.request_ids.tolist()) & set(b2.request_ids.tolist())
+    # labels resolve against the right scheduler's outcomes, no cross-talk
+    assert s1.record_outcomes(b1.request_ids, lab) == 8
+    assert s2.record_outcomes(b2.request_ids, lab) == 8
+    assert log.stats()["feedback_unmatched"] == 0
+
+    # stream many fully-labeled chunks: retention deque stays within the
+    # window and consumed blocks are freed, so nothing grows unboundedly
+    for _ in range(20):
+        cid, qemb, lab = wl.sample_queries(8, rng)
+        blk = s1.submit_many(np.column_stack([cid, lab]), qemb, budget)
+        s1.drain()
+        s1.record_outcomes(blk.request_ids, lab)
+    assert len(log._watch_order) <= 64
+    assert log.watching == 0 and not log._blocks

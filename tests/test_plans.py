@@ -167,6 +167,56 @@ def test_shared_plan_service_across_routers():
     assert router.plans.stats()["plan_misses"] == misses
 
 
+def test_out_of_band_p_hat_edit_needs_touch():
+    """Direct p_hat assignment bypasses the version machinery; the
+    documented escape hatch is estimator.touch(cid), after which stale
+    plans can never serve."""
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    cid = int(est.cluster_order[0])
+    p0 = router.plans.plan(cid, budget)
+    est.clusters[cid].p_hat = np.clip(est.clusters[cid].p_hat * 0.5, 0, 1)
+    est.touch(cid)
+    p1 = router.plans.plan(cid, budget)          # lazy key miss, no refresh
+    assert p1 is not p0
+    assert router.plans.refresh() is True        # detected + pruned
+    assert router.plans.plan(cid, budget) is p1
+
+
+def test_selector_cache_bounded_under_estimate_churn():
+    """Continuous plan-visible estimate churn must not grow the selector's
+    selection memo without bound (dead p-vector keys can never hit)."""
+    est, engine, router, qemb = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    cid = int(est.cluster_order[0])
+    rng = np.random.default_rng(0)
+    for _ in range(3):   # each churn: one dead selector entry + one live
+        est.update(cid, (rng.random((2, len(engine.arms))) < 0.7).astype(float))
+        router.plans.refresh()
+        router.plans.plan(cid, budget)
+    # trim_cache drops oldest-first once past the bound (dict order = age)
+    sel = router.selector
+    sel._cache.update({("pad", i): i for i in range(400)})
+    over = len(sel._cache)
+    cap = max(128, 4 * len(router.plans._cache))
+    est.update(cid, np.ones((2, len(engine.arms))))
+    router.plans.refresh()                        # prune path trims the memo
+    assert len(sel._cache) == cap < over
+    assert ("pad", 399) in sel._cache             # newest survive
+
+
+def test_prewarm_compile_counts_buckets():
+    est, engine, router, qemb = _make()
+    n = router.prewarm_compile(16)
+    assert n >= 1                                # one program per T bucket
+    assert router.prewarm_compile(16, max_waves=1) == 1
+    # ragged-traffic coverage: every smaller batch bucket compiles too
+    assert router.prewarm_compile(16, max_waves=1, all_batch_buckets=True) == 2
+    from repro.serving import ThriftRouter as TR
+    pinned = TR(engine, est, num_classes=4, jit_waves=False)
+    assert pinned.prewarm_compile(16) == 0       # reference plane: no-op
+
+
 def test_scheduler_exposes_plan_stats_and_prewarm():
     est, engine, router, qemb = _make(B=16)
     budget = float(np.quantile(engine.costs, 0.6)) * 2
