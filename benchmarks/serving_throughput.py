@@ -18,6 +18,12 @@ capacity at batch-256 admission (submit -> admission queue -> pipelined
 budget-group waves -> futures), and a Poisson arrival run at a fraction of
 that capacity recording per-request p50/p99 completion latency.
 
+The ``selection`` section measures the batched planner (PR 5): serial vs
+batched replan latency when G in {1, 8, 64} drifted clusters re-select at
+once, with bit-identical plans asserted across the two paths (the
+committed full-size report carries the >= 3x speedup acceptance bar at
+G = 64).
+
 Finally the ``feedback`` section measures the online estimation loop on
 synthetic *drifted* traffic: the arms the served plans rely on degrade
 mid-stream, and three pipelines route the same post-drift request stream —
@@ -376,9 +382,100 @@ def feedback_drift(num_classes: int, num_arms: int, history: int,
         "feedback_applies": int(st["feedback_applies"]),
         "feedback_drifts": int(st["feedback_drifts"]),
         "plan_stale_dropped": int(st["plan_stale_dropped"]),
+        "plan_batch_replans": int(st["plan_batch_replans"]),
+        "plan_batch_replanned": int(st["plan_batch_replanned"]),
         "plan_misses": int(st["plan_misses"]),
         "estimator_version": int(est.version),
         "estimator_plan_version": int(est.plan_version),
+    }
+
+
+def selection_replan(num_arms: int, classes: int, history: int,
+                     groups=(1, 8, 64), repeats: int = 3, seed: int = 31,
+                     eps: float = 0.25) -> dict:
+    """Serial vs batched drift-replan latency at G drifted clusters.
+
+    The PR 5 tentpole measurement: a pool with ``max(groups)`` clusters is
+    fully planned, then G clusters' estimates are invalidated
+    (``estimator.touch``) and the dropped plans re-select — once through
+    the serial per-pair path (``PlanService(batched=False)``: one SurGreedy
+    host loop per cluster, a device dispatch per greedy round per group)
+    and once through the batched planner (one ``select_many`` program for
+    all G). Both paths are warmed first (plan build + one replan cycle, so
+    jit compilation is excluded on both sides), the selector memo is
+    cleared before every timed replan (a replan must re-select, not re-hit
+    the memo), and rounds interleave serial/batched so shared-host noise
+    penalizes both equally. ``eps`` sizes the Monte-Carlo budget the way a
+    serving replan would (theta ~ 1/eps^2).
+    """
+    C = int(max(groups))
+    K, L = classes, num_arms
+    wl = OracleWorkload(num_classes=K, num_clusters=C, num_arms=L, seed=7)
+    T, emb, cid_h = wl.response_table(history * C, seed=8)
+
+    def mk(batched: bool):
+        est = SuccessProbEstimator(T, emb, cid_h)
+        engine = PoolEngine(
+            [OracleArm(f"b{i}", wl, i, seed=21) for i in range(L)]
+        )
+        router = ThriftRouter(engine, est, num_classes=K, eps=eps)
+        router.plans.batched = batched
+        return est, router
+
+    est_s, router_s = mk(False)
+    est_b, router_b = mk(True)
+    budget = float(np.quantile(router_s.engine.costs, 0.6)) * 2
+
+    def replan_once(router, est, cids):
+        for c in cids:
+            est.touch(int(c))
+        router.selector._cache.clear()   # a replan re-selects, never memo-hits
+        t0 = time.perf_counter()
+        n = router.plans.replan_stale()
+        return time.perf_counter() - t0, n
+
+    rows = []
+    plans_match = True
+    for G in groups:
+        sides = [(router_s, est_s), (router_b, est_b)]
+        cid_sets = [
+            [int(c) for c in est.cluster_order[:G]] for _, est in sides
+        ]
+        for (router, est), cids in zip(sides, cid_sets):
+            router.plans.plan_many([(c, budget) for c in cids])  # cold build
+            replan_once(router, est, cids)                       # warm compile
+        best = [np.inf, np.inf]
+        rebuilt = [0, 0]
+        for _ in range(repeats):
+            for i, ((router, est), cids) in enumerate(zip(sides, cid_sets)):
+                dt, n = replan_once(router, est, cids)
+                best[i] = min(best[i], dt)
+                rebuilt[i] = n
+        for c_s, c_b in zip(*cid_sets):
+            p_s = router_s.plans.plan(c_s, budget)
+            p_b = router_b.plans.plan(c_b, budget)
+            plans_match &= bool(np.array_equal(p_s.order, p_b.order))
+        row = {
+            "groups": int(G),
+            "serial_s": best[0],
+            "batched_s": best[1],
+            "speedup": best[0] / best[1],
+            "replanned_serial": int(rebuilt[0]),
+            "replanned_batched": int(rebuilt[1]),
+        }
+        rows.append(row)
+        print(
+            f"selection replan G={G:3d}: serial {1e3 * row['serial_s']:8.1f}ms"
+            f" | batched {1e3 * row['batched_s']:8.1f}ms"
+            f" | {row['speedup']:5.2f}x ({row['replanned_batched']} plans)"
+        )
+    return {
+        "rows": rows,
+        "pool": {"arms": L, "classes": K, "clusters": C, "budget": budget},
+        "eps": eps,
+        "groups_max": int(max(groups)),
+        "speedup_at_max": rows[-1]["speedup"],
+        "plans_match": plans_match,
     }
 
 
@@ -476,6 +573,17 @@ def run(args) -> dict:
         f" | planes jit={steady['spec_jit']} ref={steady['spec_reference']}"
     )
 
+    # batched planner: serial vs batched drift-replan latency
+    selection = selection_replan(
+        args.arms, args.classes, history=args.selection_history,
+        repeats=args.selection_repeats,
+    )
+    print(
+        f"selection replan: {selection['speedup_at_max']:.2f}x batched over "
+        f"serial at G={selection['groups_max']} drifted clusters "
+        f"(plans match: {selection['plans_match']})"
+    )
+
     # online estimation feedback on drifted traffic
     feedback = feedback_drift(
         args.classes, args.arms, history=args.feedback_history,
@@ -503,6 +611,7 @@ def run(args) -> dict:
         },
         "rows": rows,
         "steady_state": steady,
+        "selection": selection,
         "feedback": feedback,
         "plan_cache": router.plans.stats(),
         "history": _load_history(args.out),
@@ -559,6 +668,13 @@ def _load_history(path: str) -> list:
                       "overhead_vs_frozen")
             if k in feedback
         }
+    selection = prev.get("selection")
+    if selection:
+        entry["selection"] = {
+            k: selection[k]
+            for k in ("groups_max", "speedup_at_max", "plans_match")
+            if k in selection
+        }
     history.append(entry)
     return history
 
@@ -596,6 +712,14 @@ def main() -> None:
         help="historical responses per cluster for the feedback scenario",
     )
     ap.add_argument(
+        "--selection-history", type=int, default=120,
+        help="historical responses per cluster for the replan scenario",
+    )
+    ap.add_argument(
+        "--selection-repeats", type=int, default=3,
+        help="best-of rounds for the serial-vs-batched replan timing",
+    )
+    ap.add_argument(
         "--smoke", action="store_true",
         help="tiny sweep for CI: small batches, few repeats",
     )
@@ -610,6 +734,8 @@ def main() -> None:
         args.feedback_chunks = min(args.feedback_chunks, 6)
         args.feedback_chunk = min(args.feedback_chunk, 128)
         args.feedback_history = min(args.feedback_history, 80)
+        args.selection_history = min(args.selection_history, 60)
+        args.selection_repeats = min(args.selection_repeats, 2)
     run(args)
 
 

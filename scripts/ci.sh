@@ -20,7 +20,8 @@ echo "pycache hygiene OK"
 
 python -m pytest -x -q tests/test_router_batched.py tests/test_serving.py \
     tests/test_scheduler_continuous.py tests/test_plans.py \
-    tests/test_core_selection.py tests/test_feedback.py
+    tests/test_core_selection.py tests/test_feedback.py \
+    tests/test_selection_batched.py
 
 # property suites must RUN — on the real hypothesis engine when installed,
 # on the in-repo tests/_hypolite.py fallback otherwise. A skip here means
@@ -78,9 +79,30 @@ for key in ("online_acc", "oracle_acc", "frozen_acc"):
 assert fb["feedback_labels"] > 0, "no labels flowed through the loop"
 assert fb["feedback_drifts"] > 0, "drift never detected on drifted traffic"
 assert fb["plan_stale_dropped"] > 0, "drift never re-selected a plan"
+assert fb["plan_batch_replans"] > 0, "drift replans did not go batched"
+assert fb["plan_batch_replanned"] >= fb["plan_batch_replans"], \
+    "batched replans rebuilt nothing"
 assert fb["estimator_version"] > 0, "estimator never versioned"
 assert fb["online_acc"] > fb["frozen_acc"], "feedback did not beat frozen plans"
 assert fb["recovery"] > fb["frozen_vs_oracle"], "no recovery over frozen"
+
+# the batched-planner replan section: serial vs batched drift-replan
+# latency, bit-identical plans, and a real speedup at the largest G (the
+# committed full-size report carries the >= 3x acceptance bar at G = 64)
+sel = report["selection"]
+for key in ("rows", "pool", "groups_max", "speedup_at_max", "plans_match"):
+    assert key in sel, f"selection missing {key}"
+assert sel["rows"], "selection section has no rows"
+for row in sel["rows"]:
+    for key in ("groups", "serial_s", "batched_s", "speedup"):
+        assert key in row, f"selection row missing {key}"
+    assert row["serial_s"] > 0 and row["batched_s"] > 0, "bad replan timing"
+    assert row["replanned_batched"] == row["groups"], "replan did not cover G"
+assert sel["plans_match"], "batched planner diverged from serial plans"
+assert sel["groups_max"] >= 8, "no multi-group replan measured"
+# the >= 3x speedup acceptance bar lives in the committed full-size report;
+# a wall-clock assert at smoke scale would make CI flaky on loaded hosts
+assert sel["speedup_at_max"] > 0, "replan timing is malformed"
 
 # history preservation: the pre-existing report (the stub seeded above)
 # must survive as a history entry
@@ -91,7 +113,8 @@ assert hist[-1].get("engine") == "ci-history-stub", f"history lost: {hist[-1]}"
 print("serving smoke OK:", [(r["batch"], round(r["qps"])) for r in report["rows"]],
       "| steady", round(steady["saturated_qps"]),
       f"({steady['vs_jit_engine']:.2f}x jit), p99 {steady['p99_ms']:.2f}ms",
-      f"| feedback recovery {fb['recovery']:.2f} (frozen {fb['frozen_vs_oracle']:.2f})")
+      f"| feedback recovery {fb['recovery']:.2f} (frozen {fb['frozen_vs_oracle']:.2f})",
+      f"| batched replan {sel['speedup_at_max']:.2f}x at G={sel['groups_max']}")
 PY
 
 # docs link check: README.md / docs/serving.md must not reference files

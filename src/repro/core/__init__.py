@@ -21,8 +21,24 @@ from .estimation import (
     median_boosted_interval,
     wilson_interval,
 )
-from .mc import McXiEstimator, sample_pool_responses, theta_for, xi_from_responses
-from .selection import ThriftLLM, adaptive_invoke, greedy, gamma_value_batch, sur_greedy
+from .mc import (
+    GroupedXiEstimator,
+    McXiEstimator,
+    sample_pool_responses,
+    sample_pool_responses_grouped,
+    theta_for,
+    xi_from_responses,
+    xi_from_responses_grouped,
+    xi_marginal_grouped,
+)
+from .selection import (
+    ThriftLLM,
+    adaptive_invoke,
+    greedy,
+    gamma_value_batch,
+    sur_greedy,
+    sur_greedy_many,
+)
 from .types import Arm, InvocationResult, QueryClass, SelectionResult, clip_probs
 
 __all__ = [
@@ -31,8 +47,11 @@ __all__ = [
     "aggregate_log_beliefs_batch", "predict_batch", "predict_from_beliefs",
     "tie_break_argmax", "top2_beliefs",
     "gamma", "gamma_marginal", "xi_exact", "xi_exact_feasible", "xi_pair",
-    "McXiEstimator", "sample_pool_responses", "theta_for", "xi_from_responses",
-    "greedy", "gamma_value_batch", "sur_greedy", "adaptive_invoke", "ThriftLLM",
+    "McXiEstimator", "GroupedXiEstimator", "sample_pool_responses",
+    "sample_pool_responses_grouped", "theta_for",
+    "xi_from_responses", "xi_from_responses_grouped", "xi_marginal_grouped",
+    "greedy", "gamma_value_batch", "sur_greedy", "sur_greedy_many",
+    "adaptive_invoke", "ThriftLLM",
     "SuccessProbEstimator", "ClusterStats", "hoeffding_interval", "wilson_interval",
     "median_boosted_interval", "median_boost_rounds",
     "kmeans", "dbscan", "auto_eps",

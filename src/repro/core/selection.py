@@ -1,17 +1,32 @@
 """LLM ensemble selection: GreedyLLM (Alg. 1), SurGreedyLLM (Alg. 2) and the
 adaptive ThriftLLM loop (Alg. 3).
 
-The selector is control-plane code: pools are small (L ~ 12-16), so the outer
-loops are numpy; every xi evaluation inside the greedy is batched through the
-jit'd CRN Monte-Carlo estimator (one device call per greedy iteration).
+Two planes with bit-identical outputs:
+
+* the **serial** plane (:func:`sur_greedy`) — numpy control flow, one
+  device dispatch per greedy round through the grouped CRN estimator;
+* the **batched** plane (:func:`sur_greedy_many`) — G (p-vector, budget)
+  groups planned by ONE jitted program (:func:`_sur_greedy_scan`): a
+  ``lax.while`` over greedy rounds whose body evaluates every group's
+  masked candidate expansion simultaneously over stacked ``(G, theta, L)``
+  CRN response samples.
+
+Both planes evaluate xi through the same bit-stable cores in
+``repro.core.mc`` and run the same IEEE-f64 round logic (affordability,
+gain/cost ratios, the Alg. 1 p/b tie-break), so under a shared CRN seed the
+batched planner returns exactly the serial chosen sets, orders, values and
+spend — the contract ``tests/test_selection_batched.py`` pins bitwise.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from .belief import (
     aggregate_log_beliefs,
@@ -21,7 +36,12 @@ from .belief import (
     top2_beliefs,
 )
 from .correctness import gamma
-from .mc import McXiEstimator, theta_for
+from .mc import (
+    GroupedXiEstimator,
+    _marginal_xi_core,
+    bucket_size,
+    theta_for,
+)
 from .types import InvocationResult, SelectionResult, clip_probs
 
 # Continue invoking on near-ties so Prop. 4 (prediction equality) holds
@@ -48,6 +68,7 @@ def greedy(
     L = p.size
     chosen: List[int] = []
     chosen_mask = np.zeros(L, np.float32)
+    cand_buf = np.empty((L, L), np.float32)   # reused across rounds
     in_pool = np.ones(L, bool)
     spent = 0.0
     current = float(empty_value)
@@ -56,23 +77,23 @@ def greedy(
         afford = np.flatnonzero(in_pool & (b <= budget - spent + 1e-15))
         if afford.size == 0:
             break
-        cand = np.repeat(chosen_mask[None, :], afford.size, axis=0)
+        cand = cand_buf[: afford.size]
+        cand[:] = chosen_mask
         cand[np.arange(afford.size), afford] = 1.0
         vals = np.asarray(value_batch_fn(cand), np.float64)
         ratios = (vals - current) / b[afford]
         best = float(np.max(ratios))
         tied = np.flatnonzero(np.isclose(ratios, best, rtol=RATIO_TIE_RTOL, atol=1e-15))
         if tied.size > 1:  # tie-break by success-prob / cost ratio
-            pb = p[afford[tied]] / b[afford[tied]]
-            tied = tied[np.argmax(pb)]
+            ti = int(tied[np.argmax(p[afford[tied]] / b[afford[tied]])])
         else:
-            tied = tied[0]
-        pick = int(afford[int(tied)])
+            ti = int(tied[0])
+        pick = int(afford[ti])
         chosen.append(pick)
         chosen_mask[pick] = 1.0
         in_pool[pick] = False
         spent += b[pick]
-        current = float(vals[list(afford).index(pick)])  # vals aligned with afford
+        current = float(vals[ti])                 # vals aligned with afford
     return chosen, current
 
 
@@ -84,6 +105,81 @@ def gamma_value_batch(p: np.ndarray) -> Callable[[np.ndarray], np.ndarray]:
         return 1.0 - np.exp(masks @ log1m)
 
     return fn
+
+
+def _greedy_xi(
+    p: np.ndarray, b: np.ndarray, budget: float, est: GroupedXiEstimator,
+    group: int = 0,
+) -> Tuple[List[int], float, np.ndarray, np.ndarray]:
+    """Greedy-on-xi (Alg. 1 specialized to the CRN estimator), serial plane.
+
+    Identical control flow to :func:`greedy`, but marginal gains come from
+    the estimator's incremental base+candidate evaluation
+    (:meth:`GroupedXiEstimator.marginal`): the chosen set's belief table is
+    carried across rounds in pick order and each round extends it by every
+    candidate arm in one dispatch. :func:`_sur_greedy_scan` runs this exact
+    loop, on the same evaluator, inside one jitted program — keeping both
+    planes on the same arithmetic is what makes them bit-identical.
+    """
+    K = est.num_classes
+    L = int(p.size)
+    T = est.responses.shape[1]
+    resp = est.responses[group]
+    w32 = est.log_weights[group]
+    base_raw = np.zeros((1, T, K), np.float32)
+    base_cnt = np.zeros((1, T, K), np.int32)
+    in_pool = np.ones(L, bool)
+    spent = 0.0
+    current = 1.0 / K
+    chosen: List[int] = []
+    while True:
+        afford = in_pool & (b <= budget - spent + 1e-15)
+        if not afford.any():
+            break
+        vals = est.marginal(base_raw, base_cnt)[group]        # (L,) f64
+        ratios = np.where(afford, (vals - current) / b, -np.inf)
+        best = ratios.max()
+        tied = afford & (
+            (ratios == best)
+            | (np.abs(ratios - best) <= 1e-15 + RATIO_TIE_RTOL * abs(best))
+        )
+        pb = np.where(tied, p / b, -np.inf)
+        pick = int(np.argmax(pb))
+        chosen.append(pick)
+        in_pool[pick] = False
+        spent += float(b[pick])
+        current = float(vals[pick])
+        col = resp[:, pick]
+        rows = np.flatnonzero(col >= 0)
+        base_raw[0, rows, col[rows]] += w32[pick]
+        base_cnt[0, rows, col[rows]] += 1
+    return chosen, current, base_raw, base_cnt
+
+
+def _assemble_result(
+    p: np.ndarray, b: np.ndarray, budget: float, l_star: int,
+    s1: Sequence[int], s2: Sequence[int], xi_vals: np.ndarray,
+) -> SelectionResult:
+    """Shared Alg. 2 epilogue: argmax of the three candidates + Theorem 3
+    diagnostics (used by both the serial and the batched plane)."""
+    cands = [
+        np.asarray([l_star]), np.asarray(s1, np.int64), np.asarray(s2, np.int64)
+    ]
+    pick = int(np.argmax(xi_vals))
+    chosen = cands[pick]
+    return SelectionResult(
+        chosen=chosen,
+        xi_est=float(xi_vals[pick]),
+        cost=float(b[chosen].sum()) if chosen.size else 0.0,
+        budget=budget,
+        s1=cands[1],
+        s2=cands[2],
+        l_star=l_star,
+        xi_s1=float(xi_vals[1]),
+        xi_s2=float(xi_vals[2]),
+        p_star=float(p[l_star]),
+        gamma_s2=gamma(p[np.asarray(s2, np.int64)]) if len(s2) else 0.0,
+    )
 
 
 def sur_greedy(
@@ -98,49 +194,247 @@ def sur_greedy(
 ) -> SelectionResult:
     """SurGreedyLLM (Algorithm 2) with CRN Monte-Carlo xi estimation.
 
+    The serial reference plane of the planner: one group, host-side greedy
+    rounds, one device dispatch per round. :func:`sur_greedy_many` is the
+    batched plane; under the same ``key`` it bit-matches this function
+    group by group.
+
     Returns the best of {best affordable single arm, greedy-on-xi,
     greedy-on-gamma} together with the Theorem 3 diagnostics.
     """
     p = clip_probs(p)
     b = np.asarray(b, np.float64)
     K = int(num_classes)
-    est = McXiEstimator(key, p, K, theta, p_all=p_all, use_kernel=use_kernel)
 
     afford = np.flatnonzero(b <= budget + 1e-15)
     if afford.size == 0:
         return SelectionResult(
             chosen=np.zeros(0, np.int64), xi_est=1.0 / K, cost=0.0, budget=budget
         )
+    est = GroupedXiEstimator(
+        key, p[None, :], K, np.asarray([theta]), p_all=p_all,
+        use_kernel=use_kernel,
+    )
     l_star = int(afford[np.argmax(p[afford])])
-    p_star = float(p[l_star])
 
-    s1, _ = greedy(p, b, budget, est, empty_value=1.0 / K)
+    s1, _, s1_raw, s1_cnt = _greedy_xi(p, b, budget, est)
     s2, _ = greedy(p, b, budget, gamma_value_batch(p), empty_value=0.0)
 
     # Evaluate the three candidates with the *same* CRN draws.
-    masks = np.zeros((3, p.size), np.float32)
-    masks[0, l_star] = 1.0
-    if s1:
-        masks[1, np.asarray(s1)] = 1.0
-    if s2:
-        masks[2, np.asarray(s2)] = 1.0
-    xi_vals = est(masks)
-    cands = [np.asarray([l_star]), np.asarray(s1, np.int64), np.asarray(s2, np.int64)]
-    pick = int(np.argmax(xi_vals))
-    chosen = cands[pick]
-    return SelectionResult(
-        chosen=chosen,
-        xi_est=float(xi_vals[pick]),
-        cost=float(b[chosen].sum()) if chosen.size else 0.0,
-        budget=budget,
-        s1=cands[1],
-        s2=cands[2],
-        l_star=l_star,
-        xi_s1=float(xi_vals[1]),
-        xi_s2=float(xi_vals[2]),
-        p_star=p_star,
-        gamma_s2=gamma(p[np.asarray(s2, np.int64)]) if s2 else 0.0,
+    xi_vals = est.final_xi([l_star], [s1], [s2], s1_raw, s1_cnt)[0]
+    return _assemble_result(p, b, budget, l_star, s1, s2, xi_vals)
+
+
+# ---------------------------------------------------------------------------
+# The batched planner: G (p-vector, budget) groups in one jitted program
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def _sur_greedy_scan(
+    resp_t: jnp.ndarray,      # (G, L, T) int32, -1 past each group's theta
+    valid: jnp.ndarray,       # (G, T) f32 0/1 draw mask
+    log_weights: jnp.ndarray, # (G, L) f32
+    empty: jnp.ndarray,       # (G,) f32
+    theta: jnp.ndarray,       # (G,) f64
+    p: jnp.ndarray,           # (G, L) f64 clipped success probs
+    b: jnp.ndarray,           # (G, L) f64 pool costs
+    budgets: jnp.ndarray,     # (G,) f64
+    *,
+    num_classes: int,
+):
+    """Greedy-on-xi for all G groups as one ``lax.while`` program.
+
+    Each round evaluates the masked candidate expansion of *every* group
+    simultaneously (`_marginal_xi_core` over the stacked CRN draws), then
+    runs Alg. 1's round logic — affordability, gain/cost ratios, the
+    near-tie window and the p/b tie-break — as f64 elementwise ops that
+    mirror :func:`_greedy_xi`'s numpy statements one for one. Groups whose
+    affordable set empties freeze in place; the loop ends when every group
+    is done. Runs under ``enable_x64``.
+
+    Returns ``(picks (G, L) int32 in pick order (-1 pad), npick (G,),
+    value (G,) f64, spent (G,) f64, base_raw (G, T, K) f32,
+    base_cnt (G, T, K) int32)`` — the final belief tables are the chosen
+    sets' xi tables, reused by the Alg. 2 candidate scoring.
+    """
+    G, L, T = resp_t.shape
+    K = num_classes
+    arange_l = jnp.arange(L, dtype=jnp.int32)
+
+    def cond(st):
+        return st["alive"].any()
+
+    def body(st):
+        afford = st["in_pool"] & (
+            b <= budgets[:, None] - st["spent"][:, None] + 1e-15
+        )
+        has = afford.any(axis=1)
+        return jax.lax.cond(
+            has.any(),
+            lambda: _round(st, afford, has),
+            lambda: dict(st, alive=has),   # every group done: freeze
+        )
+
+    def _round(st, afford, has):
+        vals = _marginal_xi_core(
+            resp_t, st["base_raw"], st["base_cnt"], log_weights, empty,
+            valid, theta, K,
+        )                                                     # (G, L) f64
+        ratios = jnp.where(afford, (vals - st["current"][:, None]) / b, -jnp.inf)
+        best = jnp.max(ratios, axis=1)
+        tied = afford & (
+            (ratios == best[:, None])
+            | (jnp.abs(ratios - best[:, None])
+               <= 1e-15 + RATIO_TIE_RTOL * jnp.abs(best[:, None]))
+        )
+        pb = jnp.where(tied, p / b, -jnp.inf)
+        pick = jnp.argmax(pb, axis=1).astype(jnp.int32)       # first max
+        oh_pick = arange_l[None, :] == pick[:, None]
+        upd = has[:, None] & oh_pick
+        b_pick = jnp.take_along_axis(b, pick[:, None].astype(jnp.int64), 1)[:, 0]
+        v_pick = jnp.take_along_axis(vals, pick[:, None].astype(jnp.int64), 1)[:, 0]
+        w_pick = jnp.take_along_axis(
+            log_weights, pick[:, None].astype(jnp.int64), 1
+        )[:, 0]
+        resp_pick = jnp.take_along_axis(
+            resp_t, pick[:, None, None].astype(jnp.int64), 1
+        )[:, 0, :]                                            # (G, T)
+        oh_resp = resp_pick[..., None] == jnp.arange(K, dtype=resp_t.dtype)
+        grow = has[:, None, None] & oh_resp                   # padded rows: -1
+        return {
+            "in_pool": st["in_pool"] & ~upd,
+            "spent": jnp.where(has, st["spent"] + b_pick, st["spent"]),
+            "current": jnp.where(has, v_pick, st["current"]),
+            "base_raw": jnp.where(
+                grow, st["base_raw"] + w_pick[:, None, None], st["base_raw"]
+            ),
+            "base_cnt": st["base_cnt"] + jnp.where(grow, 1, 0).astype(jnp.int32),
+            "picks": jnp.where(
+                has[:, None] & (arange_l[None, :] == st["npick"][:, None]),
+                pick[:, None], st["picks"],
+            ),
+            "npick": st["npick"] + has.astype(jnp.int32),
+            "alive": has,
+        }
+
+    init = {
+        "in_pool": jnp.ones((G, L), bool),
+        "spent": jnp.zeros(G, jnp.float64),
+        "current": jnp.full(G, 1.0 / K, jnp.float64),
+        "base_raw": jnp.zeros((G, T, K), jnp.float32),
+        "base_cnt": jnp.zeros((G, T, K), jnp.int32),
+        "picks": jnp.full((G, L), -1, jnp.int32),
+        "npick": jnp.zeros(G, jnp.int32),
+        "alive": jnp.ones(G, bool),
+    }
+    st = jax.lax.while_loop(cond, body, init)
+    return (st["picks"], st["npick"], st["current"], st["spent"],
+            st["base_raw"], st["base_cnt"])
+
+
+def sur_greedy_many(
+    ps: np.ndarray,
+    b: np.ndarray,
+    budgets: np.ndarray,
+    num_classes: int,
+    key: jax.Array,
+    thetas,
+    use_kernel: bool = False,
+    group_bucket: int = 8,
+) -> List[SelectionResult]:
+    """SurGreedyLLM over G stacked (p-vector, budget) groups — the batched
+    planner plane.
+
+    One :class:`GroupedXiEstimator` shares the CRN draws, one
+    :func:`_sur_greedy_scan` dispatch runs every group's greedy-on-xi, one
+    grouped evaluation scores the three Alg. 2 candidates of all groups.
+    The cheap closed-form pieces (greedy-on-gamma, the best affordable
+    single arm) run on the host with the exact serial code. Under the same
+    ``key`` the results bit-match ``[sur_greedy(ps[g], b, budgets[g], ...)
+    for g]``; groups are padded to ``group_bucket`` multiples so serving
+    replans reuse a handful of compiled programs.
+
+    Args:
+      ps: (G, L) per-group success probabilities.
+      b: (L,) shared pool costs.
+      budgets: (G,) per-group budgets.
+      thetas: scalar or (G,) Monte-Carlo sample counts.
+    """
+    ps = clip_probs(np.atleast_2d(np.asarray(ps, np.float64)))
+    G, L = ps.shape
+    b = np.asarray(b, np.float64)
+    budgets = np.broadcast_to(np.asarray(budgets, np.float64), (G,))
+    thetas = np.broadcast_to(np.asarray(thetas, np.int64), (G,))
+    K = int(num_classes)
+
+    results: List[Optional[SelectionResult]] = [None] * G
+    live: List[int] = []
+    for g in range(G):
+        if (b <= budgets[g] + 1e-15).any():
+            live.append(g)
+        else:  # serial early return: nothing affordable
+            results[g] = SelectionResult(
+                chosen=np.zeros(0, np.int64), xi_est=1.0 / K, cost=0.0,
+                budget=float(budgets[g]),
+            )
+    if not live:
+        return results
+
+    est = GroupedXiEstimator(
+        key, ps[live], K, thetas[live], use_kernel=use_kernel
     )
+    n = len(live)
+    Gp = bucket_size(n, group_bucket)
+    T = est.responses.shape[1]
+    resp_p = np.full((Gp, L, T), -1, np.int32)
+    resp_p[:n] = est.responses_t
+    valid_p = np.zeros((Gp, T), np.float32)
+    valid_p[:n] = est.valid
+    w_p = np.zeros((Gp, L), np.float32)
+    w_p[:n] = est.log_weights
+    empty_p = np.zeros(Gp, np.float32)
+    empty_p[:n] = est.empty
+    theta_p = np.ones(Gp, np.float64)
+    theta_p[:n] = est.theta_f
+    p_p = np.full((Gp, L), 0.5, np.float64)
+    p_p[:n] = est.ps
+    b_p = np.broadcast_to(b, (Gp, L))
+    budgets_p = np.full(Gp, -1.0, np.float64)   # pad groups afford nothing
+    budgets_p[:n] = budgets[live]
+
+    with enable_x64():
+        picks, npick, _, _, s1_raw, s1_cnt = _sur_greedy_scan(
+            resp_p, valid_p, w_p, empty_p, theta_p, p_p, b_p, budgets_p,
+            num_classes=K,
+        )
+    picks = np.asarray(picks)
+    npick = np.asarray(npick)
+    s1_raw = np.asarray(s1_raw)[:n]
+    s1_cnt = np.asarray(s1_cnt)[:n]
+
+    l_stars: List[int] = []
+    s1s: List[List[int]] = []
+    s2s: List[List[int]] = []
+    for i, g in enumerate(live):
+        p_g = est.ps[i]
+        afford = np.flatnonzero(b <= budgets[g] + 1e-15)
+        l_star = int(afford[np.argmax(p_g[afford])])
+        s1 = [int(a) for a in picks[i, : npick[i]]]
+        s2, _ = greedy(
+            p_g, b, budgets[g], gamma_value_batch(p_g), empty_value=0.0
+        )
+        l_stars.append(l_star)
+        s1s.append(s1)
+        s2s.append(s2)
+
+    xi_vals = est.final_xi(l_stars, s1s, s2s, s1_raw, s1_cnt)  # (n, 3) f64
+    for i, g in enumerate(live):
+        results[g] = _assemble_result(
+            est.ps[i], b, float(budgets[g]), l_stars[i], s1s[i], s2s[i],
+            xi_vals[i],
+        )
+    return results
 
 
 def adaptive_invoke(
@@ -251,8 +545,15 @@ class ThriftLLM:
         p_star = float(np.max(clip_probs(p)[afford])) if afford.size else 1.0
         return theta_for(self.eps, self.delta, p_star, len(self.costs))
 
+    @staticmethod
+    def _memo_key(p: np.ndarray, num_classes: int, budget: float):
+        return (
+            np.round(np.asarray(p, np.float64), 12).tobytes(), num_classes,
+            budget,
+        )
+
     def select(self, p: np.ndarray, num_classes: int, budget: float) -> SelectionResult:
-        key_tuple = (np.round(np.asarray(p, np.float64), 12).tobytes(), num_classes, budget)
+        key_tuple = self._memo_key(p, num_classes, budget)
         if key_tuple in self._cache:
             return self._cache[key_tuple]
         res = sur_greedy(
@@ -266,6 +567,53 @@ class ThriftLLM:
         )
         self._cache[key_tuple] = res
         return res
+
+    def select_many(
+        self,
+        ps: np.ndarray,
+        num_classes: int,
+        budgets,
+        max_group: int = 64,
+    ) -> List[SelectionResult]:
+        """Batched :meth:`select` over stacked (p-vector, budget) pairs.
+
+        Cache-consistent with the serial path: cached pairs are returned
+        as-is, the misses are planned by :func:`sur_greedy_many` in one
+        device program (chunked at ``max_group`` groups to bound peak
+        memory) and memoized under the same keys — so serial and batched
+        callers share one selection cache and, by the planner's CRN
+        contract, identical results.
+        """
+        ps = np.atleast_2d(np.asarray(ps, np.float64))
+        G = ps.shape[0]
+        budgets = np.broadcast_to(np.asarray(budgets, np.float64), (G,))
+        keys = [
+            self._memo_key(ps[g], num_classes, float(budgets[g]))
+            for g in range(G)
+        ]
+        miss: List[int] = []
+        seen = set()
+        for g, k in enumerate(keys):
+            if k not in self._cache and k not in seen:
+                miss.append(g)
+                seen.add(k)
+        for s in range(0, len(miss), max_group):
+            chunk = miss[s:s + max_group]
+            thetas = np.asarray(
+                [self.theta(ps[g], float(budgets[g])) for g in chunk], np.int64
+            )
+            res = sur_greedy_many(
+                ps[chunk],
+                self.costs,
+                budgets[chunk],
+                num_classes,
+                jax.random.key(self.seed),
+                thetas,
+                use_kernel=self.use_kernel,
+            )
+            for g, r in zip(chunk, res):
+                self._cache[keys[g]] = r
+        return [self._cache[k] for k in keys]
 
     def answer(
         self,

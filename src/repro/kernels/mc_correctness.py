@@ -113,3 +113,109 @@ def mc_correctness_pallas(
     # padded rows contributed 1/K each (all-empty tie credit); subtract
     correction = pad * (1.0 / num_classes) / float(theta)
     return out[0] - correction
+
+
+# ---------------------------------------------------------------------------
+# Grouped-mask layout: the batched planner's (G, theta, L) draws
+# ---------------------------------------------------------------------------
+
+
+def _grouped_kernel(resp_ref, maskw_ref, mask_ref, empty_ref, valid_ref,
+                    theta_ref, out_ref, *, num_classes):
+    """One (group, theta-tile) cell.
+
+    resp_ref:  (1, Tt, L) int32 responses of the cell's group
+    maskw_ref: (1, C, L) f32 mask * log-weight
+    mask_ref:  (1, C, L) f32 subset indicator
+    empty_ref: (1, 1) f32 empty-class log belief
+    valid_ref: (1, Tt) f32 draw mask (0 past the group's own theta)
+    theta_ref: (1, 1) f32 the group's real draw count
+    out_ref:   (1, C) f32 accumulated xi estimates (revisited over tiles)
+    """
+    i = pl.program_id(1)
+
+    resp = resp_ref[0]                                     # (Tt, L)
+    Tt, L = resp.shape
+    K = num_classes
+
+    classes = jax.lax.broadcasted_iota(jnp.int32, (Tt, L, K), 2)
+    onehot = (resp[:, :, None] == classes).astype(jnp.float32)
+
+    maskw = maskw_ref[0]                                   # (C, L)
+    mask = mask_ref[0]
+    flat = onehot.transpose(1, 0, 2).reshape(L, Tt * K)    # (L, Tt*K)
+    dn = (((1,), (0,)), ((), ()))
+    beliefs = jax.lax.dot_general(
+        maskw, flat, dn, preferred_element_type=jnp.float32
+    ).reshape(-1, Tt, K)
+    counts = jax.lax.dot_general(
+        mask, flat, dn, preferred_element_type=jnp.float32
+    ).reshape(-1, Tt, K)
+
+    empty = empty_ref[0, 0]
+    beliefs = jnp.where(counts > 0, beliefs, empty)
+
+    mx = jnp.max(beliefs, axis=-1, keepdims=True)
+    is_max = (beliefs >= mx - TIE_TOL).astype(jnp.float32)
+    ties = jnp.sum(is_max, axis=-1)                        # (C, Tt)
+    credit = is_max[:, :, 0] / ties * valid_ref[0][None, :]
+    partial = jnp.sum(credit, axis=-1) / theta_ref[0, 0]   # (C,)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, :] += partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_classes", "tile", "interpret")
+)
+def mc_correctness_grouped_pallas(
+    responses: jnp.ndarray,    # (G, theta, L) int32, -1 = padded draw
+    masks: jnp.ndarray,        # (G, C, L) float32
+    log_weights: jnp.ndarray,  # (G, L) float32
+    empty_belief: jnp.ndarray, # (G,) f32
+    valid: jnp.ndarray,        # (G, theta) f32 draw mask
+    theta: jnp.ndarray,        # (G,) f32 real draw counts
+    num_classes: int,
+    tile: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Grouped-mask xi estimation: grid (G, theta tiles), each group row
+    accumulated independently. The ragged-theta layout is explicit — padded
+    draws carry ``valid`` 0 and contribute nothing, so no post-hoc padding
+    correction is needed (unlike the ungrouped kernel). Same flag
+    conventions as ``belief_aggregate``: ``interpret`` on CPU, ``tile``
+    trades grid steps for VMEM with no effect on results."""
+    G, theta_n, L = responses.shape
+    C = masks.shape[1]
+    tile = min(tile, theta_n)
+    n = (theta_n + tile - 1) // tile
+    pad = n * tile - theta_n
+    if pad:
+        responses = jnp.concatenate(
+            [responses, jnp.full((G, pad, L), -1, jnp.int32)], axis=1
+        )
+        valid = jnp.concatenate(
+            [valid, jnp.zeros((G, pad), jnp.float32)], axis=1
+        )
+    maskw = masks * log_weights[:, None, :]
+    empty = jnp.asarray(empty_belief, jnp.float32).reshape(G, 1)
+    theta = jnp.asarray(theta, jnp.float32).reshape(G, 1)
+
+    return pl.pallas_call(
+        functools.partial(_grouped_kernel, num_classes=num_classes),
+        grid=(G, n),
+        in_specs=[
+            pl.BlockSpec((1, tile, L), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, C, L), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, C, L), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, 1), lambda g, i: (g, 0)),
+            pl.BlockSpec((1, tile), lambda g, i: (g, i)),
+            pl.BlockSpec((1, 1), lambda g, i: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda g, i: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, C), jnp.float32),
+        interpret=interpret,
+    )(responses, maskw, masks, empty, valid, theta)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from .belief_aggregate import belief_aggregate_pallas
 from .flash_attention import flash_attention_pallas
-from .mc_correctness import mc_correctness_pallas
+from .mc_correctness import mc_correctness_grouped_pallas, mc_correctness_pallas
 from .rglru_scan import rglru_scan_pallas
 
 _INTERPRET = os.environ.get("REPRO_KERNEL_COMPILE", "0") != "1"
@@ -24,6 +24,16 @@ def mc_correctness(responses, masks, log_weights, empty_belief, num_classes: int
     return mc_correctness_pallas(
         responses, masks, log_weights, empty_belief, num_classes,
         interpret=_INTERPRET,
+    )
+
+
+def mc_correctness_grouped(responses, masks, log_weights, empty_belief,
+                           valid, theta, num_classes: int, tile: int = 256):
+    """(G, C) xi estimates over the batched planner's stacked (G, theta, L)
+    draws; ragged thetas carried by the ``valid`` mask."""
+    return mc_correctness_grouped_pallas(
+        responses, masks, log_weights, empty_belief, valid, theta,
+        num_classes, tile=tile, interpret=_INTERPRET,
     )
 
 

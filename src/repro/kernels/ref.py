@@ -4,7 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.mc import xi_from_responses
+from jax.experimental import enable_x64
+
+from repro.core.mc import xi_from_responses, xi_from_responses_grouped
 from repro.core.belief import aggregate_log_beliefs_batch
 from repro.models.attention import blocked_attention, direct_attention
 
@@ -14,6 +16,18 @@ def mc_correctness_ref(responses, masks, log_weights, empty_belief, num_classes)
     return xi_from_responses(
         responses, masks, log_weights, jnp.float32(empty_belief), num_classes
     )
+
+
+def mc_correctness_grouped_ref(responses, masks, log_weights, empty_belief,
+                               valid, theta, num_classes):
+    """(G, C) xi estimates — delegates to the batched planner's bit-stable
+    grouped core (f64 out; compare with a float32 tolerance)."""
+    with enable_x64():
+        vals = xi_from_responses_grouped(
+            responses, masks, log_weights, empty_belief, valid,
+            jnp.asarray(theta, jnp.float64), num_classes=num_classes,
+        )
+    return vals.astype(jnp.float32)
 
 
 def belief_aggregate_ref(responses, log_weights, empty_belief, num_classes):

@@ -8,8 +8,18 @@ pipelined budget-group waves, and complete through per-request futures; the
 run reports throughput, p50/p99 latency, accuracy, realized cost and which
 data plane (speculative jit vs compacting reference) served the traffic.
 
+With ``--drift-after N`` the demo exercises the online loop end to end:
+after N served queries the truth drifts (the served plans' arms degrade for
+half the clusters), ground-truth labels stream back per completed block,
+and the drift-invalidated clusters replan as ONE batched-planner dispatch
+at the next admission boundary. ``--probe-rate r`` additionally probes one
+currently-unplanned arm on ~r of feedback-eligible requests, so recovered
+arms re-enter the estimates.
+
     PYTHONPATH=src python -m repro.launch.serve --queries 500 --budget 1e-4
     PYTHONPATH=src python -m repro.launch.serve --qps 20000 --metered
+    PYTHONPATH=src python -m repro.launch.serve --queries 2000 \
+        --drift-after 500 --probe-rate 0.05
 """
 from __future__ import annotations
 
@@ -21,7 +31,13 @@ import numpy as np
 from repro.core.clustering import kmeans
 from repro.core.estimation import SuccessProbEstimator
 from repro.data import OracleWorkload
-from repro.serving import BatchScheduler, OracleArm, PoolEngine, ThriftRouter
+from repro.serving import (
+    BatchScheduler,
+    FeedbackLog,
+    OracleArm,
+    PoolEngine,
+    ThriftRouter,
+)
 
 
 def main() -> None:
@@ -41,6 +57,13 @@ def main() -> None:
     ap.add_argument("--metered", action="store_true",
                     help="mark every arm as a metered API so the speculation "
                          "switch picks the compacting reference plane")
+    ap.add_argument("--drift-after", type=int, default=0,
+                    help="inject truth drift after this many served queries "
+                         "(0 = no drift); enables the feedback loop and "
+                         "batched drift replans")
+    ap.add_argument("--probe-rate", type=float, default=0.0,
+                    help="exploration probe rate (fraction of requests that "
+                         "invoke one unplanned arm); enables feedback")
     args = ap.parse_args()
 
     wl = OracleWorkload(
@@ -54,8 +77,13 @@ def main() -> None:
     assign, _ = kmeans(emb, args.clusters, seed=0)
     est = SuccessProbEstimator(T, emb, assign)
     router = ThriftRouter(engine, est, num_classes=args.classes)
+    online = args.drift_after > 0 or args.probe_rate > 0
+    feedback = (
+        FeedbackLog(est, probe_rate=args.probe_rate) if online else None
+    )
     sched = BatchScheduler(
-        router, max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3
+        router, max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
+        feedback=feedback,
     )
     sched.prewarm(budgets=[args.budget])
 
@@ -64,12 +92,37 @@ def main() -> None:
     payloads = np.column_stack([cid, labels])
     slo_s = None if args.slo_ms is None else args.slo_ms / 1e3
 
+    drifted = [False]
+
+    def maybe_drift(served: int) -> None:
+        """The mid-stream shift: degrade the served plans' arms for half
+        the clusters once ``--drift-after`` queries have gone out."""
+        if not args.drift_after or drifted[0] or served < args.drift_after:
+            return
+        drifted[0] = True
+        targets = list(range(max(1, args.clusters // 2)))
+        for t in targets:
+            wl.drift_arms(
+                router.plans.plan(t, args.budget).order, 0.30, clusters=[t]
+            )
+
     t0 = time.monotonic()
     blocks = []          # (BlockFuture, label slice) in submission order
     if args.qps <= 0:
-        blocks.append((sched.submit_many(payloads, qemb, args.budget,
-                                         slo_s=slo_s), labels))
-        sched.drain()
+        # feedback/drift need mid-stream boundaries: chunk the floodgates
+        # submission so labels fold and replans fire between chunks
+        step = args.max_batch if online else args.queries
+        for s in range(0, args.queries, max(1, step)):
+            e = min(args.queries, s + max(1, step))
+            blk = sched.submit_many(payloads[s:e], qemb[s:e], args.budget,
+                                    slo_s=slo_s)
+            blocks.append((blk, labels[s:e]))
+            sched.drain()
+            if online:
+                sched.record_outcomes(blk.request_ids, labels[s:e])
+            maybe_drift(e)
+        if online:
+            sched.apply_feedback()   # fold the final chunk's labels too
     else:
         # Poisson arrivals: exponential gaps, submitted in the bursts the
         # wall clock actually delivers (columnar blocks, like a real front
@@ -78,6 +131,7 @@ def main() -> None:
             rng.exponential(1.0 / args.qps, args.queries)
         )
         sent = 0
+        recorded = 0
         while sent < args.queries:
             now = time.monotonic()
             due = int(np.searchsorted(arrivals, now, side="right"))
@@ -91,7 +145,19 @@ def main() -> None:
                 ))
                 sent = due
             sched.pump()
+            if online:
+                while recorded < len(blocks) and blocks[recorded][0].done():
+                    blk, lab_r = blocks[recorded]
+                    sched.record_outcomes(blk.request_ids, lab_r)
+                    recorded += 1
+                maybe_drift(int(sched.stats["completed"]))
         sched.drain()
+        if online:
+            for blk, lab_r in blocks[recorded:]:
+                sched.record_outcomes(blk.request_ids, lab_r)
+            # no further admission will fold these: absorb them now so the
+            # drift -> batched-replan counters reflect the whole stream
+            sched.apply_feedback()
     dt = time.monotonic() - t0
 
     preds = np.concatenate([b.predictions for b, _ in blocks])
@@ -111,6 +177,17 @@ def main() -> None:
         f"(prefetched {st['plan_prefetches']}) | "
         f"stragglers={sched.mitigator.stragglers()}"
     )
+    if online:
+        tail = preds[args.drift_after:] if args.drift_after else preds
+        tail_lab = lab[args.drift_after:] if args.drift_after else lab
+        print(
+            f"online loop: labels {st['feedback_labels']} "
+            f"drifts {st['feedback_drifts']} | batched replans "
+            f"{st['plan_batch_replans']} rebuilding {st['plan_batch_replanned']} "
+            f"plans (stale dropped {st['plan_stale_dropped']}) | probes "
+            f"{st['feedback_probes']} | post-drift accuracy "
+            f"{(tail == tail_lab).mean():.3f}"
+        )
 
 
 if __name__ == "__main__":

@@ -31,9 +31,17 @@ Overlapping intervals ⇒ confirming feedback ⇒ the fold still tightens the
 estimate but the plan version stays put, so hot-path plan cache hits
 survive.
 
-Known limitation (the classic bandit trade-off, out of scope here): once a
-plan stops invoking an arm, served traffic yields no more feedback for it,
-so a *recovered* arm is only rediscovered by re-estimation or exploration.
+**Exploration probes.** Once a plan stops invoking an arm, served traffic
+yields no more feedback for it, so a *recovered* arm would never re-enter
+the estimates. ``FeedbackLog(probe_rate=r)`` closes that loop minimally:
+the scheduler marks ~``r`` of feedback-eligible requests and invokes ONE
+currently-unplanned arm (the least-observed one for the request's cluster)
+as a side channel — the probe response never touches routing or the
+request's prediction, but when the ground-truth label arrives it feeds the
+probed arm's (cluster, arm) counts exactly like a planned wave, so a
+recovered arm's estimate climbs until the drift test re-selects it. Off by
+default (``probe_rate=0``), in which case the zero-label path stays
+bit-identical to feedback without probing.
 """
 from __future__ import annotations
 
@@ -77,6 +85,12 @@ class FeedbackLog:
         observed requests are retained — older unlabeled outcomes are
         evicted, and already-labeled ids age out of the bookkeeping too,
         so memory stays bounded whether or not labels ever arrive.
+      probe_rate: exploration probability — the fraction of
+        feedback-eligible requests for which the scheduler additionally
+        invokes one currently-unplanned arm so recovered arms can re-enter
+        the estimates. 0 (default) disables probing entirely (no rng is
+        consumed; the zero-label path is bit-identical).
+      probe_seed: seed of the probe-thinning rng.
     """
 
     def __init__(
@@ -85,11 +99,16 @@ class FeedbackLog:
         delta: float = 0.01,
         drift_delta: float = 0.05,
         max_watch: int = 1 << 20,
+        probe_rate: float = 0.0,
+        probe_seed: int = 0,
     ):
         self.estimator = estimator
         self.delta = float(delta)
         self.drift_delta = float(drift_delta)
         self.max_watch = int(max_watch)
+        self.probe_rate = float(probe_rate)
+        self._probe_rng = np.random.default_rng(probe_seed)
+        self.probes = 0          # exploration invocations registered
         # request-id authority: schedulers bound to this log draw ids here,
         # so sharing one log across schedulers can never collide keys
         self._next_id = 0
@@ -120,6 +139,31 @@ class FeedbackLog:
     # ------------------------------------------------------------------
     # Serving-side registration
     # ------------------------------------------------------------------
+    def probe_rows(self, n: int) -> np.ndarray:
+        """Thin a retired group of ``n`` requests down to the rows to probe.
+        With ``probe_rate == 0`` returns empty without consuming the rng."""
+        if self.probe_rate <= 0.0 or n == 0:
+            return np.zeros(0, np.int64)
+        return np.flatnonzero(self._probe_rng.random(n) < self.probe_rate)
+
+    def probe_arms(self, clusters: np.ndarray, schedule: np.ndarray) -> np.ndarray:
+        """Pick the exploration arm per probed request: the least-observed
+        arm the request's plan did NOT schedule (ties to the lowest index;
+        -1 when the plan already covers the whole pool). Least-observed
+        targets exactly the arms whose estimates have gone blind — the
+        recovered-arm case the ROADMAP left open."""
+        L = self.estimator.num_arms
+        out = np.full(len(clusters), -1, np.int64)
+        for i, (cid, sched) in enumerate(zip(clusters, schedule)):
+            planned = np.zeros(L, bool)
+            planned[sched[sched >= 0]] = True
+            cand = np.flatnonzero(~planned)
+            if cand.size == 0:
+                continue
+            counts = self.estimator.clusters[int(cid)].arm_counts
+            out[i] = int(cand[np.argmin(counts[cand])])
+        return out
+
     def observe(
         self,
         ids: np.ndarray,            # (B,) request ids
@@ -127,6 +171,7 @@ class FeedbackLog:
         schedule: np.ndarray,       # (B, T) arm id per wave, -1 = none
         responses: np.ndarray,      # (B, T) class id per wave, -1 = not run
         invoked: np.ndarray,        # (B, T) wave actually ran
+        probes=None,                # optional (rows, arms, responses)
     ) -> None:
         """Register a retired group's outcomes to await ground truth.
 
@@ -137,10 +182,33 @@ class FeedbackLog:
         what a real deployment can observe. Never touches the estimator or
         any rng, so enabling feedback with zero labels is
         routing-identical to feedback disabled.
+
+        ``probes`` carries the scheduler's exploration side channel: the
+        probed rows' extra (arm, response) pairs land as one appended wave
+        column, so a later label scores the probed arm exactly like a
+        planned wave.
         """
         ids = np.asarray(ids, np.int64)
         if ids.size == 0:
             return
+        if probes is not None:
+            rows, arms, resp = probes
+            rows = np.asarray(rows, np.int64)
+            if rows.size:
+                B = schedule.shape[0]
+                schedule = np.concatenate(
+                    [schedule, np.full((B, 1), -1, schedule.dtype)], axis=1
+                )
+                responses = np.concatenate(
+                    [responses, np.full((B, 1), -1, responses.dtype)], axis=1
+                )
+                invoked = np.concatenate(
+                    [invoked, np.zeros((B, 1), bool)], axis=1
+                )
+                schedule[rows, -1] = np.asarray(arms, np.int64)
+                responses[rows, -1] = np.asarray(resp, np.int64)
+                invoked[rows, -1] = True
+                self.probes += int(rows.size)
         bid = self._next_block
         self._next_block += 1
         self._blocks[bid] = [
@@ -309,4 +377,5 @@ class FeedbackLog:
             "feedback_evicted": self.evicted,
             "feedback_applies": self.applies,
             "feedback_drifts": self.drifts,
+            "feedback_probes": self.probes,
         }

@@ -129,22 +129,39 @@ class PlanService:
 
     Owned by a :class:`~repro.serving.router.ThriftRouter`; shared across
     batches (and shareable across routers bound to the same pool). All
-    methods are cheap except a miss, which runs SurGreedy selection once.
+    methods are cheap except a miss, which runs SurGreedy selection.
+
+    Misses are **batched**: every multi-pair entry point (:meth:`plan_many`,
+    :meth:`batch_tables`, :meth:`prewarm`, :meth:`prefetch_for`,
+    :meth:`replan_stale`) funnels its missing (cluster, budget) pairs into
+    one :meth:`~repro.core.selection.ThriftLLM.select_many` call, so a
+    cache-miss storm — a cold replica warming up, a drift fold invalidating
+    many clusters at once — costs one batched-planner dispatch instead of a
+    serial selection per pair. ``batched=False`` pins the serial per-pair
+    path (the benchmark baseline); both produce bit-identical plans under
+    the planner's shared-CRN contract.
     """
 
-    def __init__(self, selector, estimator, engine, num_classes: int):
+    def __init__(self, selector, estimator, engine, num_classes: int,
+                 batched: bool = True):
         self.selector = selector
         self.estimator = estimator
         self.engine = engine
         self.num_classes = int(num_classes)
+        self.batched = bool(batched)
         self._cache: Dict[PlanKey, GroupPlan] = {}
         self._table_cache: Dict[Tuple[float, bytes, int], BatchTables] = {}
         self._pair_counts: Counter = Counter()
+        # (cluster, budget) pairs whose plans the stale-prune dropped —
+        # the batched drift-replan's work list (see replan_stale)
+        self._replan_pairs: set = set()
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
         self.prefetches = 0
         self.stale_dropped = 0
+        self.batch_replans = 0
+        self.batch_replanned = 0
         self._cost_fp = self.engine.fingerprint()
         self._plan_version = self._estimator_version()
 
@@ -184,6 +201,7 @@ class PlanService:
             self._cache.clear()
             self._table_cache.clear()
             self._pair_counts.clear()
+            self._replan_pairs.clear()   # re-priced pool: nothing to rebuild
             self.selector.rebind_costs(self.engine.costs)
             self._cost_fp = cost_fp
         else:
@@ -201,6 +219,10 @@ class PlanService:
         live = [k for k in self._cache if k == self._plan_key(k[0], k[1])]
         dropped = len(self._cache) - len(live)
         if dropped:
+            live_set = set(live)
+            self._replan_pairs.update(
+                (k[0], k[1]) for k in self._cache if k not in live_set
+            )
             self._cache = {k: self._cache[k] for k in live}
         version = self._estimator_version()
         self._table_cache = {
@@ -237,11 +259,72 @@ class PlanService:
         self._cache[key] = plan
         return plan
 
+    def plan_many(self, pairs: Iterable[Tuple[int, float]]) -> List[GroupPlan]:
+        """Wave plans for many (cluster, budget) pairs; one batched
+        selection dispatch covers every miss.
+
+        The multi-pair mirror of :meth:`plan` (same hit/miss accounting,
+        same cache): cached pairs gather for free, the missing ones are
+        selected together through the batched planner. This is the
+        cache-miss-storm entry point — a cold batch table, a prewarm, a
+        drift replan of many clusters — turning O(misses) serial SurGreedy
+        runs into one device program. Returns plans aligned with ``pairs``.
+        """
+        pairs = [(int(c), float(bg)) for c, bg in pairs]
+        for pr in pairs:
+            self._pair_counts[pr] += 1
+        missing = [
+            pr for pr in dict.fromkeys(pairs)
+            if self._plan_key(*pr) not in self._cache
+        ]
+        self.misses += len(missing)
+        self.hits += len(pairs) - len(missing)
+        for pr, plan in zip(missing, self._build_many(missing)):
+            self._cache[self._plan_key(*pr)] = plan
+        return [self._cache[self._plan_key(*pr)] for pr in pairs]
+
     def _build(self, cid: int, budget: float) -> GroupPlan:
-        p = self.estimator.clusters[cid].p_hat
+        return self._build_many([(int(cid), float(budget))])[0]
+
+    def _build_many(
+        self, pairs: Sequence[Tuple[int, float]]
+    ) -> List[GroupPlan]:
+        """Run selection for ``pairs`` and derive their wave plans.
+
+        With ``batched`` (default) every pair rides one
+        ``selector.select_many`` call — a single jitted greedy program over
+        the stacked (cluster, budget) groups; ``batched=False`` keeps the
+        serial per-pair path (bit-identical results, used as the benchmark
+        baseline). Does not touch the cache or the hit/miss counters —
+        callers decide how builds are accounted.
+        """
+        if not pairs:
+            return []
+        K = self.num_classes
+        # the batched program only pays off with groups to share; a single
+        # pair takes the serial path (bit-identical under the CRN contract)
+        if self.batched and len(pairs) > 1:
+            ps = np.stack(
+                [self.estimator.clusters[c].p_hat for c, _ in pairs]
+            )
+            budgets = np.asarray([bg for _, bg in pairs], np.float64)
+            sels = self.selector.select_many(ps, K, budgets)
+        else:
+            sels = [
+                self.selector.select(
+                    self.estimator.clusters[c].p_hat, K, bg
+                )
+                for c, bg in pairs
+            ]
+        return [
+            self._derive(self.estimator.clusters[c].p_hat, sel)
+            for (c, _), sel in zip(pairs, sels)
+        ]
+
+    def _derive(self, p: np.ndarray, sel) -> GroupPlan:
+        """(cluster p-vector, SelectionResult) -> the derived wave plan."""
         K = self.num_classes
         pc = clip_probs(p)
-        sel = self.selector.select(p, K, budget)
         # identical ordering to adaptive_invoke: stable sort on clipped p
         order = np.asarray(sorted(list(sel.chosen), key=lambda i: -pc[i]), np.int64)
         w_order = log_weight(pc, K)[order]
@@ -258,6 +341,38 @@ class PlanService:
             empty=empty_log_belief(pc),
             planned=float(wave_costs.sum()) if order.size else 0.0,
         )
+
+    def replan_stale(self, clusters: Optional[Iterable[int]] = None) -> int:
+        """Rebuild, as one batched dispatch, every plan the stale-prunes
+        dropped — the drift-replan fast path.
+
+        The scheduler calls this at the admission boundary right after a
+        drifting feedback fold: :meth:`refresh` prunes the invalidated
+        entries (recording their (cluster, budget) pairs), then all of them
+        re-select through one :meth:`_build_many` call, so a fold that
+        drifts G clusters costs one batched-planner dispatch instead of G
+        cold selections on the next batches. ``clusters`` optionally
+        restricts the rebuild; unrestricted pairs stay queued. Returns the
+        number of plans rebuilt (also accumulated in ``batch_replanned``).
+        """
+        self.refresh()
+        pending = sorted(self._replan_pairs)
+        if clusters is not None:
+            want = {int(c) for c in clusters}
+            pending = [pr for pr in pending if pr[0] in want]
+        self._replan_pairs.difference_update(pending)
+        build = [
+            pr for pr in pending
+            if pr[0] in self.estimator.clusters
+            and self._plan_key(*pr) not in self._cache
+        ]
+        if not build:
+            return 0
+        for pr, plan in zip(build, self._build_many(build)):
+            self._cache[self._plan_key(*pr)] = plan
+        self.batch_replans += 1
+        self.batch_replanned += len(build)
+        return len(build)
 
     def batch_tables(
         self, budget: float, idx: Optional[np.ndarray] = None
@@ -285,7 +400,9 @@ class PlanService:
         cids = getattr(self.estimator, "cluster_order", None)
         if cids is None:
             cids = np.asarray(sorted(self.estimator.clusters))
-        plans = [self.plan(int(c), float(budget)) for c in cids]
+        # cache-miss storm = one batched-planner dispatch (cold tables, or
+        # a drift fold that invalidated many clusters at once)
+        plans = self.plan_many([(int(c), float(budget)) for c in cids])
         order, floats, empty, planned = stack_plans(plans)
         tables = BatchTables(
             order=order, floats=floats, empty=empty, planned=planned,
@@ -343,15 +460,16 @@ class PlanService:
                 ]
             else:
                 pairs = hot_before
-        built = 0
-        for cid, budget in pairs:
-            if int(cid) not in self.estimator.clusters:
-                continue
-            key = self._plan_key(cid, budget)
-            if key not in self._cache:
-                self._cache[key] = self._build(int(cid), float(budget))
-                built += 1
-        return built
+        build = [
+            pr for pr in dict.fromkeys(
+                (int(c), float(bg)) for c, bg in pairs
+            )
+            if pr[0] in self.estimator.clusters
+            and self._plan_key(*pr) not in self._cache
+        ]
+        for pr, plan in zip(build, self._build_many(build)):
+            self._cache[self._plan_key(*pr)] = plan
+        return len(build)
 
     def prefetch_for(self, embeddings: np.ndarray, budgets: np.ndarray) -> int:
         """Queue-composition plan prefetch: given the (embedding, budget)
@@ -370,18 +488,18 @@ class PlanService:
         idx = self.estimator.lookup_batch_indices(embeddings)
         cids = self.estimator.cluster_order[idx]
         budgets = np.asarray(budgets, np.float64)
-        built = 0
-        for cid, budget in {
-            (int(c), float(b)) for c, b in zip(cids, budgets)
-        }:
-            key = self._plan_key(cid, budget)
-            if key not in self._cache:
-                self._cache[key] = self._build(cid, budget)
-                built += 1
-        self.prefetches += built
+        build = [
+            pr for pr in sorted(
+                {(int(c), float(b)) for c, b in zip(cids, budgets)}
+            )
+            if self._plan_key(*pr) not in self._cache
+        ]
+        for pr, plan in zip(build, self._build_many(build)):
+            self._cache[self._plan_key(*pr)] = plan
+        self.prefetches += len(build)
         if (budgets == budgets[0]).all():
             self.batch_tables(float(budgets[0]))
-        return built
+        return len(build)
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, int]:
@@ -393,4 +511,6 @@ class PlanService:
             "plan_prefetches": self.prefetches,
             "plan_cache_size": len(self._cache),
             "plan_stale_dropped": self.stale_dropped,
+            "plan_batch_replans": self.batch_replans,
+            "plan_batch_replanned": self.batch_replanned,
         }

@@ -142,13 +142,11 @@ class RouteResult:
 def _bucket(n: int, *, base: int) -> int:
     """Round ``n`` up so the jitted loop compiles once per bucket instead
     of once per exact (B, T): multiples of ``base`` up to 4x base (tight —
-    padded waves/rows cost real device work), powers of two beyond."""
-    if n <= 4 * base:
-        return max(base, -(-n // base) * base)
-    m = 4 * base
-    while m < n:
-        m *= 2
-    return m
+    padded waves/rows cost real device work), powers of two beyond. One
+    policy repo-wide: delegates to the planner's ``bucket_size``."""
+    from repro.core.mc import bucket_size
+
+    return bucket_size(n, base)
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "use_kernel"))

@@ -405,10 +405,21 @@ class BatchScheduler:
     def apply_feedback(self) -> Optional[FeedbackReport]:
         """Fold any pending labels into the estimator now. Called
         automatically at every admission boundary; public so a quiescent
-        server (no traffic arriving) can still absorb late labels."""
+        server (no traffic arriving) can still absorb late labels.
+
+        A fold that drifted any clusters is followed by ONE batched replan:
+        every plan the fold invalidated — across all drifted clusters and
+        budgets — re-selects through a single
+        :meth:`~repro.serving.plans.PlanService.replan_stale` dispatch, so
+        a drift storm never serializes cold selections across the next
+        batches."""
         if self.feedback is None or not self.feedback.pending:
             return None
         report = self.feedback.apply()
+        if report.drifted:
+            plans = getattr(self.router, "plans", None)
+            if plans is not None:
+                plans.replan_stale(report.drifted)
         self._sync_plan_stats()
         return report
 
@@ -719,9 +730,25 @@ class BatchScheduler:
         if self.feedback is not None and group is not None and group.ids is not None:
             # register the group's outcomes so later ground-truth labels can
             # be matched to (cluster, invoked arms, responses) by request id
-            self.feedback.observe(
+            fb = self.feedback
+            probes = None
+            if fb.probe_rate > 0.0 and group.n:
+                # exploration side channel: invoke one unplanned arm for a
+                # thinned subset of rows — never touches predictions/costs,
+                # only the feedback block a later label scores
+                rows = fb.probe_rows(group.n)
+                if rows.size:
+                    arms = fb.probe_arms(res.clusters[rows], res.schedule[rows])
+                    ok = arms >= 0
+                    rows, arms = rows[ok], arms[ok]
+                if rows.size:
+                    resp = self.router.engine.invoke_rows(
+                        arms, group.pending.payloads, rows
+                    )
+                    probes = (rows, arms, resp)
+            fb.observe(
                 group.ids, res.clusters, res.schedule, res.responses,
-                res.invoked,
+                res.invoked, probes=probes,
             )
         self._sync_plan_stats()
 

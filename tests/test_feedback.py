@@ -277,7 +277,7 @@ def test_online_feedback_recovers_oracle_accuracy_frozen_does_not():
 
     rng = np.random.default_rng(5)
     accs, oaccs, faccs = [], [], []
-    for _ in range(8):
+    for _ in range(14):
         cid, qemb, lab = wl.sample_queries(256, rng)
         m = np.isin(cid, targets)
         q = np.column_stack([cid, lab])
@@ -291,7 +291,7 @@ def test_online_feedback_recovers_oracle_accuracy_frozen_does_not():
         sched.record_outcomes(blk.request_ids, lab)   # online loop closes
 
     online, oracle_acc, frozen_acc = (
-        float(np.mean(a[4:])) for a in (accs, oaccs, faccs)
+        float(np.mean(a[7:])) for a in (accs, oaccs, faccs)
     )
     assert online >= 0.9 * oracle_acc, (online, oracle_acc, accs)
     assert frozen_acc < 0.9 * oracle_acc, (frozen_acc, oracle_acc, faccs)
@@ -365,3 +365,93 @@ def test_shared_log_ids_unique_and_labeled_ids_age_out():
         s1.record_outcomes(blk.request_ids, lab)
     assert len(log._watch_order) <= 64
     assert log.watching == 0 and not log._blocks
+
+
+# ---------------------------------------------------------------------------
+# Exploration probes (ISSUE 5: recovered arms re-enter estimates)
+# ---------------------------------------------------------------------------
+
+
+def test_probe_rate_zero_changes_nothing():
+    """probe_rate=0 (default): no rng consumed, no probe columns — the
+    zero-label path stays bit-identical to a probe-free FeedbackLog."""
+    wl, est, engine, router = _oracle_pool()
+    wl2, est2, engine2, router2 = _oracle_pool()
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    s_a = BatchScheduler(router, max_batch=64, max_wait_s=0.0,
+                         feedback=FeedbackLog(est))
+    s_b = BatchScheduler(router2, max_batch=64, max_wait_s=0.0,
+                         feedback=FeedbackLog(est2, probe_rate=0.0))
+    rng = np.random.default_rng(8)
+    cid, qemb, lab = wl.sample_queries(64, rng)
+    q = np.column_stack([cid, lab])
+    a = s_a.submit_many(q, qemb, budget); s_a.drain()
+    b = s_b.submit_many(q, qemb, budget); s_b.drain()
+    np.testing.assert_array_equal(a.predictions, b.predictions)
+    assert s_b.stats["feedback_probes"] == 0
+
+
+def test_probes_feed_unplanned_arm_estimates():
+    """A probed (currently-unplanned) arm accumulates labeled observations,
+    so its estimate moves again — the recovered-arm loop the ROADMAP left
+    open. The probe never perturbs routing outputs' shape or validity."""
+    wl, est, engine, router = _oracle_pool()
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    log = FeedbackLog(est, probe_rate=1.0, probe_seed=5)
+    sched = BatchScheduler(router, max_batch=64, max_wait_s=0.0, feedback=log)
+    rng = np.random.default_rng(9)
+
+    cid, qemb, lab = wl.sample_queries(64, rng)
+    blk = sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+    sched.drain()
+    assert log.probes == 64                       # every request probed
+
+    # the probed arm is outside the served plan for its cluster
+    planned = {
+        (int(c), int(a))
+        for c in np.unique(cid)
+        for a in router.plans.plan(int(c), budget).order
+    }
+    counts_before = {
+        int(c): est.clusters[int(c)].arm_counts.copy() for c in np.unique(cid)
+    }
+    sched.record_outcomes(blk.request_ids, lab)
+    report = sched.apply_feedback()
+    assert report is not None and report.labels == 64
+    moved_unplanned = 0
+    for c in np.unique(cid):
+        delta = est.clusters[int(c)].arm_counts - counts_before[int(c)]
+        for a in np.flatnonzero(delta > 0):
+            if (int(c), int(a)) not in planned:
+                moved_unplanned += 1
+    assert moved_unplanned > 0                    # unplanned arms observed
+
+
+def test_drift_replans_are_batched_at_admission():
+    """A fold that drifts clusters triggers ONE batched replan at the
+    admission boundary (plan_batch_replans counter), and the rebuilt plans
+    serve the next batch as cache hits."""
+    wl, est, engine, router = _oracle_pool()
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    sched = BatchScheduler(router, max_batch=256, max_wait_s=0.0,
+                           feedback=True)
+    rng = np.random.default_rng(5)
+
+    targets = [0, 1]
+    for t in targets:
+        wl.drift_arms(router.plans.plan(t, budget).order, 0.30, clusters=[t])
+    for _ in range(4):
+        cid, qemb, lab = wl.sample_queries(256, rng)
+        blk = sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+        sched.drain()
+        sched.record_outcomes(blk.request_ids, lab)
+    sched.apply_feedback()
+    st = sched.stats
+    assert st["feedback_drifts"] >= 1
+    assert st["plan_batch_replans"] >= 1          # replans went batched
+    assert st["plan_batch_replanned"] >= st["feedback_drifts"] >= 1
+    # the eager rebuild means the drifted clusters' next plans are hits
+    misses = router.plans.stats()["plan_misses"]
+    for t in targets:
+        router.plans.plan(t, budget)
+    assert router.plans.stats()["plan_misses"] == misses

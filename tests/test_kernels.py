@@ -22,6 +22,29 @@ def test_mc_correctness_sweep(theta, L, K, C):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
 
 
+@pytest.mark.parametrize("G,theta,L,K,C", [(1, 512, 4, 2, 3), (5, 700, 8, 5, 4), (3, 300, 12, 7, 6)])
+def test_mc_correctness_grouped_sweep(G, theta, L, K, C):
+    """Grouped-mask layout vs the batched planner's bit-stable oracle,
+    including ragged per-group thetas carried by the valid mask."""
+    from repro.core.mc import GroupedXiEstimator
+
+    rng = np.random.default_rng(theta + G)
+    ps = rng.uniform(0.4, 0.95, (G, L))
+    thetas = rng.integers(max(2, theta // 2), theta + 1, G)
+    est = GroupedXiEstimator(jax.random.key(1), ps, K, thetas)
+    masks = (rng.random((G, C, L)) < 0.6).astype(np.float32)
+    got = ops.mc_correctness_grouped(
+        jnp.asarray(est.responses), jnp.asarray(masks),
+        jnp.asarray(est.log_weights), jnp.asarray(est.empty),
+        jnp.asarray(est.valid), jnp.asarray(est.theta_f, jnp.float32), K,
+    )
+    want = ref.mc_correctness_grouped_ref(
+        est.responses, masks, est.log_weights, est.empty, est.valid,
+        est.theta_f, K,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
 @pytest.mark.parametrize("B,M,K", [(16, 4, 3), (37, 8, 5), (130, 12, 77)])
 def test_belief_aggregate_sweep(B, M, K):
     rng = np.random.default_rng(B + M)

@@ -230,3 +230,66 @@ def test_scheduler_exposes_plan_stats_and_prewarm():
     assert sched.stats["plan_misses"] == 0             # prewarmed
     assert sched.stats["plan_hits"] > 0
     assert sched.stats["plan_cache_size"] >= built
+
+
+def test_plan_many_matches_plan_and_counts():
+    """plan_many == per-pair plan(): same plans (bitwise), same hit/miss
+    accounting, one batched build for a miss storm."""
+    est, engine, router, _ = _make()
+    est2, engine2, router2, _ = _make()
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    pairs = [(int(c), budget) for c in est.cluster_order]
+
+    serial = [router.plans.plan(c, b) for c, b in pairs]
+    batched = router2.plans.plan_many(pairs)
+    for s, m in zip(serial, batched):
+        np.testing.assert_array_equal(s.order, m.order)
+        np.testing.assert_array_equal(s.weights, m.weights)
+        np.testing.assert_array_equal(s.residual, m.residual)
+        assert s.planned == m.planned and s.empty == m.empty
+    assert router.plans.stats() == router2.plans.stats()
+    # warm lookups are pure hits, returning the cached objects
+    again = router2.plans.plan_many(pairs)
+    assert all(a is b for a, b in zip(again, batched))
+    assert router2.plans.stats()["plan_misses"] == len(pairs)
+
+
+def test_serial_and_batched_services_build_identical_plans():
+    """PlanService(batched=False) is the serial baseline: bit-identical
+    plans to the batched planner under the shared CRN seed."""
+    est, engine, router, _ = _make()
+    est2, engine2, router2, _ = _make()
+    router2.plans.batched = False
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    pairs = [(int(c), budget) for c in est.cluster_order]
+    for pb, ps in zip(router.plans.plan_many(pairs), router2.plans.plan_many(pairs)):
+        np.testing.assert_array_equal(pb.order, ps.order)
+        np.testing.assert_array_equal(pb.weights, ps.weights)
+
+
+def test_replan_stale_rebuilds_dropped_pairs_in_one_call():
+    """The drift fast path: touch G clusters -> refresh prunes their plans
+    -> replan_stale rebuilds exactly those pairs, counted as one batched
+    replan."""
+    est, engine, router, _ = _make()
+    plans = router.plans
+    budget = float(np.quantile(engine.costs, 0.6)) * 2
+    pairs = [(int(c), budget) for c in est.cluster_order]
+    plans.plan_many(pairs)
+    size0 = len(plans._cache)
+
+    drifted = [int(c) for c in est.cluster_order[:3]]
+    for c in drifted:
+        est.touch(c)
+    rebuilt = plans.replan_stale(drifted)
+    assert rebuilt == 3
+    assert len(plans._cache) == size0                  # dropped then rebuilt
+    s = plans.stats()
+    assert s["plan_batch_replans"] == 1
+    assert s["plan_batch_replanned"] == 3
+    assert s["plan_stale_dropped"] == 3
+    # the rebuilt plans serve as hits, at the new versions
+    before = plans.stats()["plan_misses"]
+    for c in drifted:
+        plans.plan(c, budget)
+    assert plans.stats()["plan_misses"] == before

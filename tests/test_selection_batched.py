@@ -1,0 +1,163 @@
+"""Batched planner (`sur_greedy_many` / `select_many` / `plan_many`):
+bitwise equivalence with the serial plane under shared CRN seeds.
+
+The contract under test is the PR 5 tentpole: one jitted program planning G
+(p-vector, budget) groups returns exactly the chosen sets, orders, values
+and spend the serial per-group `sur_greedy` produces — across shapes,
+ragged affordability, padding buckets and group permutations.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # container fallback
+    from _hypolite import given, settings, strategies as st
+
+from repro.core import (
+    GroupedXiEstimator,
+    ThriftLLM,
+    sample_pool_responses,
+    sample_pool_responses_grouped,
+    sur_greedy,
+    sur_greedy_many,
+)
+from repro.core.types import SelectionResult
+
+
+def _assert_same(s: SelectionResult, m: SelectionResult):
+    """Bitwise equality of everything the planner derives."""
+    assert np.array_equal(s.chosen, m.chosen)
+    assert s.xi_est == m.xi_est and s.cost == m.cost and s.budget == m.budget
+    assert (s.s1 is None) == (m.s1 is None)
+    if s.s1 is not None:
+        assert np.array_equal(s.s1, m.s1) and np.array_equal(s.s2, m.s2)
+        assert s.l_star == m.l_star
+        assert s.xi_s1 == m.xi_s1 and s.xi_s2 == m.xi_s2
+        assert s.p_star == m.p_star and s.gamma_s2 == m.gamma_s2
+
+
+def _case(seed, G, L, K, budget_lo, budget_hi):
+    rng = np.random.default_rng(seed)
+    ps = rng.uniform(0.2, 0.98, (G, L))
+    b = rng.uniform(0.05, 1.0, L)
+    budgets = rng.uniform(budget_lo, budget_hi, G)
+    thetas = rng.integers(120, 700, G)
+    return ps, b, budgets, thetas
+
+
+class TestBatchedEqualsSerial:
+    @pytest.mark.parametrize(
+        "seed,G,L,K",
+        [
+            (0, 1, 4, 2),      # single group == the serial plane
+            (1, 3, 6, 3),
+            (2, 8, 12, 4),     # a full group bucket
+            (3, 9, 12, 4),     # ragged G (padded to the next bucket)
+            (4, 5, 8, 7),
+            (5, 4, 6, 19),     # big-K histogram fallback path
+        ],
+    )
+    def test_equivalence_grid(self, seed, G, L, K):
+        ps, b, budgets, thetas = _case(seed, G, L, K, 0.3, 2.5)
+        key = jax.random.key(42)
+        serial = [
+            sur_greedy(ps[g], b, float(budgets[g]), K, key, int(thetas[g]))
+            for g in range(G)
+        ]
+        batched = sur_greedy_many(ps, b, budgets, K, key, thetas)
+        for s, m in zip(serial, batched):
+            _assert_same(s, m)
+
+    def test_ragged_affordability(self):
+        """Groups whose budget affords nothing reproduce the serial early
+        return, and their presence does not perturb the live groups."""
+        ps, b, budgets, thetas = _case(7, 6, 8, 4, 0.3, 1.5)
+        budgets[1] = 0.0                     # affords nothing
+        budgets[4] = float(b.min()) * 0.5    # still nothing
+        key = jax.random.key(3)
+        serial = [
+            sur_greedy(ps[g], b, float(budgets[g]), 4, key, int(thetas[g]))
+            for g in range(6)
+        ]
+        batched = sur_greedy_many(ps, b, budgets, 4, key, thetas)
+        for s, m in zip(serial, batched):
+            _assert_same(s, m)
+        assert batched[1].chosen.size == 0 and batched[1].s1 is None
+        assert batched[1].xi_est == 0.25
+
+    def test_shared_draws_are_prefix_stable(self):
+        """Group g's rows of the grouped sample tensor are bitwise the
+        serial draws for its own theta — the CRN sharing contract."""
+        key = jax.random.key(11)
+        ps = np.random.default_rng(0).uniform(0.2, 0.95, (3, 6)).astype(np.float32)
+        grouped = np.asarray(
+            sample_pool_responses_grouped(key, ps, 5, 512)
+        )
+        for g, t in enumerate((17, 256, 512)):
+            one = np.asarray(sample_pool_responses(key, ps[g], 5, t))
+            assert np.array_equal(one, grouped[g, :t])
+
+    def test_grouped_estimator_padding_invariance(self):
+        """xi of the same masks is bitwise identical whether a group is
+        evaluated alone or stacked with larger-theta groups (padding and
+        batching cannot perturb the exact credit sums)."""
+        rng = np.random.default_rng(5)
+        ps = rng.uniform(0.3, 0.95, (3, 6))
+        thetas = np.asarray([150, 400, 611])
+        key = jax.random.key(2)
+        est = GroupedXiEstimator(key, ps, 4, thetas)
+        masks = (rng.random((3, 5, 6)) < 0.5).astype(np.float32)
+        stacked = est(masks)
+        for g in range(3):
+            alone = GroupedXiEstimator(key, ps[g][None], 4, thetas[g:g + 1])
+            np.testing.assert_array_equal(alone(masks[g][None])[0], stacked[g])
+
+
+class TestSelectMany:
+    def test_select_many_matches_select_and_shares_cache(self):
+        ps, b, budgets, _ = _case(9, 5, 8, 4, 0.4, 2.0)
+        sel_a = ThriftLLM(b, eps=0.3, seed=1)
+        sel_b = ThriftLLM(b, eps=0.3, seed=1)
+        serial = [sel_a.select(ps[g], 4, float(budgets[g])) for g in range(5)]
+        batched = sel_b.select_many(ps, 4, budgets)
+        for s, m in zip(serial, batched):
+            _assert_same(s, m)
+        # the batched results are memoized under the serial keys: a serial
+        # select afterwards is a pure cache hit returning the same object
+        for g in range(5):
+            assert sel_b.select(ps[g], 4, float(budgets[g])) is batched[g]
+
+    def test_select_many_duplicate_pairs_build_once(self):
+        ps, b, budgets, _ = _case(10, 2, 6, 3, 0.5, 1.5)
+        dup = np.concatenate([ps, ps[:1]])
+        dbud = np.concatenate([budgets, budgets[:1]])
+        sel = ThriftLLM(b, eps=0.3)
+        out = sel.select_many(dup, 3, dbud)
+        assert out[0] is out[2]               # same memo entry, one build
+
+
+# ---------------------------------------------------------------------------
+# Property: the batched greedy is invariant to group permutation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=7),    # G
+    st.integers(min_value=3, max_value=9),    # L
+    st.integers(min_value=2, max_value=5),    # K
+    st.integers(min_value=0, max_value=10_000),  # data seed
+    st.integers(min_value=0, max_value=10_000),  # permutation seed
+)
+def test_group_permutation_invariance(G, L, K, seed, perm_seed):
+    ps, b, budgets, thetas = _case(seed, G, L, K, 0.2, 2.0)
+    key = jax.random.key(17)
+    base = sur_greedy_many(ps, b, budgets, K, key, thetas)
+    perm = np.random.default_rng(perm_seed).permutation(G)
+    permuted = sur_greedy_many(
+        ps[perm], b, budgets[perm], K, key, thetas[perm]
+    )
+    for i, g in enumerate(perm):
+        _assert_same(base[g], permuted[i])
