@@ -51,12 +51,16 @@ from typing import List
 
 import numpy as np
 
+from repro.analysis import CompileSentinel, compile_cache_size
+from repro.core import selection as selection_mod
 from repro.core.belief import empty_log_belief, log_weight
 from repro.core.clustering import kmeans
 from repro.core.estimation import SuccessProbEstimator
+from repro.core.mc import bucket_size
 from repro.core.types import clip_probs
 from repro.data import OracleWorkload
 from repro.serving import BatchScheduler, OracleArm, PoolEngine, ThriftRouter
+from repro.serving import router as router_mod
 
 BATCH_SIZES = [32, 64, 128, 256, 512, 1024]
 
@@ -510,6 +514,14 @@ def run(args) -> dict:
     batches = args.batches or BATCH_SIZES
     rows = []
     rng = np.random.default_rng(17)
+    # thriftlint's runtime half: count actual XLA compilations of the wave
+    # program and the batched planner across the whole bench, and demand
+    # that the *timed* sections never compile (all compiles live in the
+    # per-bucket warm-ups).
+    sentinel = CompileSentinel(
+        {"wave": router_mod._wave_scan, "plan": selection_mod._sur_greedy_scan}
+    )
+    timed_recompiles = 0
     for B in batches:
         cid, qemb, lab = wl.sample_queries(B, rng)
         # (B, 2) payload array: what a serving front-end hands the engine
@@ -523,6 +535,7 @@ def run(args) -> dict:
 
         # the interesting scaling story lives at the big batches — sample
         # them harder so best-of converges despite shared-host noise
+        sentinel.snapshot()          # warm-ups done: timed runs must not compile
         reps = args.repeats * (3 if B >= 512 else 1)
         t_jit, t_wave = _time_all(
             [
@@ -549,6 +562,7 @@ def run(args) -> dict:
             "realized_over_planned": float(res.costs.sum() / res.planned_costs.sum()),
             "accuracy": float((res.predictions == lab).mean()),
         }
+        timed_recompiles += sentinel.total()
         rows.append(row)
         print(
             f"batch {B:5d}: jit {row['qps']:9.0f} qps | wavefront "
@@ -600,6 +614,39 @@ def run(args) -> dict:
         f"{feedback['replan_time_s']:.2f}s over {feedback['drift_chunks']} chunks"
     )
 
+    # compile-bucket budgets: every wave program is keyed by a (B, T)
+    # bucket pair and every planner program by a (G, theta) bucket pair, so
+    # the whole bench — including the continuous-batching steady state and
+    # every drift replan — may compile at most |buckets| programs, and the
+    # timed row sections exactly zero.
+    wave_b = {bucket_size(n, 8) for n in range(1, max(
+        list(batches) + [args.steady_batch]) + 1)}
+    wave_t = {bucket_size(t, 4) for t in range(1, args.arms + 1)}
+    plan_g = {bucket_size(g, 8) for g in range(1, 129)}
+    plan_theta = {bucket_size(t, 4) for t in range(1, 4097)}
+    compile_sentinel = {
+        "timed_recompiles": timed_recompiles,
+        "wave_compiles": compile_cache_size(sentinel.entries["wave"]),
+        "wave_bucket_budget": len(wave_b) * len(wave_t),
+        "plan_compiles": compile_cache_size(sentinel.entries["plan"]),
+        "plan_bucket_budget": len(plan_g) * len(plan_theta),
+    }
+    compile_sentinel["within_budget"] = bool(
+        timed_recompiles == 0
+        and compile_sentinel["wave_compiles"]
+        <= compile_sentinel["wave_bucket_budget"]
+        and compile_sentinel["plan_compiles"]
+        <= compile_sentinel["plan_bucket_budget"]
+    )
+    print(
+        f"compile sentinel: wave {compile_sentinel['wave_compiles']}"
+        f"/{compile_sentinel['wave_bucket_budget']} bucket programs, plan "
+        f"{compile_sentinel['plan_compiles']}"
+        f"/{compile_sentinel['plan_bucket_budget']}, timed-section "
+        f"recompiles {timed_recompiles} (budget holds: "
+        f"{compile_sentinel['within_budget']})"
+    )
+
     report = {
         "bench": "serving_throughput",
         "engine": "continuous-batching",
@@ -613,6 +660,7 @@ def run(args) -> dict:
         "steady_state": steady,
         "selection": selection,
         "feedback": feedback,
+        "compile_sentinel": compile_sentinel,
         "plan_cache": router.plans.stats(),
         "history": _load_history(args.out),
     }

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# CI: hygiene guards, router/serving correctness, a no-skip gate on the
-# property suites (hypothesis or the in-repo fallback engine — they must
-# RUN), a serving-throughput smoke (one-shot engines + the steady-state
-# continuous-batching path + the online feedback-vs-drift section) with
-# JSON well-formedness and history-preservation assertions, a docs link
-# check, then the FULL tier-1 suite with zero tolerated failures — there
-# is no allowlist of known-bad tests.
+# CI: hygiene guards, the thriftlint static-analysis gate (zero findings,
+# every suppression reasoned), router/serving correctness, a no-skip gate
+# on the property suites (hypothesis or the in-repo fallback engine — they
+# must RUN), a serving-throughput smoke (one-shot engines + the
+# steady-state continuous-batching path + the online feedback-vs-drift
+# section + the compile-sentinel budget) with JSON well-formedness and
+# history-preservation assertions, a docs link check, then the FULL tier-1
+# suite — tracer-leak-guarded via tests/conftest.py — with zero tolerated
+# failures; there is no allowlist of known-bad tests.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -17,6 +19,12 @@ if git ls-files | grep -E '(^|/)__pycache__/|\.py[co]$' >/dev/null; then
     exit 1
 fi
 echo "pycache hygiene OK"
+
+# thriftlint: the jit/determinism contracts gate statically. Exit is
+# non-zero on any finding — including reason-less suppression comments,
+# which surface as bad-suppression findings and cannot be silenced.
+python scripts/lint.py
+echo "thriftlint OK (zero findings)"
 
 python -m pytest -x -q tests/test_router_batched.py tests/test_serving.py \
     tests/test_scheduler_continuous.py tests/test_plans.py \
@@ -104,6 +112,21 @@ assert sel["groups_max"] >= 8, "no multi-group replan measured"
 # a wall-clock assert at smoke scale would make CI flaky on loaded hosts
 assert sel["speedup_at_max"] > 0, "replan timing is malformed"
 
+# the compile-sentinel budget: every XLA compile of the wave/planner
+# programs must land in a per-bucket warm-up (zero in timed sections) and
+# total program counts must stay within the declared bucket budgets
+cs = report["compile_sentinel"]
+for key in ("timed_recompiles", "wave_compiles", "wave_bucket_budget",
+            "plan_compiles", "plan_bucket_budget", "within_budget"):
+    assert key in cs, f"compile_sentinel missing {key}"
+assert cs["timed_recompiles"] == 0, \
+    f"recompilation inside a timed section: {cs['timed_recompiles']}"
+assert cs["wave_compiles"] > 0, "sentinel saw no wave compiles at all"
+assert cs["within_budget"], (
+    f"compile budget exceeded: wave {cs['wave_compiles']}/"
+    f"{cs['wave_bucket_budget']}, plan {cs['plan_compiles']}/"
+    f"{cs['plan_bucket_budget']}")
+
 # history preservation: the pre-existing report (the stub seeded above)
 # must survive as a history entry
 hist = report["history"]
@@ -114,15 +137,17 @@ print("serving smoke OK:", [(r["batch"], round(r["qps"])) for r in report["rows"
       "| steady", round(steady["saturated_qps"]),
       f"({steady['vs_jit_engine']:.2f}x jit), p99 {steady['p99_ms']:.2f}ms",
       f"| feedback recovery {fb['recovery']:.2f} (frozen {fb['frozen_vs_oracle']:.2f})",
-      f"| batched replan {sel['speedup_at_max']:.2f}x at G={sel['groups_max']}")
+      f"| batched replan {sel['speedup_at_max']:.2f}x at G={sel['groups_max']}",
+      f"| compiles wave {cs['wave_compiles']}/{cs['wave_bucket_budget']}"
+      f" plan {cs['plan_compiles']}/{cs['plan_bucket_budget']}, timed 0")
 PY
 
-# docs link check: README.md / docs/serving.md must not reference files
-# that do not exist in the repo
+# docs link check: README.md / docs/serving.md / docs/analysis.md must not
+# reference files that do not exist in the repo
 python - <<'PY'
 import pathlib, re, sys
 bad = []
-for doc in ("README.md", "docs/serving.md"):
+for doc in ("README.md", "docs/serving.md", "docs/analysis.md"):
     text = pathlib.Path(doc).read_text()
     refs = set(re.findall(r"`([A-Za-z0-9_./-]+\.(?:py|md|sh|json))`", text))
     refs |= set(re.findall(r"\]\(([A-Za-z0-9_./-]+\.md)\)", text))

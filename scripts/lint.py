@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""thriftlint CLI — static enforcement of the repo's jit/determinism
+contracts.
+
+    python scripts/lint.py                    # all rules over src/repro
+    python scripts/lint.py --rule jit-purity --rule prng-discipline
+    python scripts/lint.py --format=json      # machine-readable report
+    python scripts/lint.py --list-rules
+
+Exit status is non-zero when any finding survives — including
+`bad-suppression` findings for `# thriftlint: ignore[...]` comments that
+omit a rule list or a reason.  See docs/analysis.md for the rule
+catalogue and suppression policy.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import ALL_RULES, run_lint  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--rule",
+        action="append",
+        default=[],
+        help="run only this rule (repeatable); default: all rules",
+    )
+    parser.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="output format",
+    )
+    parser.add_argument(
+        "--src",
+        default=str(REPO / "src"),
+        help="source root containing the package (default: src/)",
+    )
+    parser.add_argument(
+        "--package", default="repro", help="package to scan (default: repro)"
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="list rule ids and exit"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name in ALL_RULES:
+            print(name)
+        return 0
+
+    report = run_lint(
+        src_root=args.src, package=args.package, rules=tuple(args.rule)
+    )
+
+    if args.format == "json":
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        for f in report.findings:
+            print(f.format())
+        reasoned = sum(1 for s in report.suppressions if s.has_reason)
+        print(
+            f"thriftlint: {len(report.findings)} finding(s), "
+            f"{len(report.suppressed)} suppressed "
+            f"({reasoned} reasoned suppression comment(s)), "
+            f"{report.files_scanned} files, "
+            f"rules: {', '.join(report.rules_run)}"
+        )
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""thriftlint: static analysis + runtime sentinels for the repro's
+jit/determinism contracts.
+
+Static half: an AST/call-graph walker (`walker.Project`) resolves the
+code reachable from every jit / lax-control-flow / pallas entry point,
+and five rule passes enforce the invariants the equivalence tests rely
+on (purity under trace, single-use PRNG keys, explicit f64 accumulation,
+bounded compile buckets, pallas store/grid/interpret contracts).
+
+Runtime half: `CompileSentinel` counts real XLA compilations per entry
+point so tests assert bucket budgets, and the tracer-leak guard runs the
+tier-1 suite under `jax.check_tracer_leaks`.
+
+CLI: ``python scripts/lint.py`` — see docs/analysis.md.
+"""
+from .findings import BAD_SUPPRESSION, Finding, Suppression
+from .linter import Linter, LintReport, run_lint
+from .rules import ALL_RULES
+from .sentinel import (
+    CompileSentinel,
+    compile_cache_size,
+    install_tracer_guard,
+    tracer_guard_enabled,
+    tracer_leak_guard,
+)
+from .walker import Project
+
+__all__ = [
+    "ALL_RULES",
+    "BAD_SUPPRESSION",
+    "CompileSentinel",
+    "Finding",
+    "LintReport",
+    "Linter",
+    "Project",
+    "Suppression",
+    "compile_cache_size",
+    "install_tracer_guard",
+    "run_lint",
+    "tracer_guard_enabled",
+    "tracer_leak_guard",
+]

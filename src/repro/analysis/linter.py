@@ -1,0 +1,96 @@
+"""thriftlint orchestration: walk → rules → suppressions → report."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .findings import (
+    Finding,
+    Suppression,
+    apply_suppressions,
+    parse_suppressions,
+)
+from .rules import ALL_RULES
+from .walker import Project
+
+
+@dataclass
+class LintReport:
+    findings: list[Finding]            # surviving (incl. bad-suppression)
+    suppressed: list[Finding]          # silenced by a reasoned inline comment
+    suppressions: list[Suppression]
+    rules_run: tuple[str, ...]
+    files_scanned: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def by_rule(self) -> dict[str, list[Finding]]:
+        out: dict[str, list[Finding]] = {}
+        for f in self.findings:
+            out.setdefault(f.rule, []).append(f)
+        return out
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "rules": list(self.rules_run),
+            "files_scanned": self.files_scanned,
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+        }
+
+
+@dataclass
+class Linter:
+    src_root: Path = Path("src")
+    package: str = "repro"
+    rules: tuple[str, ...] = ()
+    critical_prefixes: tuple[str, ...] | None = None
+    _project: Project | None = field(default=None, repr=False)
+
+    @property
+    def project(self) -> Project:
+        if self._project is None:
+            self._project = Project(
+                self.src_root,
+                self.package,
+                critical_prefixes=self.critical_prefixes,
+            )
+        return self._project
+
+    def run(self) -> LintReport:
+        project = self.project
+        names = self.rules or tuple(ALL_RULES)
+        unknown = [n for n in names if n not in ALL_RULES]
+        if unknown:
+            raise ValueError(
+                f"unknown rule(s) {unknown}; known: {sorted(ALL_RULES)}"
+            )
+        raw: list[Finding] = []
+        for name in names:
+            raw.extend(ALL_RULES[name](project))
+
+        suppressions: list[Suppression] = []
+        for mod in project.modules.values():
+            suppressions.extend(parse_suppressions(mod.path, mod.text))
+        surviving, suppressed = apply_suppressions(raw, suppressions)
+        return LintReport(
+            findings=surviving,
+            suppressed=suppressed,
+            suppressions=suppressions,
+            rules_run=names,
+            files_scanned=len(project.modules),
+        )
+
+
+def run_lint(
+    src_root: str | Path = "src",
+    package: str = "repro",
+    rules: tuple[str, ...] = (),
+    critical_prefixes: tuple[str, ...] | None = None,
+) -> LintReport:
+    return Linter(
+        Path(src_root), package, tuple(rules), critical_prefixes
+    ).run()

@@ -1,0 +1,25 @@
+"""Rule registry for thriftlint.
+
+Every rule module exposes ``RULE`` (the id used in CLI ``--rule`` filters
+and ``# thriftlint: ignore[...]`` comments) and ``check(project)``.
+"""
+from . import (
+    f64_reduction,
+    jit_purity,
+    pallas_contract,
+    prng_discipline,
+    recompile_risk,
+)
+
+ALL_RULES = {
+    mod.RULE: mod.check
+    for mod in (
+        jit_purity,
+        prng_discipline,
+        f64_reduction,
+        recompile_risk,
+        pallas_contract,
+    )
+}
+
+__all__ = ["ALL_RULES"]

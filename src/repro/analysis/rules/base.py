@@ -1,0 +1,73 @@
+"""Shared helpers for thriftlint rule passes.
+
+Each rule module exposes ``RULE`` (its id) and ``check(project) ->
+list[Finding]``.  Rules never parse source themselves — they consume the
+:class:`~repro.analysis.walker.Project` call-graph and report locations
+through :class:`~repro.analysis.findings.Finding`.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..walker import CallSite, FunctionInfo, Project
+
+
+def body_walk(fn: FunctionInfo) -> Iterator[ast.AST]:
+    """Walk a function's own statements, *excluding* nested ``def``s —
+    nested functions are separate nodes in the call graph and are
+    analysed on their own (they would double-report otherwise)."""
+    stack: list[ast.AST] = list(fn.node.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def calls_by_function(project: Project) -> dict[FunctionInfo, list[CallSite]]:
+    out: dict[FunctionInfo, list[CallSite]] = {}
+    for mod in project.modules.values():
+        for site in mod.scan.calls:
+            if site.enclosing is not None:
+                out.setdefault(site.enclosing, []).append(site)
+    return out
+
+
+def param_names(fn: FunctionInfo) -> set[str]:
+    a = fn.node.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def local_stores(fn: FunctionInfo) -> set[str]:
+    """Names bound inside the function body (assignments, loops, withs)."""
+    out: set[str] = set()
+    for node in body_walk(fn):
+        if isinstance(node, ast.Name) and isinstance(
+            node.ctx, (ast.Store, ast.Del)
+        ):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(node.name)
+    return out
+
+
+def free_loads(fn: FunctionInfo) -> set[str]:
+    """Names read in the function that it neither binds nor receives."""
+    bound = param_names(fn) | local_stores(fn)
+    loads: set[str] = set()
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            loads.add(node.id)
+    return loads - bound
+
+
+def in_critical_module(project: Project, fn: FunctionInfo) -> bool:
+    """Does this function live in the bit-stability-critical plane?"""
+    return fn.module.startswith(tuple(project.critical_prefixes))

@@ -1,0 +1,140 @@
+"""f64-reduction: determinism-critical reductions must be explicit.
+
+The serial==batched bit-match contract (belief tables, `sur_greedy`
+marginal gains, wave-program vote prefixes) holds because every
+accumulation on that plane is either (a) an explicit ``dtype=jnp.float64``
+fixed-order sum or (b) provably exact in float32 (integer-valued sums
+below 2**24, boolean counts).  An unannotated ``jnp.sum``/``einsum`` in a
+jit-reachable function of ``repro.core`` / ``repro.serving`` silently
+inherits input dtype and XLA's reduction-tree order, which is exactly how
+batched and serial plans drift apart in the last bit.
+
+Exact-by-construction operands (comparisons, integer ``astype``) are
+skipped; anything else must name its accumulator dtype or carry an inline
+suppression explaining why float32 is intended.
+
+Also flagged: accumulation driven by *set* iteration — Python set order
+is hash-seed-dependent, so a ``for x in {...}: acc += ...`` loop computes
+a different floating-point sum per process.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..walker import Project
+from .base import body_walk, in_critical_module
+
+RULE = "f64-reduction"
+
+_REDUCERS = {
+    "sum", "mean", "einsum", "dot", "matmul", "prod", "cumsum",
+    "tensordot", "average", "vdot", "inner", "nansum", "nanmean",
+}
+_JNP_PREFIXES = ("jax.numpy.", "jax.nn.")
+_EXPLICIT_KWARGS = {"dtype", "preferred_element_type"}
+_EXACT_DTYPES = ("int", "bool", "uint")
+
+
+def _reducer_name(project: Project, call: ast.Call, module: str) -> str | None:
+    dotted = project.dotted(call.func, module)
+    if dotted is not None:
+        for prefix in _JNP_PREFIXES:
+            if dotted.startswith(prefix) and dotted[len(prefix):] in _REDUCERS:
+                return dotted[len(prefix):]
+    # method form: x.sum(...) — only on the reducer names themselves
+    if (
+        isinstance(call.func, ast.Attribute)
+        and call.func.attr in {"sum", "mean", "dot", "prod", "cumsum"}
+    ):
+        return call.func.attr
+    return None
+
+
+def _is_exact(node: ast.expr, project: Project, module: str) -> bool:
+    """Operand is exactly representable: bool comparison or integer cast."""
+    if isinstance(node, ast.Compare):
+        return True
+    if isinstance(node, ast.Call):
+        dotted = project.dotted(node.func, module) or ""
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "astype":
+            for arg in node.args:
+                ad = project.dotted(arg, module) or ""
+                if any(t in ad for t in _EXACT_DTYPES):
+                    return True
+        if dotted.endswith(".asarray") or dotted.endswith(".where"):
+            return any(_is_exact(a, project, module) for a in node.args)
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.Mult, ast.BitAnd, ast.BitOr)
+    ):
+        return _is_exact(node.left, project, module) and _is_exact(
+            node.right, project, module
+        )
+    return False
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in project.iter_reachable():
+        if not in_critical_module(project, fn):
+            continue
+        for node in body_walk(fn):
+            if isinstance(node, ast.Call):
+                red = _reducer_name(project, node, fn.module)
+                if red is None:
+                    continue
+                if any(
+                    kw.arg in _EXPLICIT_KWARGS for kw in node.keywords
+                ):
+                    continue
+                operands = [
+                    a
+                    for a in node.args
+                    if not (
+                        isinstance(a, ast.Constant)
+                        and isinstance(a.value, str)
+                    )  # einsum subscript spec
+                ]
+                if isinstance(node.func, ast.Attribute) and not operands:
+                    operands = [node.func.value]
+                if operands and all(
+                    _is_exact(a, project, fn.module) for a in operands
+                ):
+                    continue
+                findings.append(
+                    Finding(
+                        rule=RULE,
+                        path=fn.path,
+                        line=node.lineno,
+                        symbol=fn.qualname,
+                        message=f"`{red}` without explicit accumulator "
+                        "dtype on the bit-stability-critical plane: pass "
+                        "dtype=jnp.float64 (or suppress with the reason "
+                        "float32 is exact here)",
+                    )
+                )
+            elif isinstance(node, ast.For):
+                it = node.iter
+                is_set = isinstance(it, ast.Set) or (
+                    isinstance(it, ast.Call)
+                    and (project.dotted(it.func, fn.module) or "")
+                    in ("set", "frozenset")
+                )
+                if is_set and any(
+                    isinstance(child, ast.AugAssign)
+                    for stmt in node.body
+                    for child in ast.walk(stmt)
+                ):
+                    findings.append(
+                        Finding(
+                            rule=RULE,
+                            path=fn.path,
+                            line=node.lineno,
+                            symbol=fn.qualname,
+                            message="accumulation over set iteration: "
+                            "set order is hash-seed-dependent, so the "
+                            "float sum differs across processes — "
+                            "iterate a sorted sequence",
+                        )
+                    )
+    return findings

@@ -1,0 +1,79 @@
+"""jit-purity: no host effects inside traced code.
+
+Anything reachable from a jit / scan / while_loop / pallas entry point
+executes at *trace time*, once per compile — not once per call.  A
+``time.time()`` or ``np.random`` draw there bakes a single host value
+into the compiled program (silently wrong), and IO or global mutation
+runs on an unpredictable schedule.  The repro's CRN contract additionally
+requires that every random bit flow from a traced ``jax.random`` key, so
+host RNGs in traced code break bitwise reproducibility even when they
+"work".
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..walker import Project
+from .base import body_walk
+
+RULE = "jit-purity"
+
+# dotted-prefix -> why it is banned under a trace
+_BANNED_PREFIXES = {
+    "time": "host clock reads are frozen at trace time",
+    "random": "host RNG breaks the CRN contract (use jax.random)",
+    "numpy.random": "host RNG breaks the CRN contract (use jax.random)",
+    "secrets": "host entropy is untraceable",
+    "uuid": "host entropy is untraceable",
+    "os.environ": "environment reads are frozen at trace time",
+    "os.getenv": "environment reads are frozen at trace time",
+}
+_BANNED_BUILTINS = {
+    "print": "IO side effect at trace time (use jax.debug.print)",
+    "open": "file IO inside traced code",
+    "input": "blocking IO inside traced code",
+}
+
+
+def _banned(dotted: str | None) -> str | None:
+    if dotted is None:
+        return None
+    if dotted in _BANNED_BUILTINS:
+        return _BANNED_BUILTINS[dotted]
+    for prefix, why in _BANNED_PREFIXES.items():
+        if dotted == prefix or dotted.startswith(prefix + "."):
+            return why
+    return None
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in project.iter_reachable():
+        for node in body_walk(fn):
+            if isinstance(node, ast.Call):
+                dotted = project.dotted(node.func, fn.module)
+                why = _banned(dotted)
+                if why is not None:
+                    findings.append(
+                        Finding(
+                            rule=RULE,
+                            path=fn.path,
+                            line=node.lineno,
+                            symbol=fn.qualname,
+                            message=f"`{dotted}(...)` in jit-reachable "
+                            f"code: {why}",
+                        )
+                    )
+            elif isinstance(node, ast.Global):
+                findings.append(
+                    Finding(
+                        rule=RULE,
+                        path=fn.path,
+                        line=node.lineno,
+                        symbol=fn.qualname,
+                        message="`global` mutation in jit-reachable code: "
+                        "trace-time writes race with the compile cache",
+                    )
+                )
+    return findings

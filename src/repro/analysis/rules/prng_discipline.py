@@ -1,0 +1,120 @@
+"""prng-discipline: every PRNG key is consumed at most once.
+
+The CRN (common-random-numbers) contract that makes batched plans bitwise
+equal to serial plans hinges on key flow: a key is *derived* any number
+of times (``split`` / ``fold_in`` — that is how ``_draw_rows`` gets its
+prefix-stable per-row streams) but *sampled from* at most once.  Two
+samplers fed the same key return correlated draws; a key that is both
+sampled and split seeds two streams that silently share bits.  Both bugs
+pass every shape check and corrupt xi estimates only statistically, which
+is why they get a static rule instead of a test.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..walker import FunctionInfo, Project
+from .base import calls_by_function, param_names
+
+RULE = "prng-discipline"
+
+_CONSTRUCTORS = {"key", "PRNGKey", "wrap_key_data"}
+_DERIVERS = {"split", "fold_in", "clone"}
+_NON_SAMPLERS = _CONSTRUCTORS | _DERIVERS | {"key_data", "key_impl"}
+
+
+def _jax_random_member(dotted: str | None) -> str | None:
+    if dotted and dotted.startswith("jax.random."):
+        return dotted.split(".")[-1]
+    return None
+
+
+def _key_param_names(fn: FunctionInfo) -> set[str]:
+    return {
+        p
+        for p in param_names(fn)
+        if p == "key" or p == "rng" or p.endswith("_key") or p == "keys"
+    }
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    by_fn = calls_by_function(project)
+    for fn in sorted(by_fn, key=lambda f: (f.path, f.qualname)):
+        sites = by_fn[fn]
+        key_vars = _key_param_names(fn)
+        # vars assigned from key constructors / derivers are keys too
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Assign) and isinstance(
+                node.value, ast.Call
+            ):
+                member = _jax_random_member(
+                    project.dotted(node.value.func, fn.module)
+                )
+                if member in _CONSTRUCTORS | _DERIVERS:
+                    for tgt in node.targets:
+                        elts = (
+                            tgt.elts
+                            if isinstance(tgt, (ast.Tuple, ast.List))
+                            else [tgt]
+                        )
+                        for elt in elts:
+                            if isinstance(elt, ast.Name):
+                                key_vars.add(elt.id)
+
+        consumed: dict[str, list[int]] = {}
+        derived: dict[str, list[int]] = {}
+        for site in sites:
+            member = _jax_random_member(
+                project.dotted(site.node.func, fn.module)
+            )
+            if member is None:
+                continue
+            # the key operand is the first positional or the `key=` kwarg
+            key_arg = site.node.args[0] if site.node.args else None
+            for kw in site.node.keywords:
+                if kw.arg == "key":
+                    key_arg = kw.value
+            if not isinstance(key_arg, ast.Name):
+                continue  # derived inline (fold_in(k, t) etc.) — fine
+            if key_arg.id not in key_vars:
+                continue
+            # a consumption inside a loop happens >= twice
+            weight = 2 if site.loop_depth > 0 else 1
+            if member in _DERIVERS:
+                derived.setdefault(key_arg.id, []).extend(
+                    [site.node.lineno] * weight
+                )
+            elif member not in _NON_SAMPLERS:
+                consumed.setdefault(key_arg.id, []).extend(
+                    [site.node.lineno] * weight
+                )
+
+        for var, lines in consumed.items():
+            if len(lines) >= 2:
+                findings.append(
+                    Finding(
+                        rule=RULE,
+                        path=fn.path,
+                        line=lines[1] if len(set(lines)) > 1 else lines[0],
+                        symbol=fn.qualname,
+                        message=f"key `{var}` sampled more than once "
+                        f"(lines {sorted(set(lines))}): reuse correlates "
+                        "draws — fold_in/split a fresh subkey per use",
+                    )
+                )
+            if var in derived:
+                findings.append(
+                    Finding(
+                        rule=RULE,
+                        path=fn.path,
+                        line=lines[0],
+                        symbol=fn.qualname,
+                        message=f"key `{var}` is both sampled from and "
+                        f"split/fold_in-derived (derive at line "
+                        f"{derived[var][0]}): the sampler stream aliases "
+                        "the derived streams",
+                    )
+                )
+    return findings

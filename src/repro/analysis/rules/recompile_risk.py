@@ -1,0 +1,184 @@
+"""recompile-risk: patterns that churn or poison the XLA compile cache.
+
+The serving plane keeps latency flat by confining every jitted program to
+a small set of shape buckets (`bucket_size` / `_bucket`).  Three static
+patterns defeat that:
+
+* a jitted function closing over a module global that is *rebound* later
+  — the staged constant goes stale (the program keeps the old value) or,
+  with static args, silently splits the cache;
+* constructing a jit wrapper per call (inside a function or loop) — every
+  wrapper owns a fresh cache, so nothing is ever warm;
+* feeding ``static_argnames``/``static_argnums`` an unhashable literal
+  (TypeError at call time) or a raw ``len(...)``/``.shape`` scalar that
+  bypasses the bucket quantisation — one compile per distinct length.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..walker import Project
+from .base import free_loads
+
+RULE = "recompile-risk"
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+
+
+def _mentions_raw_length(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name):
+            if sub.func.id == "len":
+                return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "shape":
+            return True
+    return False
+
+
+def _mentions_bucket(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fname = ""
+            if isinstance(sub.func, ast.Name):
+                fname = sub.func.id
+            elif isinstance(sub.func, ast.Attribute):
+                fname = sub.func.attr
+            if "bucket" in fname:
+                return True
+    return False
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+
+    # 1. jit entries closing over rebound module globals
+    for entry in project.jit_entries:
+        fn = entry.fn
+        if fn is None:
+            continue
+        mutated = project.mutated_globals(fn.module)
+        if not mutated:
+            continue
+        hits = sorted(free_loads(fn) & mutated)
+        for name in hits:
+            findings.append(
+                Finding(
+                    rule=RULE,
+                    path=fn.path,
+                    line=fn.node.lineno,
+                    symbol=fn.qualname,
+                    message=f"jitted function closes over module global "
+                    f"`{name}` that is rebound elsewhere: the compiled "
+                    "program stages the old value — pass it as an "
+                    "argument instead",
+                )
+            )
+
+    # 2. jit wrappers constructed per call / per loop iteration
+    for entry in project.jit_entries:
+        site = entry.site
+        if site is None or site.enclosing is None:
+            continue
+        if site.loop_depth > 0:
+            findings.append(
+                Finding(
+                    rule=RULE,
+                    path=site.path,
+                    line=site.node.lineno,
+                    symbol=site.enclosing.qualname,
+                    message="jax.jit wrapper constructed inside a loop: "
+                    "each wrapper owns a fresh compile cache, so every "
+                    "iteration recompiles — hoist the wrapper out",
+                )
+            )
+            continue
+        if _assigned_to_self_attr(site.enclosing.node, site.node):
+            continue  # engine idiom: one wrapper per instance, cached
+        findings.append(
+            Finding(
+                rule=RULE,
+                path=site.path,
+                line=site.node.lineno,
+                symbol=site.enclosing.qualname,
+                message="jax.jit wrapper constructed per call: hoist it "
+                "to module scope or cache it on the instance "
+                "(`self._fn = jax.jit(...)`)",
+            )
+        )
+
+    # 3. static-arg hazards at call sites of known jitted symbols
+    jitted = project.jitted_symbols()
+    for mod in project.modules.values():
+        for site in mod.scan.calls:
+            name = None
+            f = site.node.func
+            if isinstance(f, ast.Name):
+                name = f.id
+            elif isinstance(f, ast.Attribute):
+                name = f.attr
+            entry = jitted.get(name or "")
+            if entry is None:
+                continue
+            static_exprs: list[tuple[str, ast.expr]] = []
+            for kw in site.node.keywords:
+                if kw.arg in entry.static_argnames:
+                    static_exprs.append((kw.arg, kw.value))
+            for idx in entry.static_argnums:
+                if idx < len(site.node.args):
+                    static_exprs.append((f"argnum {idx}", site.node.args[idx]))
+            if entry.fn is not None and entry.static_argnames:
+                # positional args matched against the wrapped signature
+                params = [
+                    p.arg
+                    for p in entry.fn.node.args.posonlyargs
+                    + entry.fn.node.args.args
+                ]
+                for i, arg in enumerate(site.node.args):
+                    if i < len(params) and params[i] in entry.static_argnames:
+                        static_exprs.append((params[i], arg))
+            for label, expr in static_exprs:
+                if isinstance(expr, _UNHASHABLE):
+                    findings.append(
+                        Finding(
+                            rule=RULE,
+                            path=site.path,
+                            line=expr.lineno,
+                            symbol=site.enclosing.qualname
+                            if site.enclosing
+                            else "<module>",
+                            message=f"unhashable literal for static "
+                            f"argument `{label}` of `{name}`: static "
+                            "args must hash — use a tuple",
+                        )
+                    )
+                elif _mentions_raw_length(expr) and not _mentions_bucket(expr):
+                    findings.append(
+                        Finding(
+                            rule=RULE,
+                            path=site.path,
+                            line=expr.lineno,
+                            symbol=site.enclosing.qualname
+                            if site.enclosing
+                            else "<module>",
+                            message=f"static argument `{label}` of "
+                            f"`{name}` derives from a raw length/shape: "
+                            "one compile per distinct value — quantise "
+                            "through bucket_size()/_bucket() first",
+                        )
+                    )
+    return findings
+
+
+def _assigned_to_self_attr(scope: ast.AST, call: ast.Call) -> bool:
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and node.value is call:
+            for tgt in node.targets:
+                if (
+                    isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"
+                ):
+                    return True
+    return False

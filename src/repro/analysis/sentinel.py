@@ -1,0 +1,137 @@
+"""Runtime sentinels: the dynamic half of thriftlint.
+
+Static rules catch the patterns that *would* churn the compile cache;
+:class:`CompileSentinel` proves at runtime that they *didn't* — it reads
+each registered jit wrapper's actual XLA cache population before and
+after a workload, so a test can assert "routing 50 mixed batches compiled
+exactly the bucket programs it declared, and re-routing new content
+compiled nothing".
+
+The tracer-leak guard is the second sentinel: `jax.check_tracer_leaks`
+turns a leaked tracer (a traced value smuggled into host state — the
+failure mode the jit-purity rule bans statically) into an immediate
+error.  ``install_tracer_guard()`` is wired into the tier-1 run via
+``tests/conftest.py`` and honours ``THRIFTLINT_TRACER_GUARD=0`` for
+opt-out profiling runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+def compile_cache_size(fn: Callable) -> int:
+    """Number of compiled programs a jit wrapper currently holds."""
+    sizer = getattr(fn, "_cache_size", None)
+    if sizer is None:
+        raise TypeError(
+            f"{fn!r} exposes no _cache_size(); CompileSentinel needs a "
+            "jax.jit wrapper (not the underlying Python function)"
+        )
+    return int(sizer())
+
+
+@dataclass
+class CompileSentinel:
+    """Counts actual XLA compilations per registered jit entry point.
+
+    Usage::
+
+        sentinel = CompileSentinel({"wave": _wave_scan, "plan": _sur_greedy_scan})
+        ...warm-up / steady-state workload...
+        sentinel.snapshot()
+        ...more traffic confined to warm buckets...
+        sentinel.assert_no_new_compiles()          # steady state stayed warm
+        sentinel.assert_within({"wave": 4})        # or: bucket budget holds
+    """
+
+    entries: dict[str, Callable] = field(default_factory=dict)
+    _baseline: dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for fn in self.entries.values():
+            compile_cache_size(fn)  # fail fast on non-jit callables
+        self.snapshot()
+
+    def register(self, name: str, fn: Callable) -> None:
+        compile_cache_size(fn)
+        self.entries[name] = fn
+        self._baseline[name] = compile_cache_size(fn)
+
+    def snapshot(self) -> None:
+        """Rebase: subsequent deltas count compiles after this point."""
+        self._baseline = {
+            name: compile_cache_size(fn)
+            for name, fn in self.entries.items()
+        }
+
+    def compiles(self, name: str) -> int:
+        """New compilations of `name` since the last snapshot."""
+        return compile_cache_size(self.entries[name]) - self._baseline[name]
+
+    def deltas(self) -> dict[str, int]:
+        return {name: self.compiles(name) for name in self.entries}
+
+    def total(self) -> int:
+        return sum(self.deltas().values())
+
+    def assert_no_new_compiles(self, detail: str = "") -> None:
+        deltas = self.deltas()
+        hot = {k: v for k, v in deltas.items() if v}
+        assert not hot, (
+            f"compile sentinel: unexpected XLA recompilation {hot}"
+            + (f" — {detail}" if detail else "")
+        )
+
+    def assert_within(self, budgets: dict[str, int], detail: str = "") -> None:
+        """Each entry compiled at most its declared bucket budget."""
+        over = {
+            name: (self.compiles(name), cap)
+            for name, cap in budgets.items()
+            if self.compiles(name) > cap
+        }
+        assert not over, (
+            "compile sentinel: bucket budget exceeded "
+            + ", ".join(
+                f"{n}: {got} compiles > budget {cap}"
+                for n, (got, cap) in over.items()
+            )
+            + (f" — {detail}" if detail else "")
+        )
+
+
+# ---------------------------------------------------------------------------
+# tracer-leak guard
+# ---------------------------------------------------------------------------
+
+_GUARD_ENV = "THRIFTLINT_TRACER_GUARD"
+
+
+def tracer_guard_enabled() -> bool:
+    return os.environ.get(_GUARD_ENV, "1") != "0"
+
+
+def install_tracer_guard() -> bool:
+    """Globally enable jax's tracer-leak checking (tier-1 runs under it).
+
+    Returns True when the guard was installed.  Set
+    ``THRIFTLINT_TRACER_GUARD=0`` to opt out (e.g. for profiling runs
+    where the extra trace-time bookkeeping is unwanted).
+    """
+    if not tracer_guard_enabled():
+        return False
+    import jax
+
+    jax.config.update("jax_check_tracer_leaks", True)
+    return True
+
+
+@contextlib.contextmanager
+def tracer_leak_guard():
+    """Scoped variant: raise on tracer leaks inside the block."""
+    import jax
+
+    with jax.checking_leaks():
+        yield

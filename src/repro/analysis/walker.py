@@ -1,0 +1,569 @@
+"""AST / call-graph core for thriftlint.
+
+Parses every module under ``src/repro``, finds the *traced roots* — code
+that executes under a JAX trace rather than as plain Python:
+
+* functions decorated with ``@jax.jit`` (bare, or via ``partial``),
+* functions wrapped by a ``jax.jit(fn)`` / ``partial(jax.jit, ...)(fn)``
+  call expression (the ``mc.py`` module-level wrapper idiom),
+* kernels handed to ``pl.pallas_call``,
+* bodies handed to ``lax.scan`` / ``lax.while_loop`` / ``lax.cond`` /
+  ``lax.fori_loop`` / ``jax.vmap`` and friends,
+
+and computes the transitive closure of functions reachable from those
+roots through ordinary calls, lexical nesting, and cross-module imports.
+Rules consume this: "jit-reachable" in a rule means *a member of that
+closure*, which is exactly the code where host-side effects, key reuse,
+or dtype drift silently break the repro's bit-match contracts.
+
+Everything here is static and name-based.  Dynamic dispatch through
+instance attributes (``jax.jit(self.model.forward)``) is out of scope and
+deliberately ignored rather than guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+# HOFs whose function-valued operands execute under a trace.
+TRACED_HOFS = {
+    "jax.lax.scan",
+    "jax.lax.while_loop",
+    "jax.lax.fori_loop",
+    "jax.lax.cond",
+    "jax.lax.switch",
+    "jax.lax.map",
+    "jax.lax.associative_scan",
+    "jax.vmap",
+    "jax.pmap",
+    "jax.grad",
+    "jax.value_and_grad",
+    "jax.checkpoint",
+    "jax.remat",
+}
+
+JIT_NAMES = {"jax.jit"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+PALLAS_CALL_NAMES = {
+    "jax.experimental.pallas.pallas_call",
+    "pallas.pallas_call",
+}
+
+
+@dataclass
+class FunctionInfo:
+    """One ``def`` (top-level, method, or nested) in the scanned tree."""
+
+    module: str
+    path: str
+    qualname: str
+    node: ast.FunctionDef
+    parent: "FunctionInfo | None" = None
+    class_name: str = ""
+    children: dict[str, "FunctionInfo"] = field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.path, self.qualname)
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, FunctionInfo) and self.key == other.key
+
+
+@dataclass
+class CallSite:
+    """A ``Call`` node plus where it syntactically lives."""
+
+    node: ast.Call
+    module: str
+    path: str
+    enclosing: FunctionInfo | None   # innermost def, None at module scope
+    loop_depth: int                  # For/While ancestors inside `enclosing`
+
+
+@dataclass
+class JitEntry:
+    """One jit wrapper: the wrapped function plus its static-arg spec."""
+
+    fn: FunctionInfo | None
+    static_argnames: tuple[str, ...]
+    static_argnums: tuple[int, ...]
+    site: CallSite | None            # None for decorator form
+    wrapper_name: str = ""           # module-level alias, when assigned
+
+
+@dataclass
+class PallasSite:
+    """One ``pl.pallas_call(...)`` call expression."""
+
+    call: CallSite
+    kernel: FunctionInfo | None
+
+
+class _ModuleScanner(ast.NodeVisitor):
+    """Single pass over one module: functions, imports, calls, globals."""
+
+    def __init__(self, module: str, path: str):
+        self.module = module
+        self.path = path
+        self.imports: dict[str, str] = {}
+        self.functions: dict[str, FunctionInfo] = {}
+        self.calls: list[CallSite] = []
+        self.top_assign_counts: dict[str, int] = {}
+        self.global_decl_stores: set[str] = set()
+        self.top_aug_assigns: set[str] = set()
+        self._fn_stack: list[FunctionInfo] = []
+        self._class_stack: list[str] = []
+        self._loop_depth = 0
+
+    # -- imports ----------------------------------------------------------
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            self.imports[alias.asname or alias.name.split(".")[0]] = (
+                alias.name if alias.asname else alias.name.split(".")[0]
+            )
+            if alias.asname:
+                self.imports[alias.asname] = alias.name
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.level:
+            parts = self.module.split(".")
+            base = ".".join(parts[: len(parts) - node.level])
+        else:
+            base = ""
+        mod = ".".join(p for p in (base, node.module or "") if p)
+        for alias in node.names:
+            target = f"{mod}.{alias.name}" if mod else alias.name
+            self.imports[alias.asname or alias.name] = target
+
+    # -- definitions ------------------------------------------------------
+    def _visit_def(self, node):
+        prefix = ""
+        if self._fn_stack:
+            prefix = self._fn_stack[-1].qualname + ".<locals>."
+        elif self._class_stack:
+            prefix = ".".join(self._class_stack) + "."
+        info = FunctionInfo(
+            module=self.module,
+            path=self.path,
+            qualname=prefix + node.name,
+            node=node,
+            parent=self._fn_stack[-1] if self._fn_stack else None,
+            class_name=self._class_stack[-1] if self._class_stack else "",
+        )
+        self.functions[info.qualname] = info
+        if info.parent is not None:
+            info.parent.children[node.name] = info
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self._fn_stack.append(info)
+        outer_loops, self._loop_depth = self._loop_depth, 0
+        for stmt in node.body:
+            self.visit(stmt)
+        self._loop_depth = outer_loops
+        self._fn_stack.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    # -- calls ------------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        self.calls.append(
+            CallSite(
+                node=node,
+                module=self.module,
+                path=self.path,
+                enclosing=self._fn_stack[-1] if self._fn_stack else None,
+                loop_depth=self._loop_depth,
+            )
+        )
+        self.generic_visit(node)
+
+    def _visit_loop(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+
+    # -- module-level state -----------------------------------------------
+    def visit_Assign(self, node: ast.Assign):
+        if not self._fn_stack and not self._class_stack:
+            for tgt in node.targets:
+                for name in _target_names(tgt):
+                    self.top_assign_counts[name] = (
+                        self.top_assign_counts.get(name, 0) + 1
+                    )
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        if not self._fn_stack and not self._class_stack:
+            for name in _target_names(node.target):
+                self.top_aug_assigns.add(name)
+        self.generic_visit(node)
+
+    def visit_Global(self, node: ast.Global):
+        self.global_decl_stores.update(node.names)
+
+
+def _target_names(tgt: ast.expr) -> list[str]:
+    if isinstance(tgt, ast.Name):
+        return [tgt.id]
+    if isinstance(tgt, (ast.Tuple, ast.List)):
+        out = []
+        for elt in tgt.elts:
+            out.extend(_target_names(elt))
+        return out
+    return []
+
+
+@dataclass
+class ModuleInfo:
+    name: str
+    path: str
+    text: str
+    tree: ast.Module
+    scan: _ModuleScanner
+
+
+class Project:
+    """All parsed modules plus the traced-roots reachability closure."""
+
+    def __init__(
+        self,
+        src_root: Path,
+        package: str = "repro",
+        critical_prefixes: tuple[str, ...] | None = None,
+    ):
+        self.src_root = Path(src_root)
+        self.package = package
+        # the modules whose traced reductions carry the serial==batched
+        # bit-match contract (see docs/analysis.md)
+        self.critical_prefixes = critical_prefixes or (
+            f"{package}.core",
+            f"{package}.serving",
+        )
+        self.modules: dict[str, ModuleInfo] = {}
+        self.jit_entries: list[JitEntry] = []
+        self.pallas_sites: list[PallasSite] = []
+        self.kernels: set[FunctionInfo] = set()
+        self.reachable: set[FunctionInfo] = set()
+        self._load()
+        self._find_roots()
+        self._close_reachability()
+
+    # -- loading ----------------------------------------------------------
+    def _load(self):
+        pkg_dir = self.src_root / self.package
+        for path in sorted(pkg_dir.rglob("*.py")):
+            rel = path.relative_to(self.src_root)
+            mod = ".".join(rel.with_suffix("").parts)
+            if mod.endswith(".__init__"):
+                mod = mod[: -len(".__init__")]
+            text = path.read_text()
+            tree = ast.parse(text, filename=str(path))
+            scan = _ModuleScanner(mod, str(rel.as_posix()))
+            scan.visit(tree)
+            self.modules[mod] = ModuleInfo(
+                name=mod, path=str(rel.as_posix()), text=text, tree=tree,
+                scan=scan,
+            )
+
+    # -- name resolution --------------------------------------------------
+    def dotted(self, expr: ast.expr, module: str) -> str | None:
+        """Expand an attribute chain to a fully qualified dotted name,
+        resolving the leading alias through the module's imports
+        (``jnp.sum`` -> ``jax.numpy.sum``)."""
+        parts: list[str] = []
+        node = expr
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        info = self.modules.get(module)
+        head = node.id
+        if info is not None and head in info.scan.imports:
+            head = info.scan.imports[head]
+        parts.append(head)
+        return ".".join(reversed(parts))
+
+    def resolve_function(
+        self,
+        expr: ast.expr,
+        module: str,
+        enclosing: FunctionInfo | None,
+    ) -> FunctionInfo | None:
+        """Resolve a function-valued expression to a FunctionInfo, looking
+        through lexical scope, the module, sibling ``repro`` modules, and
+        ``functools.partial`` wrapping."""
+        if isinstance(expr, ast.Call):  # partial(fn, ...)
+            fq = self.dotted(expr.func, module)
+            if fq in PARTIAL_NAMES and expr.args:
+                return self.resolve_function(expr.args[0], module, enclosing)
+            return None
+        info = self.modules.get(module)
+        if info is None:
+            return None
+        if isinstance(expr, ast.Name):
+            cur = enclosing
+            while cur is not None:
+                if expr.id in cur.children:
+                    return cur.children[expr.id]
+                cur = cur.parent
+            if (
+                enclosing is not None
+                and enclosing.class_name
+                and expr.id in info.scan.functions
+            ):
+                pass  # fall through to module scope below
+            if expr.id in info.scan.functions:
+                return info.scan.functions[expr.id]
+            target = info.scan.imports.get(expr.id)
+            if target:
+                return self._lookup_qualified(target)
+            return None
+        if isinstance(expr, ast.Attribute):
+            # self.method() within a class
+            if (
+                isinstance(expr.value, ast.Name)
+                and expr.value.id in ("self", "cls")
+                and enclosing is not None
+                and enclosing.class_name
+            ):
+                qual = f"{enclosing.class_name}.{expr.attr}"
+                return info.scan.functions.get(qual)
+            fq = self.dotted(expr, module)
+            if fq:
+                return self._lookup_qualified(fq)
+        return None
+
+    def _lookup_qualified(self, fq: str) -> FunctionInfo | None:
+        """``repro.core.mc.bucket_size`` -> its FunctionInfo, if ours."""
+        if not fq.startswith(self.package + ".") and fq != self.package:
+            return None
+        parts = fq.split(".")
+        for split in range(len(parts), 0, -1):
+            mod = ".".join(parts[:split])
+            if mod in self.modules:
+                rest = ".".join(parts[split:])
+                if not rest:
+                    return None
+                return self.modules[mod].scan.functions.get(rest)
+        return None
+
+    # -- traced roots -----------------------------------------------------
+    def _decorator_jit(self, fn: FunctionInfo) -> JitEntry | None:
+        for dec in fn.node.decorator_list:
+            fq = self.dotted(dec, fn.module)
+            if fq in JIT_NAMES:
+                return JitEntry(fn, (), (), None)
+            if isinstance(dec, ast.Call):
+                cfq = self.dotted(dec.func, fn.module)
+                if cfq in JIT_NAMES:
+                    return JitEntry(fn, *_static_spec(dec), None)
+                if cfq in PARTIAL_NAMES and dec.args:
+                    inner = self.dotted(dec.args[0], fn.module)
+                    if inner in JIT_NAMES:
+                        return JitEntry(fn, *_static_spec(dec), None)
+        return None
+
+    def _find_roots(self):
+        roots: set[FunctionInfo] = set()
+        for mod in self.modules.values():
+            for fn in mod.scan.functions.values():
+                entry = self._decorator_jit(fn)
+                if entry is not None:
+                    self.jit_entries.append(entry)
+                    roots.add(fn)
+            for site in mod.scan.calls:
+                node = site.node
+                fq = self.dotted(node.func, mod.name)
+                # jax.jit(fn, ...) as an expression
+                if fq in JIT_NAMES:
+                    fn = (
+                        self.resolve_function(
+                            node.args[0], mod.name, site.enclosing
+                        )
+                        if node.args
+                        else None
+                    )
+                    entry = JitEntry(fn, *_static_spec(node), site)
+                    self.jit_entries.append(entry)
+                    if fn is not None:
+                        roots.add(fn)
+                    continue
+                # partial(jax.jit, ...)(fn) — outer call whose func is the
+                # partial application
+                if isinstance(node.func, ast.Call):
+                    pfq = self.dotted(node.func.func, mod.name)
+                    if pfq in PARTIAL_NAMES and node.func.args:
+                        inner = self.dotted(node.func.args[0], mod.name)
+                        if inner in JIT_NAMES:
+                            fn = (
+                                self.resolve_function(
+                                    node.args[0], mod.name, site.enclosing
+                                )
+                                if node.args
+                                else None
+                            )
+                            entry = JitEntry(
+                                fn, *_static_spec(node.func), site
+                            )
+                            self.jit_entries.append(entry)
+                            if fn is not None:
+                                roots.add(fn)
+                            continue
+                if fq in PALLAS_CALL_NAMES or (
+                    fq is not None and fq.endswith(".pallas_call")
+                ):
+                    kern = (
+                        self.resolve_function(
+                            node.args[0], mod.name, site.enclosing
+                        )
+                        if node.args
+                        else None
+                    )
+                    self.pallas_sites.append(PallasSite(site, kern))
+                    if kern is not None:
+                        self.kernels.add(kern)
+                        roots.add(kern)
+                    continue
+                if fq in TRACED_HOFS:
+                    for arg in node.args:
+                        fn = self.resolve_function(
+                            arg, mod.name, site.enclosing
+                        )
+                        if fn is not None:
+                            roots.add(fn)
+        self._roots = roots
+        # name jit wrappers assigned at module level (mc.py idiom):
+        # `_masked = partial(jax.jit, ...)(core)` — find the Assign target
+        for mod in self.modules.values():
+            for stmt in mod.tree.body:
+                if isinstance(stmt, ast.Assign) and isinstance(
+                    stmt.value, ast.Call
+                ):
+                    for entry in self.jit_entries:
+                        if (
+                            entry.site is not None
+                            and entry.site.node is stmt.value
+                            and len(stmt.targets) == 1
+                            and isinstance(stmt.targets[0], ast.Name)
+                        ):
+                            entry.wrapper_name = stmt.targets[0].id
+
+    def _close_reachability(self):
+        work = list(self._roots)
+        seen: set[FunctionInfo] = set(work)
+        # call sites indexed by enclosing function for fast lookup
+        by_fn: dict[FunctionInfo, list[CallSite]] = {}
+        for mod in self.modules.values():
+            for site in mod.scan.calls:
+                if site.enclosing is not None:
+                    by_fn.setdefault(site.enclosing, []).append(site)
+        while work:
+            fn = work.pop()
+            self.reachable.add(fn)
+            nxt: list[FunctionInfo] = list(fn.children.values())
+            for site in by_fn.get(fn, ()):
+                callee = self.resolve_function(
+                    site.node.func, site.module, fn
+                )
+                if callee is not None:
+                    nxt.append(callee)
+                fq = self.dotted(site.node.func, site.module)
+                if fq in TRACED_HOFS:
+                    for arg in site.node.args:
+                        hof_fn = self.resolve_function(
+                            arg, site.module, fn
+                        )
+                        if hof_fn is not None:
+                            nxt.append(hof_fn)
+            for callee in nxt:
+                if callee not in seen:
+                    seen.add(callee)
+                    work.append(callee)
+
+    # -- conveniences for rules -------------------------------------------
+    def is_reachable(self, fn: FunctionInfo) -> bool:
+        return fn in self.reachable
+
+    def iter_reachable(self):
+        return sorted(self.reachable, key=lambda f: (f.path, f.qualname))
+
+    def iter_functions(self):
+        for mod in self.modules.values():
+            yield from mod.scan.functions.values()
+
+    def mutated_globals(self, module: str) -> set[str]:
+        """Module-level names that are rebound after their first binding —
+        the closure-over-mutable-global hazard for jitted programs."""
+        info = self.modules.get(module)
+        if info is None:
+            return set()
+        scan = info.scan
+        out = {n for n, c in scan.top_assign_counts.items() if c > 1}
+        out |= scan.top_aug_assigns
+        out |= scan.global_decl_stores & set(scan.top_assign_counts)
+        out |= scan.global_decl_stores
+        return out
+
+    def jitted_symbols(self) -> dict[str, JitEntry]:
+        """Callable names (function or wrapper alias) that hit XLA."""
+        out: dict[str, JitEntry] = {}
+        for entry in self.jit_entries:
+            if entry.fn is not None and "." not in entry.fn.qualname:
+                out[entry.fn.name] = entry
+            if entry.wrapper_name:
+                out[entry.wrapper_name] = entry
+        return out
+
+
+def _static_spec(call: ast.Call) -> tuple[tuple[str, ...], tuple[int, ...]]:
+    names: tuple[str, ...] = ()
+    nums: tuple[int, ...] = ()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = tuple(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            nums = tuple(_const_ints(kw.value))
+    return names, nums
+
+
+def _const_strs(node: ast.expr) -> list[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return out
+    return []
+
+
+def _const_ints(node: ast.expr) -> list[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+        return out
+    return []

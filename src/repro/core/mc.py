@@ -109,14 +109,14 @@ def xi_from_responses(
     """
     onehot = jax.nn.one_hot(responses, num_classes, dtype=jnp.float32)  # (T, L, K)
     mw = masks * log_weights[None, :]                                   # (C, L)
-    beliefs = jnp.einsum("cl,tlk->ctk", mw, onehot)                     # (C, T, K)
-    counts = jnp.einsum("cl,tlk->ctk", masks, onehot)
+    beliefs = jnp.einsum("cl,tlk->ctk", mw, onehot)  # thriftlint: ignore[f64-reduction] (C,T,K) f32 by design: this is the bit-level oracle of the f32 mc_correctness kernel
+    counts = jnp.einsum("cl,tlk->ctk", masks, onehot)  # thriftlint: ignore[f64-reduction] f32 by design: kernel-oracle parity (and counts are exact small ints)
     beliefs = jnp.where(counts > 0, beliefs, empty_belief)
     mx = jnp.max(beliefs, axis=-1, keepdims=True)
     is_max = (beliefs >= mx - TIE_TOL).astype(jnp.float32)
-    ties = jnp.sum(is_max, axis=-1)
+    ties = jnp.sum(is_max, axis=-1)  # thriftlint: ignore[f64-reduction] exact: sums K indicator values, K << 2^24
     credit = is_max[:, :, 0] / ties
-    return jnp.mean(credit, axis=-1)
+    return jnp.mean(credit, axis=-1)  # thriftlint: ignore[f64-reduction] f32 by design: the kernel reduces credit in f32; serial oracle must match it bitwise
 
 
 class McXiEstimator:
@@ -204,7 +204,7 @@ def _hist_from_ties(hit0: jnp.ndarray, ties: jnp.ndarray, num_classes: int):
     zero = jnp.float32(0.0)
     return jnp.stack(
         [
-            jnp.sum(jnp.where(hit0 & (ties == j + 1), one, zero), axis=-1)
+            jnp.sum(jnp.where(hit0 & (ties == j + 1), one, zero), axis=-1)  # thriftlint: ignore[f64-reduction] exact: 0/1 indicator counts below 2^24, order-free by construction (see docstring)
             for j in range(num_classes)
         ],
         axis=-1,

@@ -45,7 +45,7 @@ def main() -> None:
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"[{cfg.name}] {n/1e6:.2f}M params, {args.steps} steps")
 
-    step_fn = jax.jit(
+    step_fn = jax.jit(  # thriftlint: ignore[recompile-risk] launcher main() runs once per process; the wrapper outlives the whole training loop
         make_train_step(
             model,
             OptimizerConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),

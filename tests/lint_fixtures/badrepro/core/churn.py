@@ -1,0 +1,37 @@
+"""Seeded recompile-risk violations (never imported; parsed only)."""
+import functools
+
+import jax
+
+_SCALE = 1.0
+
+
+def set_scale(s):
+    global _SCALE
+    _SCALE = s
+
+
+@jax.jit
+def scaled(x):  # FIRES: recompile-risk
+    return x * _SCALE
+
+
+def per_call(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda v: v * 2.0)  # FIRES: recompile-risk
+        out.append(f(x))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def windowed(x, dims):
+    return x.reshape(dims)
+
+
+def caller(x):
+    return windowed(x, dims=[2, 2])  # FIRES: recompile-risk
+
+
+def churny(x):
+    return windowed(x, dims=(len(x), 1))  # FIRES: recompile-risk

@@ -1,0 +1,31 @@
+"""Seeded jit-purity violations.
+
+Never imported — parsed by the thriftlint walker only.  Lines carrying a
+violation end with a ``FIRES: <rule>`` marker; the test derives the
+expected finding locations from those markers.
+"""
+import random
+import time
+
+import jax
+import numpy as np
+
+_TRACE_COUNT = 0
+
+
+@jax.jit
+def stamped(x):
+    t = time.time()  # FIRES: jit-purity
+    r = random.random()  # FIRES: jit-purity
+    n = np.random.rand()  # FIRES: jit-purity
+    return x + t + r + n
+
+
+def accum_body(carry, x):
+    global _TRACE_COUNT  # FIRES: jit-purity
+    _TRACE_COUNT += 1
+    return carry + x, x
+
+
+def run_scan(xs):
+    return jax.lax.scan(accum_body, 0.0, xs)

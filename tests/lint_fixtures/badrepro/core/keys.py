@@ -1,0 +1,22 @@
+"""Seeded prng-discipline violations (never imported; parsed only)."""
+import jax
+
+
+@jax.jit
+def double_sample(key):
+    a = jax.random.uniform(key, (4,))
+    b = jax.random.normal(key, (4,))  # FIRES: prng-discipline
+    return a + b
+
+
+@jax.jit
+def sample_and_split(key):
+    u = jax.random.uniform(key, (2,))  # FIRES: prng-discipline
+    k1, k2 = jax.random.split(key)
+    return u, jax.random.uniform(k1), jax.random.uniform(k2)
+
+
+@jax.jit
+def clean_fold(key, n):
+    # the repo's CRN idiom: derive-many, consume-each-derived-once
+    return jax.random.uniform(jax.random.fold_in(key, n))

@@ -1,0 +1,29 @@
+"""Seeded f64-reduction violations (never imported; parsed only)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def marginal_gain(w, x):
+    g = jnp.einsum("ij,j->i", w, x)  # FIRES: f64-reduction
+    return jnp.sum(g)  # FIRES: f64-reduction
+
+
+@jax.jit
+def hashed_accumulate(x):
+    total = 0.0
+    for arm in {3, 1, 2}:  # FIRES: f64-reduction
+        total += x[arm]
+    return total
+
+
+@jax.jit
+def explicit_ok(w, x):
+    # explicit accumulator dtype: the contract-compliant spelling
+    return jnp.sum(w * x, dtype=jnp.float64)
+
+
+@jax.jit
+def exact_ok(a, b):
+    # integer-exact indicator count: the other compliant spelling
+    return jnp.sum((a == b).astype(jnp.int32))

@@ -1,0 +1,45 @@
+"""Seeded pallas-contract violations (never imported; parsed only)."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _bad_store_kernel(x_ref, o_ref):
+    t = pl.program_id(0)
+    o_ref[t] = x_ref[0] * 2.0  # FIRES: pallas-contract
+
+
+def bad_store(x):
+    return pl.pallas_call(  # FIRES: pallas-contract
+        _bad_store_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(x.shape[0],),
+    )(x)
+
+
+def _mismatch_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def mismatched_grid(x, interpret):
+    return pl.pallas_call(
+        _mismatch_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],  # FIRES: pallas-contract
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        interpret=True,  # FIRES: pallas-contract
+    )(x)
+
+
+def _clean_kernel(x_ref, o_ref):
+    t = pl.program_id(0)
+    o_ref[0, pl.dslice(t, 1), :] = x_ref[0, pl.dslice(t, 1), :]
+
+
+def clean(x, interpret):
+    return pl.pallas_call(
+        _clean_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(x.shape[1],),
+        interpret=interpret,
+    )(x)

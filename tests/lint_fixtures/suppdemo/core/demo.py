@@ -1,0 +1,23 @@
+"""Suppression-machinery fixture (never imported; parsed only).
+
+Three identical f64-reduction violations with different suppression
+states: reasoned (silenced), reason-less (bad-suppression), and bare
+(survives).
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def suppressed_ok(w, x):
+    return jnp.sum(w * x)  # thriftlint: ignore[f64-reduction] fixture: pretend exactness is documented here
+
+
+@jax.jit
+def reasonless(w, x):
+    return jnp.sum(w * x)  # thriftlint: ignore[f64-reduction]
+
+
+@jax.jit
+def unsuppressed(w, x):
+    return jnp.sum(w * x)

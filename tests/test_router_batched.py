@@ -181,6 +181,57 @@ def test_kernel_backend_matches_numpy_backend():
     assert res.arms_used == res_k.arms_used
 
 
+class TestCompileBudget:
+    """CompileSentinel: the wave program's XLA cache is keyed only by
+    bucket shapes, so steady-state traffic never recompiles."""
+
+    def test_route_batch_content_change_does_not_recompile(self):
+        from repro.analysis import CompileSentinel, compile_cache_size
+        from repro.serving import router as router_mod
+
+        K, L, clusters, B, seed = 4, 8, 5, 96, 3
+        wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+        levels = np.quantile(engine.costs, [0.3, 0.8]) * 2.5
+        rng = np.random.default_rng(seed + 5)
+        sentinel = CompileSentinel({"wave": router_mod._wave_scan})
+        router.route_batch(np.arange(B), qemb, rng.choice(levels, size=B))
+        # the program is in cache (earlier tests may have warmed this
+        # bucket already, so assert the absolute population, not the delta)
+        assert compile_cache_size(router_mod._wave_scan) >= 1
+        sentinel.snapshot()
+        # fresh queries and budget assignments, identical bucket shapes:
+        # zero new XLA programs
+        for s in (101, 102, 103):
+            rng2 = np.random.default_rng(s)
+            _, qemb2, _ = wl.sample_queries(B, rng2)
+            router.route_batch(
+                np.arange(B), qemb2, rng2.choice(levels, size=B)
+            )
+        sentinel.assert_no_new_compiles(
+            detail="route_batch content change within one (B, T) bucket"
+        )
+
+    def test_route_batch_bucket_sharing_across_batch_sizes(self):
+        from repro.analysis import CompileSentinel
+        from repro.serving import router as router_mod
+
+        K, L, clusters, B, seed = 4, 8, 5, 96, 3
+        wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+        budget = float(np.quantile(engine.costs, 0.6)) * 2
+        sentinel = CompileSentinel({"wave": router_mod._wave_scan})
+        # 40 and 48 quantise to the same wave bucket: one compile serves both
+        router.route_batch(np.arange(40), qemb[:40], budget)
+        after_first = sentinel.compiles("wave")
+        router.route_batch(np.arange(48), qemb[:48], budget)
+        assert sentinel.compiles("wave") == after_first, (
+            "B=40 and B=48 share a bucket; the second size must be a "
+            "cache hit"
+        )
+        sentinel.assert_within(
+            {"wave": 2}, detail="declared wave-bucket budget for one pool"
+        )
+
+
 def _symmetric_router(p_sym=0.8, N=200):
     """Two equal-cost, equal-p arms that always vote class 0 and class 1:
     every routed query ends in an exact belief tie."""

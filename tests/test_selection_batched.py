@@ -138,6 +138,69 @@ class TestSelectMany:
         assert out[0] is out[2]               # same memo entry, one build
 
 
+class TestCompileBudget:
+    """CompileSentinel: `_sur_greedy_scan` is compiled per (G-bucket, L,
+    theta-bucket, K) — steady replanning traffic must stay in cache."""
+
+    def test_sur_greedy_many_content_change_does_not_recompile(self):
+        from repro.analysis import CompileSentinel, compile_cache_size
+        from repro.core import selection as selection_mod
+
+        G, L, K = 8, 12, 4
+        thetas = np.full(G, 300)        # pin the theta bucket across runs
+        b = np.random.default_rng(0).uniform(0.05, 1.0, L)
+        key = jax.random.key(42)
+        sentinel = CompileSentinel(
+            {"plan": selection_mod._sur_greedy_scan}
+        )
+        rng = np.random.default_rng(1)
+        sur_greedy_many(
+            rng.uniform(0.2, 0.98, (G, L)), b, rng.uniform(0.3, 2.5, G),
+            K, key, thetas,
+        )
+        # in cache (earlier tests may have warmed this bucket already, so
+        # assert the absolute population, not the since-construction delta)
+        assert compile_cache_size(selection_mod._sur_greedy_scan) >= 1
+        sentinel.snapshot()
+        for s in (2, 3, 4):
+            rng = np.random.default_rng(s)
+            sur_greedy_many(
+                rng.uniform(0.2, 0.98, (G, L)), b,
+                rng.uniform(0.3, 2.5, G), K, key, thetas,
+            )
+        sentinel.assert_no_new_compiles(
+            detail="sur_greedy_many content change within one "
+            "(G, theta) bucket"
+        )
+
+    def test_ragged_groups_share_the_warm_bucket(self):
+        from repro.analysis import CompileSentinel
+        from repro.core import selection as selection_mod
+
+        L, K = 12, 4
+        b = np.random.default_rng(0).uniform(0.05, 1.0, L)
+        key = jax.random.key(7)
+        sentinel = CompileSentinel(
+            {"plan": selection_mod._sur_greedy_scan}
+        )
+        rng = np.random.default_rng(9)
+        sur_greedy_many(
+            rng.uniform(0.2, 0.98, (8, L)), b, rng.uniform(0.3, 2.5, 8),
+            K, key, np.full(8, 300),
+        )
+        sentinel.snapshot()
+        # ragged G in (5, 6, 7) pads to the same G=8 bucket: cache hits only
+        for G in (5, 6, 7):
+            rng = np.random.default_rng(G)
+            sur_greedy_many(
+                rng.uniform(0.2, 0.98, (G, L)), b,
+                rng.uniform(0.3, 2.5, G), K, key, np.full(G, 300),
+            )
+        sentinel.assert_no_new_compiles(
+            detail="ragged G padded into the warm G-bucket"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Property: the batched greedy is invariant to group permutation
 # ---------------------------------------------------------------------------
