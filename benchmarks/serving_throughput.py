@@ -59,6 +59,7 @@ from repro.core.estimation import SuccessProbEstimator
 from repro.core.mc import bucket_size
 from repro.core.types import clip_probs
 from repro.data import OracleWorkload
+from repro.distributed.fault import FaultPolicy
 from repro.serving import BatchScheduler, OracleArm, PoolEngine, ThriftRouter
 from repro.serving import router as router_mod
 
@@ -394,6 +395,110 @@ def feedback_drift(num_classes: int, num_arms: int, history: int,
     }
 
 
+def fault_tolerance(num_classes: int, num_arms: int, history: int,
+                    chunks: int, chunk: int, seed: int = 37) -> dict:
+    """Accuracy + tail latency under an injected 2-arm outage.
+
+    The two arms the cached plans lean on hardest (the wave-0/1 heads) go
+    fully down (error rate 1.0). The same post-outage stream is served by
+    three pipelines plus a no-fault baseline:
+
+      * ``frozen``   — failover off, no feedback: failed waves simply
+        vanish from every belief (the pre-hardening behavior);
+      * ``failover`` — in-wave failover re-routes each failed slot to the
+        plan's next-best affordable arm inside the compiled wave program;
+      * ``replan``   — failover + the degradation tracker: failure
+        evidence folds into the estimator, the Wilson drift gate replans
+        the outage away, probes stand by to readmit.
+
+    The acceptance bar (full run): ``replan`` recovers >= 80% of the
+    no-fault accuracy while ``frozen`` does not.
+    """
+    C = 4
+    K, L = num_classes, num_arms
+
+    def pool(failover=True):
+        wl = OracleWorkload(num_classes=K, num_clusters=C, num_arms=L, seed=3)
+        T, emb, cid_h = wl.response_table(history * C, seed=4)
+        est = SuccessProbEstimator(T, emb, cid_h)
+        engine = PoolEngine(
+            [OracleArm(f"a{i}", wl, i, seed=11) for i in range(L)]
+        )
+        router = ThriftRouter(engine, est, num_classes=K, failover=failover)
+        return wl, engine, router
+
+    wl, engine_b, baseline_r = pool()
+    _, engine_z, frozen_r = pool(failover=False)
+    _, engine_f, failover_r = pool()
+    _, engine_p, replan_r = pool()
+    # tight budget -> shallow plans: an outage of the workhorse arms leaves
+    # no slack inside the frozen plan, so only replanning can recover
+    budget = float(np.quantile(engine_b.costs, 0.45)) * 1.3
+
+    scheds = {
+        "baseline": BatchScheduler(baseline_r, max_batch=chunk, max_wait_s=0.0),
+        "frozen": BatchScheduler(frozen_r, max_batch=chunk, max_wait_s=0.0),
+        "failover": BatchScheduler(failover_r, max_batch=chunk, max_wait_s=0.0),
+        "replan": BatchScheduler(replan_r, max_batch=chunk, max_wait_s=0.0,
+                                 feedback=True),
+    }
+    # warmup (not scored): plan caches + wave-program buckets on every plane
+    wrng = np.random.default_rng(seed + 1)
+    wcid, wemb, wlab = wl.sample_queries(chunk, wrng)
+    wq = np.column_stack([wcid, wlab])
+    for s in scheds.values():
+        s.submit_many(wq, wemb, budget)
+        s.drain()
+
+    # the outage: kill the two arms the served plans invoke most
+    res = baseline_r.route_batch(wq, wemb, budget)
+    flat = res.schedule[res.invoked]
+    counts = np.bincount(flat, minlength=L)
+    dead = np.argsort(-counts)[:2].tolist()
+    for engine in (engine_z, engine_f, engine_p):
+        engine.fault_policy = FaultPolicy(L, K, seed=seed).set_arms(
+            dead, error=1.0
+        )
+
+    rng = np.random.default_rng(seed)
+    accs = {name: [] for name in scheds}
+    for cid, qemb, lab in [wl.sample_queries(chunk, rng) for _ in range(chunks)]:
+        q = np.column_stack([cid, lab])
+        for name, sched in scheds.items():
+            blk = sched.submit_many(q, qemb, budget)
+            sched.drain()
+            accs[name].append(float((blk.predictions == lab).mean()))
+            for e in (engine_z, engine_f, engine_p):
+                if e.fault_policy is not None:
+                    e.fault_policy.advance()
+
+    tail = chunks // 2
+    mean_acc = {k: float(np.mean(v[tail:])) for k, v in accs.items()}
+    base = max(mean_acc["baseline"], 1e-12)
+    st = dict(scheds["replan"].stats)
+    out = {
+        "chunks": chunks,
+        "chunk": chunk,
+        "dead_arms": dead,
+        "baseline_acc": mean_acc["baseline"],
+        "frozen_acc": mean_acc["frozen"],
+        "failover_acc": mean_acc["failover"],
+        "replan_acc": mean_acc["replan"],
+        "frozen_recovery": mean_acc["frozen"] / base,
+        "failover_recovery": mean_acc["failover"] / base,
+        "replan_recovery": mean_acc["replan"] / base,
+        "acc_trajectory": {k: [round(a, 4) for a in v] for k, v in accs.items()},
+        "p99_ms": {
+            name: float(s.latency_stats().get("p99_s", 0.0)) * 1e3
+            for name, s in scheds.items()
+        },
+        "degradation_failures": int(st.get("degradation_failures", 0)),
+        "feedback_drifts": int(st.get("feedback_drifts", 0)),
+        "plan_stale_dropped": int(st.get("plan_stale_dropped", 0)),
+    }
+    return out
+
+
 def selection_replan(num_arms: int, classes: int, history: int,
                      groups=(1, 8, 64), repeats: int = 3, seed: int = 31,
                      eps: float = 0.25) -> dict:
@@ -614,6 +719,21 @@ def run(args) -> dict:
         f"{feedback['replan_time_s']:.2f}s over {feedback['drift_chunks']} chunks"
     )
 
+    # failure plane: accuracy + p99 under an injected 2-arm outage
+    fault = fault_tolerance(
+        args.classes, args.arms, history=args.feedback_history,
+        chunks=args.feedback_chunks, chunk=args.feedback_chunk,
+    )
+    print(
+        f"fault tolerance (2-arm outage {fault['dead_arms']}): baseline "
+        f"{fault['baseline_acc']:.3f} | frozen {fault['frozen_acc']:.3f} "
+        f"({fault['frozen_recovery']:.2f}) | failover "
+        f"{fault['failover_acc']:.3f} ({fault['failover_recovery']:.2f}) | "
+        f"failover+replan {fault['replan_acc']:.3f} "
+        f"({fault['replan_recovery']:.2f}) | failures folded "
+        f"{fault['degradation_failures']}, drifts {fault['feedback_drifts']}"
+    )
+
     # compile-bucket budgets: every wave program is keyed by a (B, T)
     # bucket pair and every planner program by a (G, theta) bucket pair, so
     # the whole bench — including the continuous-batching steady state and
@@ -660,6 +780,7 @@ def run(args) -> dict:
         "steady_state": steady,
         "selection": selection,
         "feedback": feedback,
+        "fault_tolerance": fault,
         "compile_sentinel": compile_sentinel,
         "plan_cache": router.plans.stats(),
         "history": _load_history(args.out),
@@ -722,6 +843,14 @@ def _load_history(path: str) -> list:
             k: selection[k]
             for k in ("groups_max", "speedup_at_max", "plans_match")
             if k in selection
+        }
+    fault = prev.get("fault_tolerance")
+    if fault:
+        entry["fault_tolerance"] = {
+            k: fault[k]
+            for k in ("baseline_acc", "frozen_recovery", "failover_recovery",
+                      "replan_recovery", "dead_arms")
+            if k in fault
         }
     history.append(entry)
     return history

@@ -2,9 +2,10 @@
 # CI: hygiene guards, the thriftlint static-analysis gate (zero findings,
 # every suppression reasoned), router/serving correctness, a no-skip gate
 # on the property suites (hypothesis or the in-repo fallback engine — they
-# must RUN), a serving-throughput smoke (one-shot engines + the
-# steady-state continuous-batching path + the online feedback-vs-drift
-# section + the compile-sentinel budget) with JSON well-formedness and
+# must RUN; the cost-ledger suite gates here too), a serving-throughput
+# smoke (one-shot engines + the steady-state continuous-batching path +
+# the online feedback-vs-drift section + the fault-tolerance section +
+# the compile-sentinel budget) with JSON well-formedness and
 # history-preservation assertions, a docs link check, then the FULL tier-1
 # suite — tracer-leak-guarded via tests/conftest.py — with zero tolerated
 # failures; there is no allowlist of known-bad tests.
@@ -29,14 +30,14 @@ echo "thriftlint OK (zero findings)"
 python -m pytest -x -q tests/test_router_batched.py tests/test_serving.py \
     tests/test_scheduler_continuous.py tests/test_plans.py \
     tests/test_core_selection.py tests/test_feedback.py \
-    tests/test_selection_batched.py
+    tests/test_selection_batched.py tests/test_failover.py
 
 # property suites must RUN — on the real hypothesis engine when installed,
 # on the in-repo tests/_hypolite.py fallback otherwise. A skip here means
 # the importorskip hole is back; fail loudly instead of masking it. (This
 # is their one gated run; the fast batch above deliberately omits them.)
 PROP_OUT=$(python -m pytest -q -rs tests/test_properties.py \
-    tests/test_estimation_properties.py 2>&1) || {
+    tests/test_estimation_properties.py tests/test_cost_ledger.py 2>&1) || {
     echo "$PROP_OUT"; exit 1; }
 echo "$PROP_OUT" | tail -1
 if echo "$PROP_OUT" | grep -qiE "skipped"; then
@@ -112,6 +113,26 @@ assert sel["groups_max"] >= 8, "no multi-group replan measured"
 # a wall-clock assert at smoke scale would make CI flaky on loaded hosts
 assert sel["speedup_at_max"] > 0, "replan timing is malformed"
 
+# the fault-tolerance section: present, well-formed, failures really
+# injected and folded; directionally right even at smoke scale (the
+# committed full-size report carries the >= 0.8 replan-recovery acceptance
+# bar under the 2-arm outage)
+ft = report["fault_tolerance"]
+for key in ("dead_arms", "baseline_acc", "frozen_acc", "failover_acc",
+            "replan_acc", "frozen_recovery", "failover_recovery",
+            "replan_recovery", "acc_trajectory", "p99_ms",
+            "degradation_failures", "feedback_drifts"):
+    assert key in ft, f"fault_tolerance missing {key}"
+assert len(ft["dead_arms"]) == 2, "outage must kill exactly two arms"
+for key in ("baseline_acc", "frozen_acc", "failover_acc", "replan_acc"):
+    assert 0.0 < ft[key] <= 1.0, f"fault_tolerance has bad {key}: {ft[key]}"
+assert ft["degradation_failures"] > 0, "outage produced no fault evidence"
+assert ft["feedback_drifts"] > 0, "fault evidence never drifted the estimator"
+assert ft["baseline_acc"] > ft["frozen_acc"], "outage did not hurt frozen plans"
+assert ft["replan_acc"] >= ft["frozen_acc"], "replanning lost to frozen plans"
+for name, p99 in ft["p99_ms"].items():
+    assert p99 > 0, f"fault_tolerance p99 malformed for {name}"
+
 # the compile-sentinel budget: every XLA compile of the wave/planner
 # programs must land in a per-bucket warm-up (zero in timed sections) and
 # total program counts must stay within the declared bucket budgets
@@ -137,6 +158,7 @@ print("serving smoke OK:", [(r["batch"], round(r["qps"])) for r in report["rows"
       "| steady", round(steady["saturated_qps"]),
       f"({steady['vs_jit_engine']:.2f}x jit), p99 {steady['p99_ms']:.2f}ms",
       f"| feedback recovery {fb['recovery']:.2f} (frozen {fb['frozen_vs_oracle']:.2f})",
+      f"| fault recovery {ft['replan_recovery']:.2f} (frozen {ft['frozen_recovery']:.2f})",
       f"| batched replan {sel['speedup_at_max']:.2f}x at G={sel['groups_max']}",
       f"| compiles wave {cs['wave_compiles']}/{cs['wave_bucket_budget']}"
       f" plan {cs['plan_compiles']}/{cs['plan_bucket_budget']}, timed 0")

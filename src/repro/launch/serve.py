@@ -16,10 +16,19 @@ at the next admission boundary. ``--probe-rate r`` additionally probes one
 currently-unplanned arm on ~r of feedback-eligible requests, so recovered
 arms re-enter the estimates.
 
+``--fault-rate r`` attaches a FaultPolicy to the pool: the listed
+``--fault-arms`` (default: every arm) time out / error / degrade at the
+given per-cell rates, failed wave slots re-route in-wave to the plan's
+next-best affordable arm, and the failure evidence folds into the
+estimator so flaky arms replan away (combine with ``--drift-after`` or
+``--probe-rate`` to enable the feedback loop).
+
     PYTHONPATH=src python -m repro.launch.serve --queries 500 --budget 1e-4
     PYTHONPATH=src python -m repro.launch.serve --qps 20000 --metered
     PYTHONPATH=src python -m repro.launch.serve --queries 2000 \
         --drift-after 500 --probe-rate 0.05
+    PYTHONPATH=src python -m repro.launch.serve --queries 2000 \
+        --probe-rate 0.05 --fault-rate 0.3 --fault-arms 0,1
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ import numpy as np
 from repro.core.clustering import kmeans
 from repro.core.estimation import SuccessProbEstimator
 from repro.data import OracleWorkload
+from repro.distributed.fault import FaultPolicy
 from repro.serving import (
     BatchScheduler,
     FeedbackLog,
@@ -64,6 +74,13 @@ def main() -> None:
     ap.add_argument("--probe-rate", type=float, default=0.0,
                     help="exploration probe rate (fraction of requests that "
                          "invoke one unplanned arm); enables feedback")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-cell fault rate injected on --fault-arms "
+                         "(split 50/30/20 across timeout/error/degrade); "
+                         "0 = no fault injection")
+    ap.add_argument("--fault-arms", type=str, default="",
+                    help="comma-separated arm indices the fault policy "
+                         "targets (default: all arms)")
     args = ap.parse_args()
 
     wl = OracleWorkload(
@@ -73,6 +90,19 @@ def main() -> None:
         [OracleArm(f"llm-{i}", wl, i, metered=args.metered)
          for i in range(args.arms)]
     )
+    if args.fault_rate > 0:
+        targets = (
+            [int(a) for a in args.fault_arms.split(",") if a.strip()]
+            if args.fault_arms else list(range(args.arms))
+        )
+        engine.fault_policy = FaultPolicy(
+            args.arms, args.classes, seed=7
+        ).set_arms(
+            targets,
+            timeout=0.5 * args.fault_rate,
+            error=0.3 * args.fault_rate,
+            degrade=0.2 * args.fault_rate,
+        )
     T, emb, _ = wl.response_table(args.history)
     assign, _ = kmeans(emb, args.clusters, seed=0)
     est = SuccessProbEstimator(T, emb, assign)
@@ -177,6 +207,17 @@ def main() -> None:
         f"(prefetched {st['plan_prefetches']}) | "
         f"stragglers={sched.mitigator.stragglers()}"
     )
+    if args.fault_rate > 0:
+        print(
+            f"fault plane: rate {args.fault_rate:.2f} on "
+            f"{len(targets)} arm(s) | attempted failures "
+            f"{st.get('degradation_failures', 0)} "
+            f"(degraded {st.get('degradation_degraded', 0)}) over "
+            f"{st.get('degradation_routes', 0)} faulted routes"
+            + ("" if online else
+               " | (enable --probe-rate/--drift-after to fold failures "
+               "into the estimator)")
+        )
     if online:
         tail = preds[args.drift_after:] if args.drift_after else preds
         tail_lab = lab[args.drift_after:] if args.drift_after else lab

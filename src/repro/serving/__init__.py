@@ -1,12 +1,15 @@
 """Serving runtime: arm engine, ThriftLLM router, plan service, scheduler,
-online estimation feedback."""
+online estimation feedback, fault injection + degradation tracking."""
+from repro.distributed.fault import ArmFaultSpec, FaultPolicy
+
 from .engine import LMArm, OracleArm, PoolEngine, USD_PER_FLOP
-from .feedback import FeedbackLog, FeedbackReport
+from .feedback import DegradationTracker, FeedbackLog, FeedbackReport
 from .plans import GroupPlan, PlanService
 from .router import PendingRoute, RouteResult, ThriftRouter
 from .scheduler import (
     BatchScheduler,
     BlockFuture,
+    CostLedger,
     Request,
     RequestFuture,
     RequestResult,
@@ -14,9 +17,10 @@ from .scheduler import (
 
 __all__ = [
     "LMArm", "OracleArm", "PoolEngine", "USD_PER_FLOP",
-    "FeedbackLog", "FeedbackReport",
+    "FeedbackLog", "FeedbackReport", "DegradationTracker",
     "GroupPlan", "PlanService",
     "ThriftRouter", "RouteResult", "PendingRoute",
     "BatchScheduler", "Request", "RequestFuture", "RequestResult",
-    "BlockFuture",
+    "BlockFuture", "CostLedger",
+    "ArmFaultSpec", "FaultPolicy",
 ]

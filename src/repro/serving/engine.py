@@ -101,6 +101,10 @@ class PoolEngine:
     """
 
     arms: List[Any]
+    # Optional arm-level fault injection (see repro.distributed.fault):
+    # draws are evaluated host-side on the original wave schedule, never
+    # inside traced code. None / inactive policies cost nothing.
+    fault_policy: Optional[Any] = None
 
     def __post_init__(self):
         self._workload = None
@@ -141,6 +145,20 @@ class PoolEngine:
         single-call heterogeneous fast paths (``invoke_rows`` pooled draw,
         the router's all-cells speculative gather)."""
         return self._workload is not None
+
+    def fault_grid(self, sched_T: np.ndarray):
+        """(codes, failed) for a wave schedule, or (None, None) when no
+        active fault policy is attached. ``codes`` is the (T, B) int8 fault
+        grid (see FAULT_* in repro.distributed.fault); ``failed`` marks
+        cells whose arm produced no usable response (timeout or error —
+        silently-degraded cells still answer, just wrongly)."""
+        policy = self.fault_policy
+        if policy is None or not policy.active:
+            return None, None
+        from repro.distributed.fault import FAULT_ERROR, FAULT_TIMEOUT
+
+        codes = policy.grid_codes(sched_T)
+        return codes, (codes == FAULT_TIMEOUT) | (codes == FAULT_ERROR)
 
     def fingerprint(self) -> bytes:
         """Digest of the pool's pricing identity. The PlanService folds this

@@ -91,6 +91,11 @@ class FeedbackLog:
         the estimates. 0 (default) disables probing entirely (no rng is
         consumed; the zero-label path is bit-identical).
       probe_seed: seed of the probe-thinning rng.
+
+    A :class:`DegradationTracker` may additionally stream *failure*
+    evidence (timeouts/errors — attempts that can never be correct) into
+    the same pending buffers, so flaky arms ride the identical
+    fold → Wilson-gate → replan path that label feedback does.
     """
 
     def __init__(
@@ -247,6 +252,13 @@ class FeedbackLog:
         """Labeled requests buffered for the next admission-boundary fold."""
         return self._pending_labels
 
+    @property
+    def has_pending(self) -> bool:
+        """Anything buffered for the next fold — labeled requests *or*
+        failure evidence from a :class:`DegradationTracker` (which carries
+        attempts but no labels)."""
+        return bool(self._pending)
+
     # ------------------------------------------------------------------
     # Label arrival
     # ------------------------------------------------------------------
@@ -378,4 +390,90 @@ class FeedbackLog:
             "feedback_applies": self.applies,
             "feedback_drifts": self.drifts,
             "feedback_probes": self.probes,
+        }
+
+
+class DegradationTracker:
+    """Folds arm failure outcomes into the online estimator path.
+
+    Timeouts and errors are invisible to the label path — a failed
+    invocation yields no response to score when ground truth arrives — so a
+    persistently failing arm would keep its (stale, healthy) estimate and
+    keep being planned. This tracker turns each *attempted* failure from a
+    :class:`~repro.serving.router.RouteResult`'s fault evidence into a
+    per-(cluster, arm) zero-success attempt in the owning
+    :class:`FeedbackLog`'s pending buffers. From there the evidence rides
+    the existing machinery unchanged: the admission-boundary fold, the
+    Wilson interval-overlap drift gate, versioned lazy plan invalidation
+    and the batched replan — a flaky arm's success estimate collapses, the
+    gate fires for exactly the clusters that observed the failures, plans
+    route around it, and ``FeedbackLog`` probes readmit it once it
+    recovers.
+
+    Silent degradation needs no extra plumbing here: a degraded arm *does*
+    answer (with a corrupted class), so its responses flow through
+    ``observe``/``record_many`` and arriving labels mark them wrong — the
+    same drift gate fires on the label evidence. The tracker only counts
+    degraded cells for observability.
+    """
+
+    def __init__(self, feedback: FeedbackLog):
+        self.feedback = feedback
+        L = feedback.estimator.num_arms
+        self.failures = 0        # attempted timeout/error invocations folded
+        self.degraded = 0        # silently-degraded responses served
+        self.routes = 0          # fault-bearing RouteResults ingested
+        self.arm_failures = np.zeros(L, np.int64)
+
+    def record_route(self, clusters: np.ndarray, fault_schedule: np.ndarray,
+                     fault_codes: np.ndarray) -> int:
+        """Ingest one RouteResult's fault evidence ((B, T) matrices over the
+        *original* plan positions). Returns the failures folded."""
+        from repro.distributed.fault import FAULT_DEGRADE, FAULT_ERROR, FAULT_TIMEOUT
+
+        if fault_codes is None:
+            return 0
+        failed = (fault_codes == FAULT_TIMEOUT) | (fault_codes == FAULT_ERROR)
+        ndeg = int((fault_codes == FAULT_DEGRADE).sum())
+        self.degraded += ndeg
+        nf = int(failed.sum())
+        if nf or ndeg:
+            self.routes += 1
+        if nf == 0:
+            return 0
+        hit_rows = failed.any(axis=1)
+        cl = np.asarray(clusters, np.int64)
+        for cid in np.unique(cl[hit_rows]):
+            sel = cl == cid
+            arms = fault_schedule[sel][failed[sel]]
+            # attempts with zero successes; buf[2] (labeled-query count)
+            # stays put — failures are not labels
+            np.add.at(self.feedback._buf(int(cid))[1], arms, 1.0)
+        self.arm_failures += np.bincount(
+            fault_schedule[failed], minlength=self.arm_failures.size
+        )
+        self.failures += nf
+        return nf
+
+    def record_failures(self, clusters: np.ndarray, arms: np.ndarray) -> int:
+        """Ingest flat (cluster, arm) failure pairs — the probe side channel
+        (a probe whose arm failed yields no response to watch)."""
+        arms = np.asarray(arms, np.int64)
+        if arms.size == 0:
+            return 0
+        cl = np.asarray(clusters, np.int64)
+        for cid in np.unique(cl):
+            np.add.at(
+                self.feedback._buf(int(cid))[1], arms[cl == cid], 1.0
+            )
+        self.arm_failures += np.bincount(arms, minlength=self.arm_failures.size)
+        self.failures += int(arms.size)
+        self.routes += 1
+        return int(arms.size)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "degradation_failures": self.failures,
+            "degradation_degraded": self.degraded,
+            "degradation_routes": self.routes,
         }

@@ -433,6 +433,12 @@ class PlanService:
         """The ``n`` most frequently planned (cluster, budget) pairs."""
         return [pair for pair, _ in self._pair_counts.most_common(n)]
 
+    def known_budgets(self) -> List[float]:
+        """Every budget observed in planned traffic, ascending — the
+        default downgrade ladder for cost-ledger admission (a downgraded
+        request lands on a budget that already has warm plans)."""
+        return sorted({float(b) for _, b in self._pair_counts})
+
     def prewarm(
         self,
         pairs: Optional[Iterable[Tuple[int, float]]] = None,

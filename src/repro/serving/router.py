@@ -57,6 +57,13 @@ from jax.experimental import enable_x64
 from repro.core.belief import tie_break_argmax
 from repro.core.estimation import SuccessProbEstimator
 from repro.core.selection import STOP_MARGIN, ThriftLLM, adaptive_invoke
+from repro.distributed.fault import (
+    FAULT_DEGRADE,
+    FAULT_ERROR,
+    FAULT_TIMEOUT,
+    failover_gather,
+    observed_faults,
+)
 from repro.kernels import ops
 
 from .engine import PoolEngine
@@ -88,6 +95,21 @@ class RouteResult:
         served — the scheduler's latency accounting input.
       waves: number of waves the batch executed before every query stopped.
 
+    When the engine carries an active fault policy, ``schedule`` /
+    ``responses`` / ``invoked`` / ``costs`` describe the *effective* route
+    (what was actually served after in-wave failover re-routed failed
+    slots), so downstream feedback/latency/ledger accounting needs no fault
+    awareness, and three keyword-only fields carry the failure evidence
+    (all ``None`` on fault-free routes — the common case allocates nothing):
+
+      fault_schedule: (B, T) the original plan-order schedule.
+      fault_codes: (B, T) int8 observed fault per original plan cell
+        (``FAULT_TIMEOUT``/``FAULT_ERROR`` at failures the wavefront
+        actually attempted, ``FAULT_DEGRADE`` at silently-degraded cells it
+        actually served, 0 everywhere else — injected faults past the stop
+        wave were never observed and do not count as evidence).
+      arm_fault_counts: (L,) attempted timeout/error failures per arm.
+
     ``arms_used`` is derived lazily from the (schedule, invoked) matrices so
     the hot path never builds Python lists.
     """
@@ -104,6 +126,10 @@ class RouteResult:
         invoked: np.ndarray,             # (B, T) bool, wave actually ran
         arm_query_counts: np.ndarray,    # (L,) queries served per arm
         waves: int,
+        *,
+        fault_schedule: Optional[np.ndarray] = None,   # (B, T) original plan
+        fault_codes: Optional[np.ndarray] = None,      # (B, T) observed faults
+        arm_fault_counts: Optional[np.ndarray] = None,  # (L,) failures per arm
     ):
         self.predictions = predictions
         self.costs = costs
@@ -115,6 +141,9 @@ class RouteResult:
         self.invoked = invoked
         self.arm_query_counts = arm_query_counts
         self.waves = waves
+        self.fault_schedule = fault_schedule
+        self.fault_codes = fault_codes
+        self.arm_fault_counts = arm_fault_counts
         self._arms_used: Optional[List[List[int]]] = None
 
     @property
@@ -155,6 +184,9 @@ def _wave_scan(
     responses: jnp.ndarray,   # (T, B) int32 precomputed responses, -1 = none
     weights: jnp.ndarray,     # (T, B) f64 log belief weight per wave
     residual: jnp.ndarray,    # (T, B) f64 Prop. 4 log F residuals
+    src: jnp.ndarray,         # (T, B) i32 failover gather: original wave
+                              #   index serving slot t (identity = no fault)
+    valid: jnp.ndarray,       # (T, B) bool slot t has an available arm
     empty: jnp.ndarray,       # (B,)  f64 empty-class log belief
     stop_margin,
     *,
@@ -183,6 +215,21 @@ def _wave_scan(
     rule sees exactly the float32 beliefs the kernel-backed reference loop
     sees (the documented ~1e-7 stop-boundary caveat).
 
+    **In-wave failover** (``src``/``valid``): slot t of each query's wave
+    program serves the plan's t-th *available* arm. The gather is computed
+    host-side from the fault grid (see ``repro.distributed.fault``) and fed
+    as plain data — not statics — so flipping injected faults between
+    batches reuses the compiled program, and on fault-free traffic the
+    identity gather is a bit-exact no-op (invalid cells read the same pad
+    values — schedule -1, weight 0, residual -inf — the tables already hold
+    there). The stop rule, belief prefixes and residuals all operate on the
+    post-gather *effective* arrays, so a failed arm's slot re-routes to the
+    plan's next-best affordable arm and the belief update is masked to
+    responses actually obtained. The gathered residual is the original
+    plan's suffix value at the source position — an upper bound on the
+    post-failover remaining evidence, so Prop. 4 never stops earlier than a
+    fault-free run would.
+
     Returns (stop_wave (B,) int — number of waves invoked per query,
     predictions (B,) int via first-max argmax, log-beliefs (B, K) at the
     stop wave).
@@ -191,6 +238,14 @@ def _wave_scan(
     K = num_classes
     f_dtype = weights.dtype
     class_ids = jnp.arange(K, dtype=responses.dtype)
+
+    pad_i = jnp.asarray(-1, schedule.dtype)
+    schedule = jnp.where(valid, jnp.take_along_axis(schedule, src, axis=0), pad_i)
+    responses = jnp.where(valid, jnp.take_along_axis(responses, src, axis=0), pad_i)
+    weights = jnp.where(valid, jnp.take_along_axis(weights, src, axis=0), 0.0)
+    residual = jnp.where(
+        valid, jnp.take_along_axis(residual, src, axis=0), -jnp.inf
+    )
 
     if use_kernel:
         # Prefix-expanded kernel dispatch: row (b, t) holds query b's
@@ -293,6 +348,7 @@ class PendingRoute:
         self.T = int(self.sched_T.shape[0])
         self.L = len(router.engine.arms)
         if kind == "reference":
+            self._prepare_reference_faults()
             self._init_reference()
 
     # ------------------------------------------------------------------
@@ -302,6 +358,9 @@ class PendingRoute:
         router, T, B = self.router, self.T, self.B
         sched_T, payloads = self.sched_T, self.payloads
         engine = router.engine
+        codes, failed = engine.fault_grid(sched_T)
+        self._orig_sched_T = sched_T
+        self._codes, self._failed = codes, failed
         # Speculative response gather: one heterogeneous-arm engine call for
         # every scheduled (query, wave) cell. The device program then
         # decides which cells the adaptive loop actually uses.
@@ -313,11 +372,36 @@ class PendingRoute:
             resp_T = engine.invoke_grid(sched_T, payloads)
         else:
             mask = sched_T >= 0
+            if failed is not None:
+                mask &= ~failed          # a failed arm yields no response
             _, rows_b = np.nonzero(mask)
             resp_T = np.full((T, B), -1, np.int64)
             if rows_b.size:
                 resp_T[mask] = engine.invoke_rows(sched_T[mask], payloads, rows_b)
+        if codes is not None:
+            resp_T = np.where(failed, -1, resp_T)
+            degr = codes == FAULT_DEGRADE
+            if degr.any():
+                # silent degradation: the arm answers (and bills), but with a
+                # hash-drawn class — response-independent, so the reference
+                # plane corrupts the same cells to the same classes
+                resp_T = np.where(
+                    degr, engine.fault_policy.corrupt_grid(sched_T), resp_T
+                )
         self.resp_T = resp_T
+
+        # In-wave failover gather: identity on fault-free traffic. Data
+        # inputs, never statics — flipping injected faults between batches
+        # rides the same compiled wave program (CompileSentinel-pinned).
+        if failed is not None and router.failover:
+            src, valid, self._rank, self._navail = failover_gather(
+                sched_T, failed
+            )
+        else:
+            src = np.broadcast_to(np.arange(T, dtype=np.int32)[:, None], (T, B))
+            valid = sched_T >= 0
+            self._rank = self._navail = None
+        self._src, self._valid = src, valid
 
         # Pad to compile buckets so serving traffic with drifting batch
         # sizes / plan depths reuses a handful of compiled programs; the
@@ -331,12 +415,19 @@ class PendingRoute:
         w_p[:T, :B] = self.w_T
         res_p = np.full((Tp, Bp), -np.inf, np.float64)
         res_p[:T, :B] = self.res_T
+        src_p = np.broadcast_to(
+            np.arange(Tp, dtype=np.int32)[:, None], (Tp, Bp)
+        ).copy()
+        src_p[:T, :B] = src
+        valid_p = np.zeros((Tp, Bp), bool)
+        valid_p[:T, :B] = valid
         empty_p = np.zeros(Bp, np.float64)
         empty_p[:B] = self.empty
 
         with enable_x64():
             self._dev = _wave_scan(
-                sched_p, resp_p, w_p, res_p, empty_p, self.stop_margin,
+                sched_p, resp_p, w_p, res_p, src_p, valid_p, empty_p,
+                self.stop_margin,
                 num_classes=router.num_classes, use_kernel=router.use_kernel,
             )
 
@@ -348,6 +439,23 @@ class PendingRoute:
         probe = getattr(self._dev[0], "is_ready", None)
         return bool(probe()) if probe is not None else True
 
+    def _fault_kwargs(self, stop_wave: np.ndarray) -> dict:
+        """Fault-evidence fields for RouteResult; {} on fault-free routes."""
+        codes = getattr(self, "_codes", None)
+        if codes is None:
+            return {}
+        obs = observed_faults(
+            codes, self._orig_sched_T, stop_wave, self._rank, self._navail
+        )
+        hit = (obs == FAULT_TIMEOUT) | (obs == FAULT_ERROR)
+        return dict(
+            fault_schedule=self._orig_sched_T.T,
+            fault_codes=obs.T,
+            arm_fault_counts=np.bincount(
+                self._orig_sched_T[hit], minlength=self.L
+            ),
+        )
+
     def _finalize_jit(self) -> RouteResult:
         s_d, pred_d, beliefs_d = self._dev
         B, T, L = self.B, self.T, self.L
@@ -357,26 +465,86 @@ class PendingRoute:
         else:
             beliefs = np.asarray(beliefs_d, np.float64)[:B]
             predictions, _ = tie_break_argmax(beliefs, self.rng)
-        invoked_T = np.arange(T)[:, None] < stop_wave[None, :]
-        costs = np.where(invoked_T, self.wc_T, 0.0).sum(axis=0)
-        responses_T = np.where(invoked_T, self.resp_T, -1)
-        arm_query_counts = np.bincount(self.sched_T[invoked_T], minlength=L)
+        if self._failed is None:
+            # fault-free fast path: unchanged pre-failover accounting
+            sched_T = self.sched_T
+            invoked_T = np.arange(T)[:, None] < stop_wave[None, :]
+            costs = np.where(invoked_T, self.wc_T, 0.0).sum(axis=0)
+            responses_T = np.where(invoked_T, self.resp_T, -1)
+        else:
+            # report the *effective* route — post-failover schedule, the
+            # responses actually obtained, spend charged for the arms
+            # actually invoked — so downstream accounting stays fault-blind
+            src, valid = self._src, self._valid
+            bb = np.broadcast_to(np.arange(B)[None, :], (T, B))
+            sched_T = np.where(valid, self.sched_T[src, bb], -1)
+            resp_eff = np.where(valid, self.resp_T[src, bb], -1)
+            wc_eff = np.where(valid, self.wc_T[src, bb], 0.0)
+            invoked_T = (
+                np.arange(T)[:, None] < stop_wave[None, :]
+            ) & (sched_T >= 0)
+            if not self.router.failover:
+                # frozen plans: a failed slot's wave still elapses, but the
+                # arm never answered — not served, not charged
+                invoked_T &= ~self._failed
+            costs = np.where(invoked_T, wc_eff, 0.0).sum(axis=0)
+            responses_T = np.where(invoked_T, resp_eff, -1)
+        arm_query_counts = np.bincount(sched_T[invoked_T], minlength=L)
         return RouteResult(
             predictions=predictions,
             costs=costs,
             planned_costs=self.planned,
             clusters=self.cluster_ids,
             budgets=np.asarray(self.budgets),
-            schedule=self.sched_T.T,
+            schedule=sched_T.T,
             responses=responses_T.T,
             invoked=invoked_T.T,
             arm_query_counts=arm_query_counts,
             waves=int(invoked_T.any(axis=1).sum()),
+            **self._fault_kwargs(stop_wave),
         )
 
     # ------------------------------------------------------------------
     # reference kind: compacting wavefront, one step() per wave
     # ------------------------------------------------------------------
+    def _prepare_reference_faults(self):
+        """Mirror the jit plane's fault handling on the host wavefront.
+
+        Same single host-side fault grid, same failover gather — but
+        materialized into the plan tables up front (the compacting loop
+        then runs unchanged over the *effective* plan), instead of gathered
+        inside the device program. Computing the grid once on the original
+        schedule is what keeps the two planes bit-identical under faults.
+        """
+        engine = self.router.engine
+        codes, failed = engine.fault_grid(self.sched_T)
+        self._orig_sched_T = self.sched_T
+        self._codes, self._failed = codes, failed
+        self._rank = self._navail = None
+        self._degrade_T = None
+        if codes is None:
+            return
+        T, B = self.sched_T.shape
+        degr = codes == FAULT_DEGRADE
+        corrupt = None
+        if degr.any():
+            corrupt = np.where(
+                degr, engine.fault_policy.corrupt_grid(self.sched_T), -1
+            )
+        if self.router.failover:
+            src, valid, self._rank, self._navail = failover_gather(
+                self.sched_T, failed
+            )
+            bb = np.broadcast_to(np.arange(B)[None, :], (T, B))
+            self.sched_T = np.where(valid, self.sched_T[src, bb], -1)
+            self.w_T = np.where(valid, self.w_T[src, bb], 0.0)
+            self.res_T = np.where(valid, self.res_T[src, bb], -np.inf)
+            self.wc_T = np.where(valid, self.wc_T[src, bb], 0.0)
+            if corrupt is not None:
+                self._degrade_T = np.where(valid, corrupt[src, bb], -1)
+        else:
+            self._degrade_T = corrupt
+
     def _init_reference(self):
         B, K = self.B, self.router.num_classes
         self.weights = self.w_T.T                # (B, T) view for the kernel
@@ -386,6 +554,7 @@ class PendingRoute:
         self.costs = np.zeros(B, np.float64)
         self.arm_query_counts = np.zeros(self.L, np.int64)
         self.cur = np.arange(B)                   # queries still in flight
+        self.stop_at = np.full(B, self.T, np.int64)  # wave each query stopped
         self.waves = 0
         self._t = 0
         self._exhausted = False
@@ -442,6 +611,7 @@ class PendingRoute:
             self.res_T[t][cur] + h2 > h1 - self.stop_margin
         )
         stopped = cur[~keep]
+        self.stop_at[stopped] = t
         preds = None
         if self.rng is None and stopped.size:
             preds = tie_break_argmax(bel[~keep])[0]
@@ -452,14 +622,23 @@ class PendingRoute:
         if cur.size == 0:
             self._exhausted = True
             return stopped, preds
-        self.waves += 1
-        arms_t = sched_t[cur]
-        votes = self.router.engine.invoke_rows(arms_t, self.payloads, cur)
-        self.arm_query_counts += np.bincount(arms_t, minlength=self.L)
-        self.vote[cur, votes] += self.w_T[t][cur]
-        self.voted[cur, votes] = True
-        self.costs[cur] += self.wc_T[t][cur]
-        self.resp_T[t][cur] = votes
+        live = cur
+        if self._failed is not None and not self.router.failover:
+            # frozen plans under faults: the wave elapses for every in-flight
+            # query, but failed arms are never invoked, charged, or counted
+            live = cur[~self._failed[t][cur]]
+        if live.size:
+            self.waves += 1
+            arms_t = sched_t[live]
+            votes = self.router.engine.invoke_rows(arms_t, self.payloads, live)
+            if self._degrade_T is not None:
+                ov = self._degrade_T[t][live]
+                votes = np.where(ov >= 0, ov, votes)
+            self.arm_query_counts += np.bincount(arms_t, minlength=self.L)
+            self.vote[live, votes] += self.w_T[t][live]
+            self.voted[live, votes] = True
+            self.costs[live] += self.wc_T[t][live]
+            self.resp_T[t][live] = votes
         return stopped, preds
 
     def _finalize_reference(self) -> RouteResult:
@@ -485,6 +664,7 @@ class PendingRoute:
             invoked=invoked,
             arm_query_counts=self.arm_query_counts,
             waves=self.waves,
+            **self._fault_kwargs(self.stop_at),
         )
 
     # ------------------------------------------------------------------
@@ -514,6 +694,11 @@ class ThriftRouter:
         (:meth:`route_batch`); ``False`` falls back to the compacting
         host loop (:meth:`route_batch_reference`) which never invokes arms
         speculatively.
+      failover: with an active engine fault policy, re-route a failed arm's
+        wave slot to the plan's next-best affordable arm *inside* the wave
+        program (both planes, identical semantics); ``False`` freezes the
+        plan — failed slots simply lose their vote (and are not charged).
+        Irrelevant (zero-cost identity) without injected faults.
       plan_service: optionally share a :class:`PlanService` across routers
         bound to the same pool; by default each router owns one.
     """
@@ -528,6 +713,7 @@ class ThriftRouter:
         seed: int = 0,
         use_kernel: bool = False,
         jit_waves: bool = True,
+        failover: bool = True,
         plan_service: Optional[PlanService] = None,
     ):
         self.engine = engine
@@ -535,6 +721,7 @@ class ThriftRouter:
         self.num_classes = int(num_classes)
         self.use_kernel = bool(use_kernel)
         self.jit_waves = bool(jit_waves)
+        self.failover = bool(failover)
         self.selector = ThriftLLM(
             engine.costs, eps=eps, delta=delta, seed=seed, use_kernel=use_kernel
         )
@@ -762,6 +949,10 @@ class ThriftRouter:
                         np.full((Tp, Bp), -1, np.int32),
                         np.zeros((Tp, Bp), np.float64),
                         np.full((Tp, Bp), -np.inf, np.float64),
+                        np.broadcast_to(
+                            np.arange(Tp, dtype=np.int32)[:, None], (Tp, Bp)
+                        ).copy(),
+                        np.zeros((Tp, Bp), bool),
                         np.zeros(Bp, np.float64),
                         STOP_MARGIN,
                         num_classes=self.num_classes,

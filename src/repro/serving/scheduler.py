@@ -67,9 +67,14 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.distributed.fault import StragglerMitigator
+from repro.distributed.fault import (
+    FAULT_DEGRADE,
+    FAULT_ERROR,
+    FAULT_TIMEOUT,
+    StragglerMitigator,
+)
 
-from .feedback import FeedbackLog, FeedbackReport
+from .feedback import DegradationTracker, FeedbackLog, FeedbackReport
 
 
 @dataclasses.dataclass
@@ -79,6 +84,133 @@ class Request:
     budget: float
     arrival_s: float = dataclasses.field(default_factory=time.monotonic)
     slo_s: Optional[float] = None    # target completion deadline (rel. arrival)
+    tenant: str = "default"          # cost-ledger accounting principal
+
+
+class CostLedger:
+    """Per-tenant spend accounting with hard budget enforcement.
+
+    Reservation/settlement discipline: at *admission* the scheduler
+    reserves each request's budget — the spend ceiling, since SurGreedy
+    never selects past it (``planned_costs <= budgets`` by construction,
+    and in-wave failover only ever re-routes to arms already inside the
+    selected set). At *retire* the realized charge settles (attributed per
+    arm from the effective post-failover schedule) and the reservation is
+    released. ``spent + reserved <= limit`` therefore holds at every
+    instant for every tenant — the hard-budget invariant the
+    ``tests/test_cost_ledger.py`` property suite pins — and no admitted
+    request can ever push a tenant past its limit, regardless of
+    interleaving.
+
+    Tenants materialize lazily at ``default_limit`` (infinite unless
+    configured); :meth:`set_limit` tightens or relaxes a tenant any time.
+    """
+
+    def __init__(
+        self,
+        limits: Optional[Dict[str, float]] = None,
+        default_limit: float = float("inf"),
+        num_arms: int = 0,
+    ):
+        self.default_limit = float(default_limit)
+        self.num_arms = int(num_arms)
+        self._t: Dict[str, Dict[str, Any]] = {}
+        self.admitted = 0
+        self.rejected = 0
+        self.downgraded = 0
+        for tenant, lim in (limits or {}).items():
+            self.set_limit(tenant, lim)
+
+    def _tenant(self, tenant: str) -> Dict[str, Any]:
+        ent = self._t.get(tenant)
+        if ent is None:
+            ent = self._t[tenant] = {
+                "limit": self.default_limit,
+                "reserved": 0.0,
+                "reserved_n": 0,
+                "spent": 0.0,
+                "requests": 0,
+                "rejected": 0,
+                "downgraded": 0,
+                "by_arm": np.zeros(self.num_arms, np.float64),
+            }
+        return ent
+
+    def set_limit(self, tenant: str, limit: float) -> None:
+        self._tenant(tenant)["limit"] = float(limit)
+
+    def remaining(self, tenant: str) -> float:
+        ent = self._tenant(tenant)
+        return ent["limit"] - ent["spent"] - ent["reserved"]
+
+    def try_reserve(self, tenant: str, amount: float) -> bool:
+        """Reserve ``amount`` against the tenant's remaining headroom;
+        False (nothing reserved) when it does not fit."""
+        ent = self._tenant(tenant)
+        if amount > ent["limit"] - ent["spent"] - ent["reserved"]:
+            return False
+        ent["reserved"] += float(amount)
+        ent["reserved_n"] += 1
+        self.admitted += 1
+        return True
+
+    def settle(self, tenant: str, reserved: float, charged: float,
+               arm_spend: Optional[np.ndarray] = None,
+               requests: int = 1) -> None:
+        """Release an admission reservation and commit the realized charge
+        (with its exact per-arm attribution)."""
+        ent = self._tenant(tenant)
+        ent["reserved"] -= float(reserved)
+        ent["reserved_n"] -= int(requests)
+        if ent["reserved_n"] <= 0:
+            # no reservation outstanding: snap the float residue of the
+            # add-one-by-one / release-as-a-sum asymmetry to an exact zero
+            ent["reserved"] = 0.0
+            ent["reserved_n"] = 0
+        ent["spent"] += float(charged)
+        ent["requests"] += int(requests)
+        if arm_spend is not None:
+            if ent["by_arm"].size != np.asarray(arm_spend).size:
+                ent["by_arm"] = np.zeros(np.asarray(arm_spend).size, np.float64)
+            ent["by_arm"] += arm_spend
+        self.admitted -= int(requests)
+
+    def note_rejected(self, tenant: str) -> None:
+        self._tenant(tenant)["rejected"] += 1
+        self.rejected += 1
+
+    def note_downgraded(self, tenant: str) -> None:
+        self._tenant(tenant)["downgraded"] += 1
+        self.downgraded += 1
+
+    def tenant(self, tenant: str) -> Dict[str, Any]:
+        """Snapshot of one tenant's ledger row (copies, safe to mutate)."""
+        ent = self._tenant(tenant)
+        out = dict(ent)
+        out["by_arm"] = ent["by_arm"].copy()
+        return out
+
+    def tenants(self) -> Dict[str, Dict[str, Any]]:
+        return {name: self.tenant(name) for name in self._t}
+
+    @property
+    def total_spent(self) -> float:
+        return float(sum(e["spent"] for e in self._t.values()))
+
+    @property
+    def total_reserved(self) -> float:
+        return float(sum(e["reserved"] for e in self._t.values()))
+
+    def stats(self) -> Dict[str, float]:
+        """Flat counters mirrored into ``BatchScheduler.stats``."""
+        return {
+            "ledger_tenants": len(self._t),
+            "ledger_spent": self.total_spent,
+            "ledger_reserved": self.total_reserved,
+            "ledger_requests": int(sum(e["requests"] for e in self._t.values())),
+            "ledger_rejected": self.rejected,
+            "ledger_downgraded": self.downgraded,
+        }
 
 
 @dataclasses.dataclass
@@ -203,10 +335,10 @@ class _Segment:
     """
 
     __slots__ = ("payloads", "emb", "budgets", "arrival", "slo",
-                 "sink", "pos", "ids", "requests")
+                 "sink", "pos", "ids", "requests", "tenants")
 
     def __init__(self, payloads, emb, budgets, arrival, slo, sink, pos,
-                 ids, requests=None):
+                 ids, requests=None, tenants=None):
         self.payloads = payloads      # (n, ...) array or list
         self.emb = emb                # (n, d)
         self.budgets = budgets        # (n,)
@@ -216,6 +348,9 @@ class _Segment:
         self.pos = pos                # (n,) rows of `sink` these fill
         self.ids = ids                # (n,) scheduler-assigned request ids
         self.requests = requests      # Optional[List[Request]] (submit path)
+        if tenants is None:
+            tenants = np.full(self.budgets.shape[0], "default", object)
+        self.tenants = tenants        # (n,) ledger principals
 
     def __len__(self) -> int:
         return self.budgets.shape[0]
@@ -227,6 +362,7 @@ class _Segment:
             self.arrival[:k], self.slo[:k], self.sink, self.pos[:k],
             self.ids[:k],
             self.requests[:k] if self.requests is not None else None,
+            self.tenants[:k],
         )
         self.payloads = self.payloads[k:]
         self.emb = self.emb[k:]
@@ -237,6 +373,7 @@ class _Segment:
         self.ids = self.ids[k:]
         if self.requests is not None:
             self.requests = self.requests[k:]
+        self.tenants = self.tenants[k:]
         return head
 
 
@@ -244,10 +381,10 @@ class _Group:
     """One dispatched budget group riding in flight."""
 
     __slots__ = ("pending", "arrival", "part_sinks", "part_id", "part_pos",
-                 "ids", "n", "requests")
+                 "ids", "n", "requests", "tenants", "reserved")
 
     def __init__(self, pending, arrival, part_sinks, part_id, part_pos,
-                 ids=None, requests=None):
+                 ids=None, requests=None, tenants=None, reserved=None):
         self.pending = pending        # router.PendingRoute
         self.arrival = arrival        # (n,)
         self.part_sinks = part_sinks  # list of futures contributing rows
@@ -256,6 +393,8 @@ class _Group:
         self.ids = ids                # (n,) request ids (feedback key)
         self.n = arrival.shape[0]
         self.requests = requests
+        self.tenants = tenants        # (n,) ledger principals; None = no ledger
+        self.reserved = reserved      # (n,) admission reservations to settle
 
 
 class BatchScheduler:
@@ -304,6 +443,18 @@ class BatchScheduler:
         feedback on, report ground truth via :meth:`record_outcome` /
         :meth:`record_outcomes`; pending labels fold into the estimator at
         the next admission boundary (never mid-wave).
+      ledger: per-tenant cost accounting + hard budget enforcement.
+        ``True`` builds a :class:`CostLedger` (unlimited tenants until
+        ``set_limit``); or pass a configured CostLedger. With a ledger on,
+        admission enforces tenant limits: a request whose budget does not
+        fit the tenant's remaining headroom is *downgraded* to the largest
+        affordable cheaper budget tier (``budget_tiers`` or the
+        PlanService's observed budgets), or *rejected* outright — its
+        future completes immediately with ``mode="rejected"``,
+        ``prediction=-1`` and zero cost. ``None``/``False`` (default)
+        disables all of it: zero overhead, prior behavior.
+      budget_tiers: explicit downgrade ladder for ledger admission; when
+        None the PlanService's observed budgets are used.
     """
 
     def __init__(
@@ -318,6 +469,8 @@ class BatchScheduler:
         prefetch_plans: bool = True,
         coalesce: int = 1,
         feedback=None,
+        ledger=None,
+        budget_tiers=None,
     ):
         if speculation not in ("auto", "jit", "reference"):
             raise ValueError(f"unknown speculation mode {speculation!r}")
@@ -325,6 +478,20 @@ class BatchScheduler:
         if feedback is True:
             feedback = FeedbackLog(router.estimator)
         self.feedback: Optional[FeedbackLog] = feedback or None
+        # fault evidence (timeouts/errors/degrades) folds through the same
+        # versioned estimator path as labels, so the Wilson drift gate can
+        # replan flaky arms away and probe traffic can readmit them
+        self.degradation: Optional[DegradationTracker] = (
+            DegradationTracker(self.feedback)
+            if self.feedback is not None else None
+        )
+        if ledger is True:
+            ledger = CostLedger(num_arms=len(router.engine.arms))
+        self.ledger: Optional[CostLedger] = ledger or None
+        self.budget_tiers = (
+            None if budget_tiers is None
+            else sorted(float(b) for b in budget_tiers)
+        )
         self._next_id = 0
         self.max_batch = int(max_batch)
         self.coalesce = max(1, int(coalesce))
@@ -378,6 +545,10 @@ class BatchScheduler:
             self._stats.update(plans.stats())
         if self.feedback is not None:
             self._stats.update(self.feedback.stats())
+        if self.degradation is not None:
+            self._stats.update(self.degradation.stats())
+        if self.ledger is not None:
+            self._stats.update(self.ledger.stats())
 
     # ------------------------------------------------------------------
     # Online ground-truth feedback (see serving/feedback.py)
@@ -413,7 +584,9 @@ class BatchScheduler:
         :meth:`~repro.serving.plans.PlanService.replan_stale` dispatch, so
         a drift storm never serializes cold selections across the next
         batches."""
-        if self.feedback is None or not self.feedback.pending:
+        # gate on has_pending, not the labeled count: degradation evidence
+        # (attempts with zero labels) must still trigger a fold + replan
+        if self.feedback is None or not self.feedback.has_pending:
             return None
         report = self.feedback.apply()
         if report.drifted:
@@ -476,7 +649,7 @@ class BatchScheduler:
             np.asarray([req.arrival_s], np.float64),
             np.asarray([np.nan if req.slo_s is None else req.slo_s]),
             fut, np.zeros(1, np.int64), np.asarray([rid], np.int64),
-            requests=[req],
+            requests=[req], tenants=np.asarray([req.tenant], object),
         ))
         self._qlen += 1
         self._queue_version += 1
@@ -490,10 +663,13 @@ class BatchScheduler:
         budgets,
         slo_s: Optional[float] = None,
         arrival_s=None,
+        tenant="default",
     ) -> BlockFuture:
         """Columnar block submission: ``n`` requests enter as one segment of
         arrays and resolve into one :class:`BlockFuture` — the high-rate
-        path (an arrival process delivers bursts, not single requests)."""
+        path (an arrival process delivers bursts, not single requests).
+        ``tenant`` (scalar or per-row sequence) names the cost-ledger
+        principal the block's spend is charged to."""
         emb = np.asarray(embeddings, np.float64)
         n = emb.shape[0]
         if n == 0:
@@ -508,8 +684,10 @@ class BatchScheduler:
         slo = np.full(n, np.nan if slo_s is None else float(slo_s))
         ids = self._alloc_ids(n)
         blk = BlockFuture(self, n, request_ids=ids)
+        tenants = np.broadcast_to(np.asarray(tenant, object), (n,)).copy()
         self._queue.append(_Segment(
             payloads, emb, budgets, arrival, slo, blk, np.arange(n), ids,
+            tenants=tenants,
         ))
         self._qlen += n
         self._queue_version += 1
@@ -597,7 +775,7 @@ class BatchScheduler:
         if len(take) == 1:
             s = take[0]
             return (s.payloads, s.emb, s.budgets, s.arrival, [s.sink], None,
-                    s.pos, s.ids)
+                    s.pos, s.ids, s.tenants)
         payloads = BatchScheduler._cat_payloads([s.payloads for s in take])
         emb = np.concatenate([s.emb for s in take])
         budgets = np.concatenate([s.budgets for s in take])
@@ -608,22 +786,98 @@ class BatchScheduler:
         ])
         part_pos = np.concatenate([s.pos for s in take])
         ids = np.concatenate([s.ids for s in take])
-        return payloads, emb, budgets, arrival, part_sinks, part_id, part_pos, ids
+        tenants = np.concatenate([s.tenants for s in take])
+        return (payloads, emb, budgets, arrival, part_sinks, part_id,
+                part_pos, ids, tenants)
+
+    def _downgrade_budget(self, tenant: str, budget: float) -> Optional[float]:
+        """Largest budget tier strictly cheaper than ``budget`` that still
+        fits the tenant's remaining ledger headroom; None when none does.
+        Tiers come from ``budget_tiers`` or, by default, the budgets the
+        PlanService has already planned (so a downgraded request lands on a
+        hot plan, not a cold compile)."""
+        tiers = self.budget_tiers
+        if tiers is None:
+            plans = getattr(self.router, "plans", None)
+            tiers = plans.known_budgets() if plans is not None else []
+        remaining = self.ledger.remaining(tenant)
+        best = None
+        for b in tiers:
+            if 0.0 < b < budget and b <= remaining:
+                best = b if best is None else max(best, b)
+        return best
+
+    def _admit_ledger(self, budgets, tenants, arrival, part_sinks, part_id,
+                      part_pos):
+        """Hard budget enforcement at the admission boundary.
+
+        Sequentially (arrival order — admission must not depend on how rows
+        later split into budget groups) reserves each request's budget
+        against its tenant; on a miss, tries a downgrade to the largest
+        affordable cheaper tier; otherwise rejects. Rejected rows complete
+        immediately (``mode="rejected"``, prediction -1, zero cost) and are
+        dropped from the batch. Returns ``(keep_rows, budgets, reserved)``
+        with ``budgets`` a (possibly downgraded) copy."""
+        n = budgets.shape[0]
+        budgets = budgets.copy()   # single-segment stacking is zero-copy
+        reserved = np.zeros(n, np.float64)
+        keep = np.ones(n, bool)
+        led = self.ledger
+        for i in range(n):
+            tenant = tenants[i]
+            amount = float(budgets[i])
+            if led.try_reserve(tenant, amount):
+                reserved[i] = amount
+                continue
+            down = self._downgrade_budget(tenant, amount)
+            if down is not None and led.try_reserve(tenant, down):
+                budgets[i] = reserved[i] = down
+                led.note_downgraded(tenant)
+                continue
+            keep[i] = False
+            led.note_rejected(tenant)
+        rejected = np.flatnonzero(~keep)
+        if rejected.size:
+            k = rejected.shape[0]
+            shell = _Group(None, arrival, part_sinks, part_id, part_pos)
+            self._resolve_rows(
+                shell, rejected,
+                np.full(k, -1, np.int64), np.zeros(k), np.zeros(k),
+                np.full(k, -1, np.int64), budgets[rejected],
+                np.zeros(k, np.int64), "rejected", time.monotonic(),
+            )
+        return np.flatnonzero(keep), budgets, reserved
 
     def _dispatch_batch(self):
         """Admit one batch and dispatch its budget groups into flight.
 
         Pending ground-truth feedback folds into the estimator *here* — the
         admission boundary — so every query of the batch routes against one
-        consistent estimator version and a fold can never land mid-wave."""
+        consistent estimator version and a fold can never land mid-wave.
+        With a cost ledger bound, this is also where tenant limits are
+        enforced (reserve / downgrade / reject)."""
         self.apply_feedback()
         take = self._take_batch()
         if not take:
             return
-        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos, ids = (
-            self._stack_segments(take)
-        )
+        (payloads, emb, budgets, arrival, part_sinks, part_id, part_pos,
+         ids, tenants) = self._stack_segments(take)
         self._stats["flushes"] += 1
+        reserved = None
+        if self.ledger is not None:
+            admitted, budgets, reserved = self._admit_ledger(
+                budgets, tenants, arrival, part_sinks, part_id, part_pos,
+            )
+            if admitted.size < budgets.shape[0]:
+                if admitted.size == 0:
+                    return
+                payloads = self._index_payloads(payloads, admitted)
+                emb, budgets = emb[admitted], budgets[admitted]
+                arrival, part_pos = arrival[admitted], part_pos[admitted]
+                ids, tenants = ids[admitted], tenants[admitted]
+                reserved = reserved[admitted]
+                if part_id is not None:
+                    part_id = part_id[admitted]
         self._stats["requests"] += budgets.shape[0]
         mode = self._route_mode()
         if (budgets == budgets[0]).all():
@@ -638,11 +892,15 @@ class BatchScheduler:
             if rows is None:
                 g_payloads, g_emb, g_budgets = payloads, emb, budgets
                 g_arrival, g_id, g_pos, g_ids = arrival, part_id, part_pos, ids
+                g_tenants = tenants if self.ledger is not None else None
+                g_reserved = reserved
             else:
                 g_payloads = self._index_payloads(payloads, rows)
                 g_emb, g_budgets = emb[rows], budgets[rows]
                 g_arrival, g_pos, g_ids = arrival[rows], part_pos[rows], ids[rows]
                 g_id = part_id[rows] if part_id is not None else None
+                g_tenants = tenants[rows] if self.ledger is not None else None
+                g_reserved = reserved[rows] if reserved is not None else None
             pending = self.router.begin_route(
                 g_payloads, g_emb, g_budgets, mode=mode,
                 speculation_threshold=self.speculation_threshold,
@@ -650,7 +908,8 @@ class BatchScheduler:
             self._stats["spec_" + pending.kind] += 1
             self._stats["batches"] += 1
             self._inflight.append(
-                _Group(pending, g_arrival, part_sinks, g_id, g_pos, ids=g_ids)
+                _Group(pending, g_arrival, part_sinks, g_id, g_pos,
+                       ids=g_ids, tenants=g_tenants, reserved=g_reserved)
             )
         self._stats["inflight_peak"] = max(
             self._stats["inflight_peak"], len(self._inflight)
@@ -741,16 +1000,64 @@ class BatchScheduler:
                     arms = fb.probe_arms(res.clusters[rows], res.schedule[rows])
                     ok = arms >= 0
                     rows, arms = rows[ok], arms[ok]
+                degrade = None
+                policy = getattr(self.router.engine, "fault_policy", None)
+                if rows.size and policy is not None and policy.active:
+                    # probes hit the same faulty arms: draw their fate
+                    # *before* invoking, drop failed probes (recording the
+                    # failure as degradation evidence), corrupt degraded ones
+                    codes = policy.row_codes(arms, rows)
+                    failed = (codes == FAULT_TIMEOUT) | (codes == FAULT_ERROR)
+                    if failed.any():
+                        if self.degradation is not None:
+                            self.degradation.record_failures(
+                                res.clusters[rows[failed]], arms[failed]
+                            )
+                        rows, arms = rows[~failed], arms[~failed]
+                        codes = codes[~failed]
+                    degrade = codes == FAULT_DEGRADE if rows.size else None
                 if rows.size:
                     resp = self.router.engine.invoke_rows(
                         arms, group.pending.payloads, rows
                     )
+                    if degrade is not None and degrade.any():
+                        resp = np.where(
+                            degrade, policy.corrupt_rows(arms, rows), resp
+                        )
                     probes = (rows, arms, resp)
             fb.observe(
                 group.ids, res.clusters, res.schedule, res.responses,
                 res.invoked, probes=probes,
             )
+            if (self.degradation is not None
+                    and getattr(res, "fault_codes", None) is not None):
+                self.degradation.record_route(
+                    res.clusters, res.fault_schedule, res.fault_codes
+                )
+        if (self.ledger is not None and group is not None
+                and group.tenants is not None):
+            self._settle(res, group)
         self._sync_plan_stats()
+
+    def _settle(self, res, group: _Group):
+        """Retire-time ledger settlement: release each tenant's admission
+        reservations, commit the realized charge with its exact per-arm
+        attribution (the effective post-failover schedule — re-routed waves
+        charge the arm actually invoked)."""
+        costs = self.router.engine.costs
+        tenants = group.tenants
+        for tenant in set(tenants.tolist()):
+            sel = tenants == tenant
+            rows = np.flatnonzero(sel)
+            arms = res.schedule[rows][res.invoked[rows]]
+            arm_spend = np.bincount(arms, minlength=costs.size) * costs
+            self.ledger.settle(
+                tenant,
+                reserved=float(group.reserved[sel].sum()),
+                charged=float(res.costs[sel].sum()),
+                arm_spend=arm_spend,
+                requests=int(rows.size),
+            )
 
     # ------------------------------------------------------------------
     # Driving
@@ -783,7 +1090,8 @@ class BatchScheduler:
         while self._queue or self._inflight:
             while self._queue and len(self._inflight) < self.max_inflight:
                 self._dispatch_batch()
-            done += self._retire(self._inflight.popleft())
+            if self._inflight:   # a fully-rejected admission leaves nothing
+                done += self._retire(self._inflight.popleft())
         return done
 
     def _force(self, fut) -> None:
@@ -836,9 +1144,24 @@ class BatchScheduler:
         take = self._take_batch(coalesce=False)
         if not take:
             return []
-        payloads, emb, budgets, arrival, part_sinks, part_id, part_pos, ids = (
-            self._stack_segments(take)
-        )
+        (payloads, emb, budgets, arrival, part_sinks, part_id, part_pos,
+         ids, tenants) = self._stack_segments(take)
+        self._stats["flushes"] += 1
+        reserved = None
+        if self.ledger is not None:
+            admitted, budgets, reserved = self._admit_ledger(
+                budgets, tenants, arrival, part_sinks, part_id, part_pos,
+            )
+            if admitted.size < budgets.shape[0]:
+                if admitted.size == 0:
+                    return []
+                payloads = self._index_payloads(payloads, admitted)
+                emb, budgets = emb[admitted], budgets[admitted]
+                arrival, part_pos = arrival[admitted], part_pos[admitted]
+                ids, tenants = ids[admitted], tenants[admitted]
+                reserved = reserved[admitted]
+                if part_id is not None:
+                    part_id = part_id[admitted]
         pending = self.router.begin_route(
             payloads, emb, budgets, mode=self._route_mode(),
             speculation_threshold=self.speculation_threshold,
@@ -846,9 +1169,12 @@ class BatchScheduler:
         res = pending.result()
         self._stats["spec_" + pending.kind] += 1
         self._stats["batches"] += len(np.unique(budgets))
-        self._stats["flushes"] += 1
         self._stats["requests"] += budgets.shape[0]
-        group = _Group(pending, arrival, part_sinks, part_id, part_pos, ids=ids)
+        group = _Group(
+            pending, arrival, part_sinks, part_id, part_pos, ids=ids,
+            tenants=tenants if self.ledger is not None else None,
+            reserved=reserved,
+        )
         self._resolve_rows(
             group, np.arange(group.n), res.predictions, res.costs,
             res.planned_costs, res.clusters, res.budgets, res.stop_waves,
@@ -864,4 +1190,6 @@ class BatchScheduler:
                     Request(p, e, float(b), arrival_s=float(a))
                     for p, e, b, a in zip(s.payloads, s.emb, s.budgets, s.arrival)
                 )
+        if self.ledger is not None and len(requests) != budgets.shape[0]:
+            requests = [requests[i] for i in admitted]   # drop rejected rows
         return [(requests, res)]

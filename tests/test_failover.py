@@ -1,0 +1,377 @@
+"""Arm-level fault injection, in-wave failover, and degradation tracking.
+
+The failure plane's contracts, proven by fault matrix:
+
+  * under every injected fault schedule (timeout / error / silent degrade /
+    mixed, with failover on or frozen), the jitted wave program and the
+    compacting host reference produce bit-identical routes, responses,
+    costs and fault evidence — injection is drawn once host-side
+    (counter-based hashing keyed on the *original* plan cell), so both
+    planes consume the same grid and the jit-vs-reference equivalence pin
+    extends to faulted runs;
+  * the zero-fault path is bit-identical to a policy-free router — an
+    attached-but-inactive FaultPolicy adds nothing, and flipping fault
+    schedules between batches causes zero wave-program recompiles (the
+    failover gather rides the compiled program as data, never as a static
+    shape);
+  * a fully-failed plan degrades gracefully: no crash, zero spend, an
+    abstain-style prediction from the empty belief, failures counted;
+  * failure evidence folds into the online estimator (zero-success
+    attempts), the Wilson drift gate replans exactly the clusters that
+    observed the failures, and probe traffic readmits a recovered arm.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.clustering import kmeans
+from repro.core.estimation import SuccessProbEstimator
+from repro.data import OracleWorkload
+from repro.distributed.fault import (
+    FAULT_DEGRADE,
+    FAULT_ERROR,
+    FAULT_TIMEOUT,
+    ArmFaultSpec,
+    FaultPolicy,
+    failover_gather,
+)
+from repro.serving import BatchScheduler, OracleArm, PoolEngine, ThriftRouter
+
+
+@dataclasses.dataclass
+class TabularArm:
+    """Deterministic arm: response to query j is the precomputed resp[j]."""
+
+    name: str
+    cost: float
+    resp: np.ndarray
+
+    def classify_batch(self, queries) -> np.ndarray:
+        return self.resp[np.asarray(queries, np.int64)]
+
+    def latency_s(self, batch: int) -> float:
+        return 1e-6 * self.cost * batch
+
+
+def _tabular_pool(K=4, L=8, clusters=5, B=96, seed=3, failover=True):
+    wl = OracleWorkload(num_classes=K, num_clusters=clusters, num_arms=L, seed=seed)
+    T, emb, _ = wl.response_table(60 * clusters, seed=seed + 1)
+    assign, _ = kmeans(emb, clusters, seed=0)
+    est = SuccessProbEstimator(T, emb, assign)
+    rng = np.random.default_rng(seed + 2)
+    qcid, qemb, qlab = wl.sample_queries(B, rng)
+    R = np.stack(
+        [
+            wl.invoke_batch(a, qcid, qlab, np.random.default_rng(seed + 100 + a))
+            for a in range(L)
+        ]
+    )
+    engine = PoolEngine(
+        [TabularArm(f"t{a}", float(wl.costs[a]), R[a]) for a in range(L)]
+    )
+    router = ThriftRouter(engine, est, num_classes=K, failover=failover)
+    return est, engine, router, qemb, qlab
+
+
+def _budget(engine):
+    return float(np.quantile(engine.costs, 0.8) * 3)
+
+
+def _early_arm(router, qemb, budget):
+    """The arm most batches invoke at wave 0 — faulting it guarantees the
+    injected failures are actually *attempted* (an arm past every row's
+    Prop. 4 stop produces no fault evidence, correctly)."""
+    res = router.route_batch(np.arange(qemb.shape[0]), qemb, budget)
+    first = res.schedule[:, 0]
+    return int(np.bincount(first[first >= 0]).argmax())
+
+
+def _assert_planes_equal(tag, rj, rr):
+    for f in ("predictions", "schedule", "responses", "invoked",
+              "arm_query_counts", "stop_waves", "clusters"):
+        np.testing.assert_array_equal(
+            getattr(rj, f), getattr(rr, f), err_msg=f"{tag}:{f}"
+        )
+    np.testing.assert_allclose(
+        rj.costs, rr.costs, rtol=1e-15, atol=0, err_msg=f"{tag}:costs"
+    )
+    assert rj.waves == rr.waves, (tag, rj.waves, rr.waves)
+    if rj.fault_codes is not None or rr.fault_codes is not None:
+        for f in ("fault_schedule", "fault_codes", "arm_fault_counts"):
+            np.testing.assert_array_equal(
+                getattr(rj, f), getattr(rr, f), err_msg=f"{tag}:{f}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Fault matrix: each kind x {failover, frozen} x {jit, reference}
+# ---------------------------------------------------------------------------
+
+FAULT_MATRIX = [
+    ("timeout", {0: dict(timeout=0.5)}),
+    ("error", {0: dict(error=0.7), 1: dict(error=0.3)}),
+    ("degrade", {0: dict(degrade=0.6)}),
+    ("mixed", {0: dict(timeout=0.3, degrade=0.2), 1: dict(error=0.4),
+               2: dict(timeout=0.2, error=0.2)}),
+]
+
+
+@pytest.mark.parametrize("failover", [True, False], ids=["failover", "frozen"])
+@pytest.mark.parametrize("kind,rates", FAULT_MATRIX)
+def test_jit_matches_reference_under_faults(kind, rates, failover):
+    """Bit-equivalence of the two data planes under every fault schedule.
+    Rates are keyed by *plan position* (0 = most-invoked wave-0 arm), so
+    the faults land on arms the wavefront actually attempts."""
+    est, engine, router, qemb, qlab = _tabular_pool(failover=failover)
+    budget = _budget(engine)
+    order = np.argsort(-np.bincount(
+        router.route_batch(np.arange(96), qemb, budget).schedule[:, 0].clip(0),
+        minlength=len(engine.arms),
+    ))
+    policy = FaultPolicy(len(engine.arms), 4, seed=7)
+    for pos, kw in rates.items():
+        policy.set_arm(int(order[pos]), **kw)
+    engine.fault_policy = policy
+
+    rj = router.route_batch(np.arange(96), qemb, budget)
+    rr = router.route_batch_reference(np.arange(96), qemb, budget)
+    _assert_planes_equal(f"{kind}/{failover}", rj, rr)
+    assert rj.fault_codes is not None
+    if kind != "degrade":
+        # the injected failures really were attempted and attributed
+        assert rj.arm_fault_counts.sum() > 0
+        hit = np.flatnonzero(rj.arm_fault_counts)
+        injected = {int(order[p]) for p in rates}
+        assert set(hit.tolist()) <= injected
+    if failover:
+        # failover never invokes a failed cell: every invoked response is a
+        # real class and spend only covers arms that answered
+        assert (rj.responses[rj.invoked] >= 0).all()
+
+
+def test_heterogeneous_budgets_under_faults():
+    """The fault grid + failover gather respect per-row budget groups."""
+    est, engine, router, qemb, qlab = _tabular_pool()
+    rng = np.random.default_rng(11)
+    budgets = rng.choice(np.quantile(engine.costs, [0.4, 0.8]) * 2.5, size=96)
+    hot = _early_arm(router, qemb, float(budgets.max()))
+    policy = FaultPolicy(len(engine.arms), 4, seed=13)
+    policy.set_arm(hot, timeout=0.4, degrade=0.1)
+    engine.fault_policy = policy
+    rj = router.route_batch(np.arange(96), qemb, budgets)
+    rr = router.route_batch_reference(np.arange(96), qemb, budgets)
+    _assert_planes_equal("hetero", rj, rr)
+
+
+# ---------------------------------------------------------------------------
+# Zero-fault path: bit-identical to the policy-free router
+# ---------------------------------------------------------------------------
+
+
+def test_zero_fault_bit_identical_to_policy_free():
+    """An attached FaultPolicy with all-zero rates changes nothing, on
+    either plane: same predictions, responses, schedules and exact costs
+    as a router that never heard of fault injection."""
+    est_a, engine_a, router_a, qemb, _ = _tabular_pool()
+    est_b, engine_b, router_b, _, _ = _tabular_pool()
+    engine_b.fault_policy = FaultPolicy(len(engine_b.arms), 4, seed=7)
+    budget = _budget(engine_a)
+    base_j = router_a.route_batch(np.arange(96), qemb, budget)
+    base_r = router_a.route_batch_reference(np.arange(96), qemb, budget)
+    z_j = router_b.route_batch(np.arange(96), qemb, budget)
+    z_r = router_b.route_batch_reference(np.arange(96), qemb, budget)
+    for base, z in ((base_j, z_j), (base_r, z_r)):
+        np.testing.assert_array_equal(z.predictions, base.predictions)
+        np.testing.assert_array_equal(z.schedule, base.schedule)
+        np.testing.assert_array_equal(z.responses, base.responses)
+        np.testing.assert_array_equal(z.invoked, base.invoked)
+        np.testing.assert_allclose(z.costs, base.costs, rtol=0, atol=0)
+        assert z.fault_codes is None and z.arm_fault_counts is None
+
+
+def test_fault_flips_cause_zero_recompiles():
+    """Compile-budget guard: the failover gather enters the wave program as
+    data (src/valid arrays), never as a static argument — so flipping
+    which arms fault, or turning injection off entirely, between batches
+    of the same bucket shape is always an XLA cache hit."""
+    from repro.analysis import CompileSentinel, compile_cache_size
+    from repro.serving import router as router_mod
+
+    est, engine, router, qemb, _ = _tabular_pool()
+    budget = _budget(engine)
+    hot = _early_arm(router, qemb, budget)
+    sentinel = CompileSentinel({"wave": router_mod._wave_scan})
+    router.route_batch(np.arange(96), qemb, budget)      # warm the bucket
+    assert compile_cache_size(router_mod._wave_scan) >= 1
+    sentinel.snapshot()
+    policy = FaultPolicy(len(engine.arms), 4, seed=7)
+    engine.fault_policy = policy
+    schedules = [
+        dict(timeout=0.5), dict(error=0.9), dict(degrade=0.7),
+        dict(timeout=0.2, error=0.2, degrade=0.2),
+    ]
+    for kw in schedules:
+        policy.clear()
+        policy.set_arm(hot, **kw)
+        policy.advance()                                  # new fault epoch
+        router.route_batch(np.arange(96), qemb, budget)
+    engine.fault_policy = None                            # and back off
+    router.route_batch(np.arange(96), qemb, budget)
+    sentinel.assert_no_new_compiles(
+        detail="fault schedule flips within one (B, T) bucket"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Total outage: graceful degradation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("failover", [True, False], ids=["failover", "frozen"])
+def test_fully_failed_plan_degrades_gracefully(failover):
+    """Every arm down: no crash, nothing invoked, nothing charged, an
+    abstain/fallback prediction from the empty belief, failures counted."""
+    est, engine, router, qemb, qlab = _tabular_pool(failover=failover)
+    policy = FaultPolicy(len(engine.arms), 4, seed=7)
+    policy.set_arms(range(len(engine.arms)), error=1.0)
+    engine.fault_policy = policy
+    budget = _budget(engine)
+    rj = router.route_batch(np.arange(96), qemb, budget)
+    rr = router.route_batch_reference(np.arange(96), qemb, budget)
+    _assert_planes_equal("all-dead", rj, rr)
+    assert (rj.costs == 0).all()
+    assert not rj.invoked.any()
+    assert (rj.predictions >= 0).all() and (rj.predictions < 4).all()
+    assert rj.arm_fault_counts.sum() > 0
+    assert rj.waves == 0
+
+    # the scheduler path survives it too, and the stats see the failures
+    sched = BatchScheduler(router, max_batch=32, feedback=True)
+    blk = sched.submit_many(np.arange(96), qemb, budget)
+    sched.drain()
+    assert blk.done()
+    assert (blk.costs == 0).all()
+    assert sched.stats["degradation_failures"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Degradation -> drift replan -> probe readmission
+# ---------------------------------------------------------------------------
+
+
+def _oracle_pool(K=4, C=4, L=12, hist=120, seed=3, arm_seed=11, est_seed=4):
+    wl = OracleWorkload(num_classes=K, num_clusters=C, num_arms=L, seed=seed)
+    T, emb, cid_h = wl.response_table(hist * C, seed=est_seed)
+    est = SuccessProbEstimator(T, emb, cid_h)
+    engine = PoolEngine(
+        [OracleArm(f"a{i}", wl, i, seed=arm_seed) for i in range(L)]
+    )
+    router = ThriftRouter(engine, est, num_classes=K)
+    return wl, est, engine, router
+
+
+def test_failures_drift_replan_only_observing_clusters_then_readmit():
+    """A persistently erroring arm is replanned away by the existing Wilson
+    drift gate — purely from failure evidence, no ground-truth label ever
+    arrives — for exactly the clusters that observed the failures; after
+    recovery, probe traffic readmits it."""
+    wl, est, engine, router = _oracle_pool()
+    budget = float(np.quantile(engine.costs, 0.5)) * 2
+    sched = BatchScheduler(router, max_batch=256, max_wait_s=0.0, feedback=True)
+    rng = np.random.default_rng(5)
+
+    cid, qemb, lab = wl.sample_queries(256, rng)
+    res0 = router.route_batch(np.column_stack([cid, lab]), qemb, budget)
+    first = res0.schedule[:, 0]
+    hot = int(np.bincount(first[first >= 0]).argmax())
+    # clusters whose plan leads with the failing arm = the observers
+    observers = sorted(set(res0.clusters[first == hot].tolist()))
+    others = [c for c in est.clusters if c not in observers]
+    plans_before = {
+        c: router.plans.plan(int(c), budget).order.copy() for c in est.clusters
+    }
+    p_before = {c: float(est.clusters[c].p_hat[hot]) for c in est.clusters}
+
+    policy = FaultPolicy(len(engine.arms), 4, seed=9)
+    policy.set_arm(hot, error=0.95)
+    engine.fault_policy = policy
+    for _ in range(3):
+        cid, qemb, lab = wl.sample_queries(256, rng)
+        sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+        sched.drain()
+        policy.advance()
+    sched.apply_feedback()    # fold any evidence still pending
+
+    st = sched.stats
+    assert st["degradation_failures"] > 0
+    assert st["feedback_drifts"] >= 1
+    # only clusters that observed failures went plan-visible...
+    drifted = [int(c) for c in est.clusters if est.clusters[c].version > 0]
+    assert drifted and set(drifted) <= set(int(c) for c in observers)
+    assert all(est.clusters[c].version == 0 for c in others)
+    # ...and their fresh plans demote the failing arm off the wavefront
+    # head (its collapsed estimate may keep it as a late fallback), while
+    # the non-observing clusters' plans stayed hot and unchanged
+    for c in drifted:
+        assert router.plans.plan(c, budget).order[0] != hot
+        assert est.clusters[c].p_hat[hot] < p_before[c] - 0.2
+    for c in others:
+        np.testing.assert_array_equal(
+            router.plans.plan(int(c), budget).order, plans_before[c]
+        )
+
+    # --- recovery: arm healthy again, probes feed it labeled successes ----
+    engine.fault_policy = None
+    sched.feedback.probe_rate = 1.0
+    p_collapsed = {c: est.clusters[c].p_hat[hot] for c in drifted}
+    for _ in range(6):
+        cid, qemb, lab = wl.sample_queries(256, rng)
+        blk = sched.submit_many(np.column_stack([cid, lab]), qemb, budget)
+        sched.drain()
+        sched.record_outcomes(blk.request_ids, lab)
+    sched.apply_feedback()
+    assert any(
+        est.clusters[c].p_hat[hot] > p_collapsed[c] + 0.05 for c in drifted
+    ), "probe traffic never re-raised the recovered arm's estimate"
+
+
+def test_failover_gather_invariants():
+    """Host-side gather: compaction is stable, skips exactly the failed
+    cells, and is the identity when nothing failed."""
+    rng = np.random.default_rng(0)
+    # plan schedules are prefix-contiguous per column (arms then -1 padding)
+    depth = rng.integers(1, 7, size=9)
+    sched_T = np.where(np.arange(6)[:, None] < depth[None, :],
+                       rng.integers(0, 5, (6, 9)), -1).astype(np.int64)
+    failed = (rng.random((6, 9)) < 0.3) & (sched_T >= 0)
+    src, valid, rank, navail = failover_gather(sched_T, failed)
+    eff = np.where(valid, sched_T[src, np.arange(9)[None, :]], -1)
+    for b in range(9):
+        col = sched_T[:, b]
+        want = col[(col >= 0) & ~failed[:, b]]
+        got = eff[:, b][eff[:, b] >= 0]
+        np.testing.assert_array_equal(got, want)   # order preserved
+        assert navail[b] == want.size
+    none = np.zeros_like(failed)
+    src0, valid0, _, _ = failover_gather(sched_T, none)
+    np.testing.assert_array_equal(
+        np.where(valid0, sched_T[src0, np.arange(9)[None, :]], -1), sched_T
+    )
+
+
+def test_fault_policy_determinism_and_spec():
+    """Same (seed, epoch, cell) -> same draw; advance() moves the epoch."""
+    p1 = FaultPolicy(4, 3, seed=5)
+    p2 = FaultPolicy(4, 3, seed=5)
+    for p in (p1, p2):
+        p.set_arm(2, timeout=0.3, degrade=0.2)
+    sched_T = np.full((4, 16), 2, np.int64)
+    np.testing.assert_array_equal(p1.grid_codes(sched_T), p2.grid_codes(sched_T))
+    np.testing.assert_array_equal(p1.corrupt_grid(sched_T), p2.corrupt_grid(sched_T))
+    before = p1.grid_codes(sched_T)
+    p1.advance()
+    assert not np.array_equal(p1.grid_codes(sched_T), before)
+    assert p1.spec(2) == ArmFaultSpec(timeout=0.3, degrade=0.2)
+    with pytest.raises(ValueError):
+        ArmFaultSpec(timeout=0.9, error=0.2)   # rates sum > 1
