@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # CI: hygiene guards, the thriftlint static-analysis gate (zero findings,
-# every suppression reasoned), router/serving correctness, a no-skip gate
-# on the property suites (hypothesis or the in-repo fallback engine — they
-# must RUN; the cost-ledger suite gates here too), a serving-throughput
+# every suppression reasoned), router/serving/replica correctness, a
+# no-skip gate on the property suites (hypothesis or the in-repo fallback
+# engine — they must RUN; the cost-ledger and replica shard-merge suites
+# gate here too), a serving-throughput
 # smoke (one-shot engines + the steady-state continuous-batching path +
 # the online feedback-vs-drift section + the fault-tolerance section +
-# the compile-sentinel budget) with JSON well-formedness and
+# the replica-scaling sweep + the compile-sentinel budget) with JSON
+# well-formedness and
 # history-preservation assertions, a docs link check, then the FULL tier-1
 # suite — tracer-leak-guarded via tests/conftest.py — with zero tolerated
 # failures; there is no allowlist of known-bad tests.
@@ -30,14 +32,16 @@ echo "thriftlint OK (zero findings)"
 python -m pytest -x -q tests/test_router_batched.py tests/test_serving.py \
     tests/test_scheduler_continuous.py tests/test_plans.py \
     tests/test_core_selection.py tests/test_feedback.py \
-    tests/test_selection_batched.py tests/test_failover.py
+    tests/test_selection_batched.py tests/test_failover.py \
+    tests/test_replica.py
 
 # property suites must RUN — on the real hypothesis engine when installed,
 # on the in-repo tests/_hypolite.py fallback otherwise. A skip here means
 # the importorskip hole is back; fail loudly instead of masking it. (This
 # is their one gated run; the fast batch above deliberately omits them.)
 PROP_OUT=$(python -m pytest -q -rs tests/test_properties.py \
-    tests/test_estimation_properties.py tests/test_cost_ledger.py 2>&1) || {
+    tests/test_estimation_properties.py tests/test_cost_ledger.py \
+    tests/test_replica_merge.py 2>&1) || {
     echo "$PROP_OUT"; exit 1; }
 echo "$PROP_OUT" | tail -1
 if echo "$PROP_OUT" | grep -qiE "skipped"; then
@@ -133,6 +137,33 @@ assert ft["replan_acc"] >= ft["frozen_acc"], "replanning lost to frozen plans"
 for name, p99 in ft["p99_ms"].items():
     assert p99 > 0, f"fault_tolerance p99 malformed for {name}"
 
+# the R-replica scaling section: present, well-formed, the R=1 row
+# bit-matched against the plain BatchScheduler steady path, fusion really
+# fired at R > 1, and zero recompiles inside the timed sweep (the >= 2x
+# aggregate-qps acceptance bar at R=4 lives in the committed full-size
+# report; a wall-clock assert at smoke scale would make CI flaky)
+rs = report["replica_scaling"]
+for key in ("per_replica_batch", "queries", "rows", "r1_bitmatch_steady",
+            "speedup_at_max", "replicas_max", "timed_recompiles"):
+    assert key in rs, f"replica_scaling missing {key}"
+assert rs["rows"], "replica_scaling has no rows"
+for row in rs["rows"]:
+    for key in ("replicas", "per_replica_batch", "qps", "p50_ms", "p99_ms",
+                "speedup_vs_r1", "fused_dispatches", "fused_rows", "spills",
+                "accuracy"):
+        assert key in row, f"replica_scaling row missing {key}"
+    assert row["qps"] > 0 and row["p99_ms"] > 0, "bad replica_scaling row"
+assert rs["rows"][0]["replicas"] == 1, "replica_scaling must anchor at R=1"
+assert rs["rows"][0]["fused_dispatches"] == 0, \
+    "R=1 must never fuse (bit-identity contract with the steady path)"
+assert any(r["replicas"] > 1 and r["fused_dispatches"] > 0
+           for r in rs["rows"]), "fusion never fired at R > 1"
+assert rs["replicas_max"] >= 4, "sweep did not reach R=4"
+assert rs["r1_bitmatch_steady"], "ReplicaSet R=1 diverged from BatchScheduler"
+assert rs["timed_recompiles"] == 0, \
+    f"recompiles inside the replica sweep: {rs['timed_recompiles']}"
+assert rs["speedup_at_max"] > 0, "replica scaling timing is malformed"
+
 # the compile-sentinel budget: every XLA compile of the wave/planner
 # programs must land in a per-bucket warm-up (zero in timed sections) and
 # total program counts must stay within the declared bucket budgets
@@ -160,6 +191,8 @@ print("serving smoke OK:", [(r["batch"], round(r["qps"])) for r in report["rows"
       f"| feedback recovery {fb['recovery']:.2f} (frozen {fb['frozen_vs_oracle']:.2f})",
       f"| fault recovery {ft['replan_recovery']:.2f} (frozen {ft['frozen_recovery']:.2f})",
       f"| batched replan {sel['speedup_at_max']:.2f}x at G={sel['groups_max']}",
+      f"| replicas {rs['speedup_at_max']:.2f}x at R={rs['replicas_max']}"
+      f" (R=1 bitmatch {rs['r1_bitmatch_steady']})",
       f"| compiles wave {cs['wave_compiles']}/{cs['wave_bucket_budget']}"
       f" plan {cs['plan_compiles']}/{cs['plan_bucket_budget']}, timed 0")
 PY

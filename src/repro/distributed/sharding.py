@@ -247,3 +247,37 @@ def constrain_params(tree: Any) -> Any:
     return jax.tree.map(
         jax.lax.with_sharding_constraint, tree, param_specs(tree, r)
     )
+
+
+# ---------------------------------------------------------------------------
+# Replica-plane device placement (see repro/serving/replica.py)
+# ---------------------------------------------------------------------------
+
+
+def replica_devices(replicas: int) -> list:
+    """Device assignment for an R-replica serving plane.
+
+    With more than one local device, replicas round-robin over the device
+    list (each :class:`~repro.serving.replica.ReplicaWorker` pins its wave
+    dispatches with ``jax.default_device``); on a single device the
+    assignment is ``None`` everywhere — placement is a no-op and the
+    ReplicaSet instead *fuses* same-budget replica waves along the batch
+    axis, the single-device degenerate of sharding the wave program's
+    (T, B) tables over a batch-axis device slice.
+    """
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return [None] * int(replicas)
+    return [devs[i % len(devs)] for i in range(int(replicas))]
+
+
+def replica_mesh(replicas: int) -> Optional[Mesh]:
+    """1-axis ``("replica",)`` mesh over ``min(replicas, local devices)``
+    devices — the binding a ``jax.shard_map`` lowering of the fused wave
+    dispatch would shard the batch axis over. None on a single device
+    (nothing to shard; the fused batch-axis dispatch covers it)."""
+    devs = jax.devices()
+    n = min(int(replicas), len(devs))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), axis_names=("replica",))

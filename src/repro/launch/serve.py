@@ -46,6 +46,7 @@ from repro.serving import (
     FeedbackLog,
     OracleArm,
     PoolEngine,
+    ReplicaSet,
     ThriftRouter,
 )
 
@@ -60,6 +61,10 @@ def main() -> None:
     ap.add_argument("--history", type=int, default=2000)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through an R-replica ReplicaSet (sharded "
+                         "admission, fused same-budget waves, shard-merged "
+                         "feedback); 1 = the plain BatchScheduler path")
     ap.add_argument("--qps", type=float, default=0.0,
                     help="Poisson arrival rate; 0 = open the floodgates")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -111,10 +116,18 @@ def main() -> None:
     feedback = (
         FeedbackLog(est, probe_rate=args.probe_rate) if online else None
     )
-    sched = BatchScheduler(
-        router, max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
-        feedback=feedback,
-    )
+    if args.replicas > 1:
+        sched = ReplicaSet(
+            router, replicas=args.replicas, max_batch=args.max_batch,
+            max_wait_s=args.max_wait_ms / 1e3, feedback=feedback,
+        )
+        stragglers = sched.stragglers
+    else:
+        sched = BatchScheduler(
+            router, max_batch=args.max_batch,
+            max_wait_s=args.max_wait_ms / 1e3, feedback=feedback,
+        )
+        stragglers = sched.mitigator.stragglers
     sched.prewarm(budgets=[args.budget])
 
     rng = np.random.default_rng(1)
@@ -205,8 +218,14 @@ def main() -> None:
         f"flushes {st['flushes']} groups {st['batches']} | "
         f"plan hit/miss {st['plan_hits']}/{st['plan_misses']} "
         f"(prefetched {st['plan_prefetches']}) | "
-        f"stragglers={sched.mitigator.stragglers()}"
+        f"stragglers={stragglers()}"
     )
+    if args.replicas > 1:
+        print(
+            f"replica plane: R={st['replicas']} fused dispatches "
+            f"{st['replica_fused']} ({st['replica_fused_rows']} rows) | "
+            f"affinity spills {st['replica_spills']}"
+        )
     if args.fault_rate > 0:
         print(
             f"fault plane: rate {args.fault_rate:.2f} on "

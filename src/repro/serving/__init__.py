@@ -3,8 +3,15 @@ online estimation feedback, fault injection + degradation tracking."""
 from repro.distributed.fault import ArmFaultSpec, FaultPolicy
 
 from .engine import LMArm, OracleArm, PoolEngine, USD_PER_FLOP
-from .feedback import DegradationTracker, FeedbackLog, FeedbackReport
+from .feedback import (
+    DegradationTracker,
+    FeedbackLog,
+    FeedbackReport,
+    FeedbackShard,
+    merge_counts,
+)
 from .plans import GroupPlan, PlanService
+from .replica import ReplicaSet, ReplicaWorker
 from .router import PendingRoute, RouteResult, ThriftRouter
 from .scheduler import (
     BatchScheduler,
@@ -18,9 +25,11 @@ from .scheduler import (
 __all__ = [
     "LMArm", "OracleArm", "PoolEngine", "USD_PER_FLOP",
     "FeedbackLog", "FeedbackReport", "DegradationTracker",
+    "FeedbackShard", "merge_counts",
     "GroupPlan", "PlanService",
     "ThriftRouter", "RouteResult", "PendingRoute",
     "BatchScheduler", "Request", "RequestFuture", "RequestResult",
     "BlockFuture", "CostLedger",
+    "ReplicaSet", "ReplicaWorker",
     "ArmFaultSpec", "FaultPolicy",
 ]

@@ -68,6 +68,58 @@ class FeedbackReport:
     version: int = 0                    # estimator version after the fold
 
 
+@dataclasses.dataclass
+class FeedbackShard:
+    """A replica-local slice of buffered feedback counts.
+
+    The shard is exactly the :class:`FeedbackLog` pending-buffer shape —
+    ``cluster -> [successes (L,), attempts (L,), labeled queries]`` plus the
+    total labeled-request count — detached from any log. Because every
+    entry is a pure monotone sum of unit increments (integer-valued
+    floats, exact far below 2**53), shards merge by plain addition:
+    :func:`merge_counts` is associative and commutative bit-for-bit, and
+    *any* partition of a label stream across R shards folds back to the
+    single-log totals. That is the whole multi-replica feedback contract —
+    replicas fold locally, the control plane adds shards at admission
+    boundaries, and one central :meth:`FeedbackLog.apply` reproduces the
+    single-log estimator state and replan set exactly.
+    """
+
+    counts: Dict[int, List]             # cid -> [succ (L,), att (L,), nq]
+    labels: int = 0                     # labeled requests in the shard
+
+    @property
+    def empty(self) -> bool:
+        return not self.counts
+
+    def copy(self) -> "FeedbackShard":
+        return FeedbackShard(
+            {cid: [b[0].copy(), b[1].copy(), b[2]]
+             for cid, b in self.counts.items()},
+            self.labels,
+        )
+
+
+def merge_counts(*shards: FeedbackShard) -> FeedbackShard:
+    """Add feedback shards: elementwise (success, attempt, query) sums per
+    cluster. Exact — counts are integer-valued — hence associative,
+    commutative and partition-invariant (the property suite in
+    ``tests/test_replica_merge.py`` pins all three)."""
+    out: Dict[int, List] = {}
+    labels = 0
+    for shard in shards:
+        labels += shard.labels
+        for cid, (succ, att, nq) in shard.counts.items():
+            buf = out.get(cid)
+            if buf is None:
+                out[cid] = [succ.copy(), att.copy(), int(nq)]
+            else:
+                buf[0] += succ
+                buf[1] += att
+                buf[2] += int(nq)
+    return FeedbackShard(out, labels)
+
+
 class FeedbackLog:
     """Asynchronous ground-truth feedback, keyed by request id.
 
@@ -112,6 +164,7 @@ class FeedbackLog:
         self.drift_delta = float(drift_delta)
         self.max_watch = int(max_watch)
         self.probe_rate = float(probe_rate)
+        self.probe_seed = int(probe_seed)
         self._probe_rng = np.random.default_rng(probe_seed)
         self.probes = 0          # exploration invocations registered
         # request-id authority: schedulers bound to this log draw ids here,
@@ -317,6 +370,32 @@ class FeedbackLog:
         self._pending_labels += matched
         self.labels += matched
         return matched
+
+    # ------------------------------------------------------------------
+    # Cross-replica shard plumbing (see serving/replica.py)
+    # ------------------------------------------------------------------
+    def export_shard(self) -> FeedbackShard:
+        """Drain the pending buffers into a detached :class:`FeedbackShard`.
+
+        A replica-local log calls this at admission boundaries so the
+        control plane can :func:`merge_counts` every replica's evidence and
+        fold it through ONE central :meth:`apply`. The buffers leave empty
+        (the counts now live in the shard)."""
+        shard = FeedbackShard(self._pending, self._pending_labels)
+        self._pending = {}
+        self._pending_labels = 0
+        return shard
+
+    def absorb_shard(self, shard: FeedbackShard) -> None:
+        """Add a (merged) shard's counts into this log's pending buffers —
+        the inverse of :meth:`export_shard`. The next :meth:`apply` folds
+        them exactly as if the labels had been recorded here."""
+        for cid, (succ, att, nq) in shard.counts.items():
+            buf = self._buf(int(cid))
+            buf[0] += succ
+            buf[1] += att
+            buf[2] += int(nq)
+        self._pending_labels += int(shard.labels)
 
     # ------------------------------------------------------------------
     # Admission-boundary fold

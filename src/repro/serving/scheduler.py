@@ -104,6 +104,22 @@ class CostLedger:
 
     Tenants materialize lazily at ``default_limit`` (infinite unless
     configured); :meth:`set_limit` tightens or relaxes a tenant any time.
+
+    Beyond spend, each tenant may carry a **QPS rate limit**: a token
+    bucket (:meth:`set_rate_limit` — ``rate_limit`` tokens/s refill, burst
+    capacity, one token per admission attempt) checked at the admission
+    boundary alongside the budget reservation. A rate-limited request is
+    rejected exactly like a budget miss (prediction -1, zero cost,
+    ``mode="rejected"``); no token, no downgrade — a downgraded request
+    would still be a request. ``clock`` is injectable for deterministic
+    tests; unlimited tenants (the default) never read it.
+
+    The ledger also survives restarts: :meth:`snapshot` returns a
+    JSON-serializable dict and :meth:`restore` rebuilds a ledger from it.
+    Outstanding admission reservations are carried across (conservative:
+    the restarted process may never settle them, but ``spent + reserved <=
+    limit`` keeps holding, which is the invariant that matters); token
+    buckets restart full (a restart is a quiet period).
     """
 
     def __init__(
@@ -111,19 +127,28 @@ class CostLedger:
         limits: Optional[Dict[str, float]] = None,
         default_limit: float = float("inf"),
         num_arms: int = 0,
+        rate_limits: Optional[Dict[str, float]] = None,
+        default_rate_limit: float = float("inf"),
+        clock=time.monotonic,
     ):
         self.default_limit = float(default_limit)
+        self.default_rate_limit = float(default_rate_limit)
         self.num_arms = int(num_arms)
+        self.clock = clock
         self._t: Dict[str, Dict[str, Any]] = {}
         self.admitted = 0
         self.rejected = 0
         self.downgraded = 0
+        self.rate_limited = 0
         for tenant, lim in (limits or {}).items():
             self.set_limit(tenant, lim)
+        for tenant, qps in (rate_limits or {}).items():
+            self.set_rate_limit(tenant, qps)
 
     def _tenant(self, tenant: str) -> Dict[str, Any]:
         ent = self._t.get(tenant)
         if ent is None:
+            qps = self.default_rate_limit
             ent = self._t[tenant] = {
                 "limit": self.default_limit,
                 "reserved": 0.0,
@@ -132,12 +157,57 @@ class CostLedger:
                 "requests": 0,
                 "rejected": 0,
                 "downgraded": 0,
+                "rate_limited": 0,
+                "rate_limit": qps,
+                "burst": self._default_burst(qps),
+                "tokens": self._default_burst(qps),
+                "stamp": None,
                 "by_arm": np.zeros(self.num_arms, np.float64),
             }
         return ent
 
+    @staticmethod
+    def _default_burst(qps: float) -> float:
+        return max(1.0, float(qps)) if np.isfinite(qps) else float("inf")
+
     def set_limit(self, tenant: str, limit: float) -> None:
         self._tenant(tenant)["limit"] = float(limit)
+
+    def set_rate_limit(self, tenant: str, qps: float,
+                       burst: Optional[float] = None) -> None:
+        """Configure a tenant's admission token bucket: ``qps`` tokens/s
+        refill up to ``burst`` capacity (default ``max(1, qps)``); each
+        admission attempt consumes one token. ``inf`` removes the limit."""
+        ent = self._tenant(tenant)
+        ent["rate_limit"] = float(qps)
+        ent["burst"] = (
+            self._default_burst(qps) if burst is None else float(burst)
+        )
+        ent["tokens"] = ent["burst"]   # fresh bucket starts full
+        ent["stamp"] = None
+
+    def allow_request(self, tenant: str) -> bool:
+        """Admission-time QPS check: refill the tenant's token bucket from
+        the clock, then take one token. True (no clock read, no state
+        touched) for unlimited tenants — the default stays zero-overhead."""
+        ent = self._tenant(tenant)
+        rate = ent["rate_limit"]
+        if not np.isfinite(rate):
+            return True
+        now = float(self.clock())
+        if ent["stamp"] is not None:
+            ent["tokens"] = min(
+                ent["burst"], ent["tokens"] + (now - ent["stamp"]) * rate
+            )
+        ent["stamp"] = now
+        if ent["tokens"] >= 1.0:
+            ent["tokens"] -= 1.0
+            return True
+        return False
+
+    def note_rate_limited(self, tenant: str) -> None:
+        self._tenant(tenant)["rate_limited"] += 1
+        self.rate_limited += 1
 
     def remaining(self, tenant: str) -> float:
         ent = self._tenant(tenant)
@@ -210,7 +280,91 @@ class CostLedger:
             "ledger_requests": int(sum(e["requests"] for e in self._t.values())),
             "ledger_rejected": self.rejected,
             "ledger_downgraded": self.downgraded,
+            "ledger_rate_limited": self.rate_limited,
         }
+
+    # ------------------------------------------------------------------
+    # Persistence across restarts
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _enc(v: float):
+        # strict-JSON safe: infinities (the unlimited defaults) -> None
+        return None if not np.isfinite(v) else float(v)
+
+    @staticmethod
+    def _dec(v) -> float:
+        return float("inf") if v is None else float(v)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable ledger state: per-tenant spend, outstanding
+        reservations, limits and counters. ``json.dumps(ledger.snapshot())``
+        round-trips through :meth:`restore` — the restart path the
+        ``tests/test_cost_ledger.py`` suite pins."""
+        enc = self._enc
+        return {
+            "version": 1,
+            "default_limit": enc(self.default_limit),
+            "default_rate_limit": enc(self.default_rate_limit),
+            "num_arms": self.num_arms,
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "downgraded": self.downgraded,
+            "rate_limited": self.rate_limited,
+            "tenants": {
+                name: {
+                    "limit": enc(ent["limit"]),
+                    "reserved": ent["reserved"],
+                    "reserved_n": ent["reserved_n"],
+                    "spent": ent["spent"],
+                    "requests": ent["requests"],
+                    "rejected": ent["rejected"],
+                    "downgraded": ent["downgraded"],
+                    "rate_limited": ent["rate_limited"],
+                    "rate_limit": enc(ent["rate_limit"]),
+                    "burst": enc(ent["burst"]),
+                    "by_arm": ent["by_arm"].tolist(),
+                }
+                for name, ent in self._t.items()
+            },
+        }
+
+    @classmethod
+    def restore(cls, payload: Dict[str, Any],
+                clock=time.monotonic) -> "CostLedger":
+        """Rebuild a ledger from a :meth:`snapshot` dict (parsed JSON).
+
+        Spend, reservations, limits and counters come back exactly; token
+        buckets restart full at their configured rate/burst (wall-clock
+        bucket levels do not survive a process boundary meaningfully)."""
+        dec = cls._dec
+        led = cls(
+            default_limit=dec(payload["default_limit"]),
+            default_rate_limit=dec(payload.get("default_rate_limit")),
+            num_arms=int(payload.get("num_arms", 0)),
+            clock=clock,
+        )
+        led.admitted = int(payload.get("admitted", 0))
+        led.rejected = int(payload.get("rejected", 0))
+        led.downgraded = int(payload.get("downgraded", 0))
+        led.rate_limited = int(payload.get("rate_limited", 0))
+        for name, row in payload.get("tenants", {}).items():
+            ent = led._tenant(name)
+            ent["limit"] = dec(row["limit"])
+            ent["reserved"] = float(row["reserved"])
+            ent["reserved_n"] = int(row["reserved_n"])
+            ent["spent"] = float(row["spent"])
+            ent["requests"] = int(row["requests"])
+            ent["rejected"] = int(row["rejected"])
+            ent["downgraded"] = int(row["downgraded"])
+            ent["rate_limited"] = int(row.get("rate_limited", 0))
+            ent["rate_limit"] = dec(row.get("rate_limit"))
+            ent["burst"] = dec(row.get("burst"))
+            ent["tokens"] = ent["burst"]
+            ent["stamp"] = None
+            by_arm = np.asarray(row.get("by_arm", []), np.float64)
+            if by_arm.size:
+                ent["by_arm"] = by_arm
+        return led
 
 
 @dataclasses.dataclass
@@ -685,14 +839,27 @@ class BatchScheduler:
         ids = self._alloc_ids(n)
         blk = BlockFuture(self, n, request_ids=ids)
         tenants = np.broadcast_to(np.asarray(tenant, object), (n,)).copy()
-        self._queue.append(_Segment(
+        self.submit_block(
             payloads, emb, budgets, arrival, slo, blk, np.arange(n), ids,
+            tenants,
+        )
+        return blk
+
+    def submit_block(self, payloads, emb, budgets, arrival, slo, sink, pos,
+                     ids, tenants) -> None:
+        """Enqueue pre-built columnar rows against an externally-owned sink
+        (``sink``/``pos``): the admission seam a sharded front-end (see
+        :class:`~repro.serving.replica.ReplicaSet`) uses to scatter one
+        caller-visible :class:`BlockFuture` across several schedulers.
+        ``submit_many`` is this plus the array building."""
+        n = budgets.shape[0]
+        self._queue.append(_Segment(
+            payloads, emb, budgets, arrival, slo, sink, pos, ids,
             tenants=tenants,
         ))
         self._qlen += n
         self._queue_version += 1
         self._stats["submitted"] += n
-        return blk
 
     def _seg_deadline(self, seg: _Segment) -> float:
         """Earliest time any request in the segment must be admitted:
@@ -812,7 +979,9 @@ class BatchScheduler:
         """Hard budget enforcement at the admission boundary.
 
         Sequentially (arrival order — admission must not depend on how rows
-        later split into budget groups) reserves each request's budget
+        later split into budget groups): first the tenant's QPS token
+        bucket (a rate-limited request is rejected outright — no budget
+        interaction, no downgrade), then reserves each request's budget
         against its tenant; on a miss, tries a downgrade to the largest
         affordable cheaper tier; otherwise rejects. Rejected rows complete
         immediately (``mode="rejected"``, prediction -1, zero cost) and are
@@ -826,6 +995,10 @@ class BatchScheduler:
         for i in range(n):
             tenant = tenants[i]
             amount = float(budgets[i])
+            if not led.allow_request(tenant):
+                keep[i] = False
+                led.note_rate_limited(tenant)
+                continue
             if led.try_reserve(tenant, amount):
                 reserved[i] = amount
                 continue
@@ -901,18 +1074,29 @@ class BatchScheduler:
                 g_id = part_id[rows] if part_id is not None else None
                 g_tenants = tenants[rows] if self.ledger is not None else None
                 g_reserved = reserved[rows] if reserved is not None else None
-            pending = self.router.begin_route(
-                g_payloads, g_emb, g_budgets, mode=mode,
-                speculation_threshold=self.speculation_threshold,
-            )
-            self._stats["spec_" + pending.kind] += 1
-            self._stats["batches"] += 1
-            self._inflight.append(
-                _Group(pending, g_arrival, part_sinks, g_id, g_pos,
-                       ids=g_ids, tenants=g_tenants, reserved=g_reserved)
+            self._launch(
+                g_payloads, g_emb, g_budgets, g_arrival, part_sinks, g_id,
+                g_pos, g_ids, g_tenants, g_reserved, mode,
             )
         self._stats["inflight_peak"] = max(
             self._stats["inflight_peak"], len(self._inflight)
+        )
+
+    def _launch(self, payloads, emb, budgets, arrival, part_sinks, part_id,
+                part_pos, ids, tenants, reserved, mode):
+        """Dispatch one admitted budget group into flight. The dispatch
+        seam: a replica worker overrides this to *stage* the group so a
+        :class:`~repro.serving.replica.ReplicaSet` can fuse same-budget
+        groups from several replicas into one wave program."""
+        pending = self.router.begin_route(
+            payloads, emb, budgets, mode=mode,
+            speculation_threshold=self.speculation_threshold,
+        )
+        self._stats["spec_" + pending.kind] += 1
+        self._stats["batches"] += 1
+        self._inflight.append(
+            _Group(pending, arrival, part_sinks, part_id, part_pos,
+                   ids=ids, tenants=tenants, reserved=reserved)
         )
 
     def _resolve_rows(self, group: _Group, rows: np.ndarray, predictions,

@@ -222,3 +222,165 @@ def test_ledger_disabled_is_zero_overhead_and_bit_identical():
     np.testing.assert_array_equal(b_off.stop_waves, b_on.stop_waves)
     assert "ledger_spent" not in s_off.stats
     assert s_on.stats["ledger_rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# QPS rate limits: token-bucket admission with an injectable clock
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    """Deterministic clock for the token bucket: time moves only when the
+    test says so."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def advance(self, dt):
+        self.t += float(dt)
+
+    def __call__(self):
+        return self.t
+
+
+def test_rate_limit_rejects_like_budget_rejection():
+    """A rate-limited request takes the identical reject path a budget
+    rejection does — prediction -1, zero cost, mode 'rejected' — and the
+    ``ledger_rate_limited`` stat counts it (globally and per tenant)."""
+    clock = _FakeClock()
+    ledger = CostLedger(num_arms=len(_ENGINE.arms), clock=clock)
+    ledger.set_rate_limit("acme", qps=1.0, burst=2.0)
+    sched = _sched(ledger=ledger, max_batch=16)
+    rows = np.arange(8)
+    blk = sched.submit_many(rows, _QEMB[rows], float(_TIERS[-1]),
+                            tenant="acme")
+    sched.drain()
+    # burst=2 tokens, no time passes inside the batch: exactly 2 admitted
+    rej = blk.modes == "rejected"
+    assert int((~rej).sum()) == 2
+    assert (blk.predictions[rej] == -1).all()
+    assert (blk.costs[rej] == 0.0).all()
+    assert (blk.stop_waves[rej] == 0).all()
+    st_ = sched.stats
+    assert st_["completed"] == 8                   # rejected rows complete
+    assert st_["ledger_rate_limited"] == 6
+    assert st_["ledger_rejected"] == 0             # budget path untouched
+    assert ledger.tenant("acme")["rate_limited"] == 6
+    # refill is capped at burst: +3s at 1 qps refills to min(2, 3) tokens
+    clock.advance(3.0)
+    blk2 = sched.submit_many(rows[:4], _QEMB[rows[:4]], float(_TIERS[-1]),
+                             tenant="acme")
+    sched.drain()
+    assert int((blk2.modes != "rejected").sum()) == 2
+    assert ledger.tenant("acme")["rate_limited"] == 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.floats(0.5, 8.0),                          # qps
+    st.integers(1, 6),                            # burst
+    st.integers(1, 30),                           # attempts
+    st.floats(0.0, 1.0),                          # gap between attempts (s)
+)
+def test_rate_limit_bucket_conservation(qps, burst, n, gap):
+    """Token conservation: admissions can never exceed the bucket's burst
+    capacity plus what the clock refilled, at any prefix of the attempt
+    stream — and unlimited tenants never consult the clock."""
+    clock = _FakeClock()
+    ledger = CostLedger(clock=clock)
+    ledger.set_rate_limit("acme", qps=qps, burst=float(burst))
+    admitted = 0
+    for k in range(n):
+        if ledger.allow_request("acme"):
+            admitted += 1
+        assert admitted <= burst + qps * (clock.t) + 1e-9
+        clock.advance(gap)
+    # an unlimited tenant is admission-free regardless of the clock
+    assert all(ledger.allow_request("zen") for _ in range(10))
+    assert ledger.tenant("zen")["rate_limited"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Persistence: snapshot()/restore() across a simulated restart
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_restore_json_roundtrip_mid_workload():
+    """Snapshot the ledger MID-workload (reservations outstanding), kill
+    the scheduler, json-round-trip the state, restore, and finish the
+    stream on a new scheduler: ``spent + reserved <= limit`` holds at
+    every boundary, realized spend/counters survive exactly, and the
+    orphaned reservations stay conservatively held."""
+    import json
+
+    rng = np.random.default_rng(17)
+    rows = rng.integers(0, _QEMB.shape[0], size=48)
+    budgets = rng.choice(_TIERS, size=48)
+    limit = float(_TIERS[-1]) * 40
+    ledger = CostLedger(num_arms=len(_ENGINE.arms))
+    ledger.set_limit("acme", limit)
+    ledger.set_rate_limit("acme", qps=10_000.0)    # finite: exercises enc
+    sched = _sched(ledger=ledger, max_batch=16)
+    sched.submit_many(rows, _QEMB[rows], budgets, tenant="acme")
+    sched._dispatch_batch()                        # one batch in flight...
+    ent = ledger.tenant("acme")
+    assert ent["reserved"] > 0.0                   # ...reservations live
+    assert ent["spent"] + ent["reserved"] <= limit + 1e-12
+
+    # process dies here: only the JSON snapshot crosses the boundary
+    payload = json.loads(json.dumps(ledger.snapshot(), allow_nan=False))
+    led2 = CostLedger.restore(payload)
+    e2 = led2.tenant("acme")
+    for k in ("limit", "reserved", "reserved_n", "spent", "requests",
+              "rejected", "downgraded", "rate_limited", "rate_limit"):
+        assert e2[k] == ent[k], k
+    np.testing.assert_array_equal(e2["by_arm"], ent["by_arm"])
+    assert led2.default_limit == ledger.default_limit
+    assert e2["spent"] + e2["reserved"] <= limit + 1e-12
+
+    # the restarted process serves the rest of the stream
+    sched2 = _sched(ledger=led2, max_batch=16)
+    blk = sched2.submit_many(rows, _QEMB[rows], budgets, tenant="acme")
+    sched2.drain()
+    assert blk.done()
+    e3 = led2.tenant("acme")
+    assert e3["spent"] + e3["reserved"] <= limit + 1e-12
+    # the dead process's reservations were never settled: still held
+    assert e3["reserved"] >= ent["reserved"] - 1e-12
+    # an unlimited-default tenant snapshot stays strict-JSON (inf -> None)
+    json.dumps(CostLedger(num_arms=2).snapshot(), allow_nan=False)
+
+
+# ---------------------------------------------------------------------------
+# Settlement through the R-replica serving plane
+# ---------------------------------------------------------------------------
+
+
+def test_replica_set_settles_shared_ledger():
+    """One CostLedger shared across an R=3 ReplicaSet: per-tenant spend
+    equals the block's realized charges, every replica's reservations are
+    released, and per-arm attribution still sums to spend."""
+    from repro.serving import ReplicaSet
+
+    rng = np.random.default_rng(23)
+    n = 72
+    rows = rng.integers(0, _QEMB.shape[0], size=n)
+    budgets = rng.choice(_TIERS, size=n)
+    tenants = rng.choice(_TENANTS, size=n)
+    ledger = CostLedger(num_arms=len(_ENGINE.arms))
+    rset = ReplicaSet(_ROUTER, replicas=3, max_batch=16, max_wait_s=0.0,
+                      ledger=ledger, budget_tiers=_TIERS.tolist())
+    blk = rset.submit_many(rows, _QEMB[rows], budgets, tenant=tenants)
+    rset.drain()
+    assert blk.done()
+    assert np.isclose(ledger.total_spent, float(blk.costs.sum()),
+                      rtol=1e-12, atol=1e-18)
+    assert ledger.total_reserved == 0.0
+    for name, ent in ledger.tenants().items():
+        sel = tenants == name
+        assert ent["requests"] == int(sel.sum())
+        assert np.isclose(ent["spent"], float(blk.costs[sel].sum()),
+                          rtol=1e-12, atol=1e-18)
+        assert np.isclose(ent["by_arm"].sum(), ent["spent"],
+                          rtol=1e-12, atol=1e-18)
+    assert rset.stats["ledger_rejected"] == 0

@@ -375,3 +375,53 @@ def test_fault_policy_determinism_and_spec():
     assert p1.spec(2) == ArmFaultSpec(timeout=0.3, degrade=0.2)
     with pytest.raises(ValueError):
         ArmFaultSpec(timeout=0.9, error=0.2)   # rates sum > 1
+
+
+# ---------------------------------------------------------------------------
+# Fault plane through the R-replica serving front-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,rates", FAULT_MATRIX)
+def test_replica_set_serves_through_faults(kind, rates):
+    """Every fault schedule, served through an R=3 ReplicaSet: the stream
+    completes with failover'd (non-abstain) predictions, the failure
+    evidence reaches the per-replica degradation trackers, and a follow-up
+    feedback fold replans exactly the drift-gated clusters — the same
+    pipeline the single-scheduler fault tests pin, now across sharded
+    admission and fused dispatch.
+
+    (Bit-identity with the unfused run is deliberately NOT asserted at
+    R>1: fault draws hash on the row index within the dispatched batch,
+    so fusing changes the draws — see the replica module docstring.)"""
+    from repro.serving import ReplicaSet
+
+    est, engine, router, qemb, qlab = _tabular_pool()
+    budget = _budget(engine)
+    hot = _early_arm(router, qemb, budget)
+    B = qemb.shape[0]
+    policy = FaultPolicy(len(engine.arms), 4, seed=11)
+    order = np.argsort(-np.bincount(
+        router.route_batch(np.arange(B), qemb, budget).schedule[:, 0].clip(0),
+        minlength=len(engine.arms),
+    ))
+    for pos, kw in rates.items():
+        policy.set_arm(int(order[pos]), **kw)
+    engine.fault_policy = policy
+    try:
+        rset = ReplicaSet(router, replicas=3, max_batch=16, max_wait_s=0.0,
+                          feedback=True)
+        blk = rset.submit_many(np.arange(B), qemb, budget)
+        rset.drain()
+        assert blk.done()
+        assert (blk.predictions >= 0).all()        # failover kept serving
+        st = rset.stats
+        assert st["completed"] == B
+        if kind != "degrade":                      # degrades aren't failures
+            assert st["degradation_failures"] > 0, kind
+        assert st["degradation_routes"] > 0
+        assert rset.record_outcomes(blk.request_ids, qlab) == B
+        report = rset.apply_feedback()
+        assert report.labels == B
+    finally:
+        engine.fault_policy = None

@@ -1,0 +1,235 @@
+"""Property suite: the shard-merged feedback contract (satellite of the
+R-replica serving plane).
+
+``merge_counts`` must be a true commutative monoid on feedback shards —
+counts are monotone sums of unit increments (integer-valued floats, exact
+far below 2**53), so shard addition is associative, commutative and
+bit-for-bit reproducible in any grouping. On top of that the *partition
+invariance* property: ANY partition of a label stream across R replica
+shard logs, merged and folded through ONE central apply, leaves the
+estimator in exactly the single-log state (p_hat, arm counts, versions,
+drift set). That pair of properties is what lets the replica plane fold
+feedback locally and reconcile centrally without any cross-replica
+ordering protocol.
+
+Scope note: the contract is merge-then-ONE-fold. Folding the same counts
+in several ``apply`` calls at different boundaries is deliberately NOT
+bit-equal (interval refreshes compose nonlinearly) — the control plane
+always merges all pending shards before its single central fold.
+
+Runs on the real ``hypothesis`` engine when installed, else on the
+in-repo ``_hypolite`` fallback — scripts/ci.sh fails if these skip.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: see requirements-test.txt
+    from _hypolite import given, settings, strategies as st
+
+from repro.core.clustering import kmeans
+from repro.core.estimation import SuccessProbEstimator
+from repro.data import OracleWorkload
+from repro.serving import FeedbackLog, FeedbackShard, merge_counts
+
+L = 6            # arms
+K = 4            # classes
+CLUSTERS = 4
+T = 3            # waves per observed request
+
+
+def _estimator() -> SuccessProbEstimator:
+    """A fresh estimator twin: deterministic construction, so every call
+    returns a bit-identical starting state (the two sides of each
+    equivalence property get one each)."""
+    wl = OracleWorkload(num_classes=K, num_clusters=CLUSTERS, num_arms=L,
+                       seed=9)
+    tbl, emb, _ = wl.response_table(40 * CLUSTERS, seed=10)
+    assign, _ = kmeans(emb, CLUSTERS, seed=0)
+    return SuccessProbEstimator(tbl, emb, assign)
+
+
+def _shard(spec) -> FeedbackShard:
+    """Materialize one shard from a drawn spec: list of (cid, nq, seed)
+    entries — per-cluster integer-valued success/attempt buffers with
+    succ <= att, the exact pending-buffer shape a replica exports."""
+    counts = {}
+    labels = 0
+    for cid, nq, seed in spec:
+        rng = np.random.default_rng(seed)
+        att = rng.integers(0, 8, L).astype(np.float64)
+        succ = np.floor(att * rng.random(L))
+        buf = counts.get(cid)
+        if buf is None:
+            counts[cid] = [succ, att, int(nq)]
+        else:
+            buf[0] += succ
+            buf[1] += att
+            buf[2] += int(nq)
+        labels += int(nq)
+    return FeedbackShard(counts, labels)
+
+
+def _shard_equal(a: FeedbackShard, b: FeedbackShard) -> None:
+    assert a.labels == b.labels
+    assert set(a.counts) == set(b.counts)
+    for cid in a.counts:
+        sa, aa, na = a.counts[cid]
+        sb, ab, nb = b.counts[cid]
+        np.testing.assert_array_equal(sa, sb)
+        np.testing.assert_array_equal(aa, ab)
+        assert na == nb
+
+
+_ENTRY = st.tuples(
+    st.integers(min_value=0, max_value=CLUSTERS - 1),   # cluster id
+    st.integers(min_value=0, max_value=5),              # labeled queries
+    st.integers(min_value=0, max_value=10_000),         # buffer seed
+)
+_SPEC = st.lists(_ENTRY, min_size=0, max_size=6)
+
+
+# ---------------------------------------------------------------------------
+# merge_counts is a commutative monoid, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(_SPEC, _SPEC, _SPEC)
+def test_merge_counts_associative(sa, sb, sc):
+    a, b, c = _shard(sa), _shard(sb), _shard(sc)
+    left = merge_counts(merge_counts(a, b), c)
+    right = merge_counts(a, merge_counts(b, c))
+    flat = merge_counts(a, b, c)
+    _shard_equal(left, right)
+    _shard_equal(left, flat)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_SPEC, _SPEC)
+def test_merge_counts_commutative(sa, sb):
+    a, b = _shard(sa), _shard(sb)
+    _shard_equal(merge_counts(a, b), merge_counts(b, a))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SPEC)
+def test_merge_counts_identity_and_purity(spec):
+    """The empty shard is the identity, and merging never aliases or
+    mutates its inputs (replicas hand their shards over by reference)."""
+    a = _shard(spec)
+    before = a.copy()
+    merged = merge_counts(a, FeedbackShard({}, 0))
+    _shard_equal(merged, a)
+    for cid in merged.counts:
+        merged.counts[cid][0] += 1.0     # mutate the result...
+        merged.counts[cid][1] += 1.0
+    _shard_equal(a, before)              # ...inputs unharmed
+
+
+# ---------------------------------------------------------------------------
+# Partition invariance: R shard logs == one log, after ONE central fold
+# ---------------------------------------------------------------------------
+
+
+def _observations(n: int, seed: int):
+    """A synthetic retired-group stream: n requests with valid cluster
+    ids, (B, T) schedules/responses/invoked masks, and labels."""
+    rng = np.random.default_rng(seed)
+    est = _estimator()
+    cids = est.cluster_order[rng.integers(0, len(est.cluster_order), n)]
+    schedule = rng.integers(0, L, (n, T))
+    invoked = rng.random((n, T)) < 0.7
+    invoked[:, 0] = True                 # wave 0 always runs
+    responses = np.where(invoked, rng.integers(0, K, (n, T)), -1)
+    labels = rng.integers(0, K, n)
+    return cids.astype(np.int64), schedule, responses, invoked, labels
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=24),             # stream length
+    st.integers(min_value=1, max_value=4),              # replica count R
+    st.integers(min_value=0, max_value=10_000),         # stream seed
+    st.integers(min_value=0, max_value=10_000),         # partition seed
+)
+def test_partition_invariance_vs_single_log(n, R, stream_seed, part_seed):
+    """Scatter one observation stream across R shard logs by an arbitrary
+    row partition, merge the exported shards, fold ONCE through a central
+    log: the estimator state and the fold report match the single-log
+    baseline exactly."""
+    cids, schedule, responses, invoked, labels = _observations(n, stream_seed)
+    ids = np.arange(n, dtype=np.int64)
+    assign = np.random.default_rng(part_seed).integers(0, R, n)
+
+    # single-log baseline
+    est_one = _estimator()
+    log_one = FeedbackLog(est_one)
+    log_one.observe(ids, cids, schedule, responses, invoked)
+    assert log_one.record_many(ids, labels) == n
+    rep_one = log_one.apply()
+
+    # R shard logs -> merge -> one central fold
+    est_r = _estimator()
+    central = FeedbackLog(est_r)
+    shards = []
+    for r in range(R):
+        rows = np.flatnonzero(assign == r)
+        shard_log = FeedbackLog(est_r)
+        if rows.size:
+            shard_log.observe(ids[rows], cids[rows], schedule[rows],
+                              responses[rows], invoked[rows])
+            assert shard_log.record_many(ids[rows], labels[rows]) == rows.size
+        if shard_log.has_pending:
+            shards.append(shard_log.export_shard())
+    central.absorb_shard(merge_counts(*shards))
+    rep_r = central.apply()
+
+    assert rep_r.labels == rep_one.labels == n
+    assert sorted(rep_r.clusters) == sorted(rep_one.clusters)
+    assert sorted(rep_r.drifted) == sorted(rep_one.drifted)
+    assert est_r.version == est_one.version
+    assert est_r.plan_version == est_one.plan_version
+    for cid, stats in est_one.clusters.items():
+        other = est_r.clusters[cid]
+        np.testing.assert_array_equal(stats.p_hat, other.p_hat)
+        np.testing.assert_array_equal(stats.arm_counts, other.arm_counts)
+        np.testing.assert_array_equal(stats.lo, other.lo)
+        np.testing.assert_array_equal(stats.hi, other.hi)
+        assert stats.version == other.version
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=16),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_shard_fold_order_free(n, seed):
+    """Merging the SAME shards in any order folds to the same state: the
+    merged shard handed to apply() is order-free, so replicas never need
+    to coordinate export order."""
+    cids, schedule, responses, invoked, labels = _observations(n, seed)
+    ids = np.arange(n, dtype=np.int64)
+    halves = [np.arange(0, n, 2), np.arange(1, n, 2)]
+
+    states = []
+    for order in ((0, 1), (1, 0)):
+        est = _estimator()
+        central = FeedbackLog(est)
+        shards = []
+        for rows in halves:
+            lg = FeedbackLog(est)
+            lg.observe(ids[rows], cids[rows], schedule[rows],
+                       responses[rows], invoked[rows])
+            lg.record_many(ids[rows], labels[rows])
+            shards.append(lg.export_shard())
+        central.absorb_shard(merge_counts(shards[order[0]], shards[order[1]]))
+        central.apply()
+        states.append(est)
+    a, b = states
+    assert a.version == b.version
+    for cid, stats in a.clusters.items():
+        np.testing.assert_array_equal(stats.p_hat, b.clusters[cid].p_hat)
+        np.testing.assert_array_equal(
+            stats.arm_counts, b.clusters[cid].arm_counts
+        )
