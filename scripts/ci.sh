@@ -1,14 +1,20 @@
 #!/usr/bin/env bash
 # CI: hygiene guards, the thriftlint static-analysis gate (zero findings,
-# every suppression reasoned), router/serving/replica correctness, a
+# every suppression reasoned), router/serving/replica correctness, the
+# multi-device replica suite under 4 forced host devices (overlapped
+# placement bit-identity, fault-grid equivalence, zero timed recompiles —
+# must RUN, not skip), a
 # no-skip gate on the property suites (hypothesis or the in-repo fallback
 # engine — they must RUN; the cost-ledger and replica shard-merge suites
 # gate here too), a serving-throughput
-# smoke (one-shot engines + the steady-state continuous-batching path +
-# the online feedback-vs-drift section + the fault-tolerance section +
-# the replica-scaling sweep + the compile-sentinel budget) with JSON
-# well-formedness and
-# history-preservation assertions, a docs link check, then the FULL tier-1
+# smoke — also under 4 forced host devices so the cross-device curve is
+# exercised — (one-shot engines + the steady-state continuous-batching
+# path + the online feedback-vs-drift section + the fault-tolerance
+# section + the replica-scaling sweep + the cross_device subsection + the
+# compile-sentinel budget) with JSON well-formedness and
+# history-preservation assertions, a docs link check plus a docs symbol
+# check (every doc-mentioned repro.* identifier must resolve against the
+# tree), then the FULL tier-1
 # suite — tracer-leak-guarded via tests/conftest.py — with zero tolerated
 # failures; there is no allowlist of known-bad tests.
 set -euo pipefail
@@ -34,6 +40,23 @@ python -m pytest -x -q tests/test_router_batched.py tests/test_serving.py \
     tests/test_core_selection.py tests/test_feedback.py \
     tests/test_selection_batched.py tests/test_failover.py \
     tests/test_replica.py
+
+# multi-device replica placement: force 4 host CPU devices (the same knob
+# `repro.launch.serve --devices` uses) so the overlapped placement path is
+# real, not the single-device fallback. These tests skip themselves below
+# 2 devices — a skip here means the forcing flag stopped working; fail
+# loudly instead of silently testing nothing.
+DEV_OUT=$(XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+    python -m pytest -q -rs tests/test_replica_devices.py 2>&1) || {
+    echo "$DEV_OUT"; exit 1; }
+echo "$DEV_OUT" | tail -1
+if echo "$DEV_OUT" | grep -qiE "skipped"; then
+    echo "FAIL: device-placement tests were skipped — forced host devices" \
+         "did not take effect" >&2
+    echo "$DEV_OUT" >&2
+    exit 1
+fi
+echo "multi-device replica suite ran on 4 forced devices (no skips)"
 
 # property suites must RUN — on the real hypothesis engine when installed,
 # on the in-repo tests/_hypolite.py fallback otherwise. A skip here means
@@ -61,7 +84,10 @@ SMOKE_OUT="${TMPDIR:-/tmp}/BENCH_serving_smoke.json"
 rm -f "$SMOKE_OUT"
 printf '%s' '{"engine": "ci-history-stub", "rows": [{"batch": 1, "qps": 1.0}]}' \
     > "$SMOKE_OUT"
-python -m benchmarks.serving_throughput --smoke --out "$SMOKE_OUT"
+# forced host devices so the cross-device curve measures real overlapped
+# placement rather than reporting {"skipped": true} on a 1-device process
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+    python -m benchmarks.serving_throughput --smoke --out "$SMOKE_OUT"
 SMOKE_OUT="$SMOKE_OUT" python - <<'PY'
 import json, os
 report = json.load(open(os.environ["SMOKE_OUT"]))
@@ -164,6 +190,51 @@ assert rs["timed_recompiles"] == 0, \
     f"recompiles inside the replica sweep: {rs['timed_recompiles']}"
 assert rs["speedup_at_max"] > 0, "replica scaling timing is malformed"
 
+# the cross-device subsection: overlapped per-device placement vs the fused
+# single-device anchor at R in {1, 2, 4} on the 4 forced host devices. The
+# correctness bars gate unconditionally (R=1 bit-match vs the plain
+# BatchScheduler, zero timed recompiles, rows well-formed); the >= 1.5x
+# aggregate-qps bar gates only when the host can actually run the device
+# programs in parallel (host_cores >= devices) — forced host devices
+# multiplex one physical core on a 1-core CI box, where overlapped
+# dispatch cannot beat fused no matter how the code is shaped, and a bar
+# that can never pass is a bar nobody reads.
+cd = rs["cross_device"]
+for key in ("devices", "host_cores", "parallel_capable", "rows",
+            "wave_plane", "overlapped_vs_fused_at_max",
+            "wave_overlapped_vs_fused_at_max", "replicas_max",
+            "r1_bitmatch", "timed_recompiles"):
+    assert key in cd, f"cross_device missing {key}"
+assert not cd.get("skipped"), "cross_device skipped despite forced devices"
+assert cd["devices"] >= 4, f"forced 4 devices, saw {cd['devices']}"
+assert sorted(r["replicas"] for r in cd["rows"]) == [1, 2, 4], \
+    "cross_device must sweep R in {1, 2, 4}"
+for row in cd["rows"]:
+    for key in ("replicas", "devices_used", "qps_overlapped", "qps_fused",
+                "overlapped_vs_fused", "overlapped_dispatches"):
+        assert key in row, f"cross_device row missing {key}"
+    assert row["qps_overlapped"] > 0 and row["qps_fused"] > 0, \
+        "bad cross_device row"
+    assert row["devices_used"] == min(row["replicas"], cd["devices"]), \
+        "overlapped placement did not spread across the forced devices"
+assert cd["rows"][-1]["overlapped_dispatches"] > 0, \
+    "overlapped placement never dispatched at R=4"
+wp = cd["wave_plane"]
+assert wp["rows"], "cross_device wave-plane curve is empty"
+for row in wp["rows"]:
+    assert row["qps_overlapped_rows"] > 0 and row["qps_fused_rows"] > 0, \
+        "bad cross_device wave-plane row"
+assert cd["replicas_max"] >= 4, "cross_device sweep did not reach R=4"
+assert cd["r1_bitmatch"], \
+    "overlapped R=1 diverged from the plain BatchScheduler"
+assert cd["timed_recompiles"] == 0, \
+    f"recompiles inside the cross-device sweep: {cd['timed_recompiles']}"
+if cd["parallel_capable"]:
+    assert cd["overlapped_vs_fused_at_max"] >= 1.5, (
+        f"overlapped R={cd['replicas_max']} only "
+        f"{cd['overlapped_vs_fused_at_max']:.2f}x over fused on "
+        f"{cd['host_cores']} cores")
+
 # the compile-sentinel budget: every XLA compile of the wave/planner
 # programs must land in a per-bucket warm-up (zero in timed sections) and
 # total program counts must stay within the declared bucket budgets
@@ -212,6 +283,43 @@ for doc in ("README.md", "docs/serving.md", "docs/analysis.md"):
 if bad:
     sys.exit(f"dangling doc references: {bad}")
 print("docs link check OK")
+PY
+
+# docs symbol check: every `repro.*` identifier the docs mention must
+# resolve against the tree — as an importable module, or as an attribute
+# (class, function, constant) of one. Catches docs drifting ahead of (or
+# behind) the code: a doc naming repro.distributed.sharding.replica_mesh
+# fails here until that symbol actually exists.
+python - <<'PY'
+import importlib, pathlib, re, sys
+names = set()
+for doc in ("README.md", "docs/serving.md", "docs/analysis.md"):
+    text = pathlib.Path(doc).read_text()
+    names |= set(re.findall(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`", text))
+bad = []
+for name in sorted(names):
+    parts = name.split(".")
+    obj = None
+    depth = 0
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+            depth = i
+            break
+        except ImportError:
+            continue
+    if obj is None:
+        bad.append(name)
+        continue
+    for attr in parts[depth:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            bad.append(name)
+            break
+if bad:
+    sys.exit(f"docs name repro.* symbols that do not resolve: {bad}")
+print(f"docs symbol check OK ({len(names)} repro.* identifiers resolve)")
 PY
 
 # tier-1: the whole suite gates — zero failures, no exceptions

@@ -11,7 +11,14 @@ patterns defeat that:
   wrapper owns a fresh cache, so nothing is ever warm;
 * feeding ``static_argnames``/``static_argnums`` an unhashable literal
   (TypeError at call time) or a raw ``len(...)``/``.shape`` scalar that
-  bypasses the bucket quantisation — one compile per distinct length.
+  bypasses the bucket quantisation — one compile per distinct length;
+* an explicit device transfer (``jax.device_put`` / ``jax.device_get``)
+  inside jit-reachable code — under trace it stages a cross-device copy
+  into the compiled program (or poisons the cache with per-device
+  committed-array shardings when the pinned device varies per call).
+  Transfers belong at the dispatch seam, host-side, *before* the jitted
+  entry (`PendingRoute._dispatch_jit` is the sanctioned spot: it pins the
+  padded wave tables to a worker's device and then calls the jit).
 """
 from __future__ import annotations
 
@@ -168,6 +175,30 @@ def check(project: Project) -> list[Finding]:
                             "through bucket_size()/_bucket() first",
                         )
                     )
+
+    # 4. explicit device transfers inside traced (jit-reachable) code
+    for mod in project.modules.values():
+        for site in mod.scan.calls:
+            fn = site.enclosing
+            if fn is None or not project.is_reachable(fn):
+                continue
+            name = project.dotted(site.node.func, site.module)
+            if name not in ("jax.device_put", "jax.device_get"):
+                continue
+            findings.append(
+                Finding(
+                    rule=RULE,
+                    path=site.path,
+                    line=site.node.lineno,
+                    symbol=fn.qualname,
+                    message=f"`{name.split('.')[-1]}` inside jit-reachable "
+                    "code: under trace this stages an implicit cross-device "
+                    "transfer into the compiled program (and a varying "
+                    "pinned device splits the compile cache per device) — "
+                    "move the transfer host-side to the dispatch seam, "
+                    "before the jitted entry",
+                )
+            )
     return findings
 
 

@@ -289,11 +289,20 @@ class FaultPolicy:
         codes[arms < 0] = FAULT_OK
         return codes
 
-    def grid_codes(self, sched_T: np.ndarray) -> np.ndarray:
-        """(T, B) fault codes for a wave schedule (arm ids, -1 = no wave)."""
+    def grid_codes(self, sched_T: np.ndarray, row_offset: int = 0) -> np.ndarray:
+        """(T, B) fault codes for a wave schedule (arm ids, -1 = no wave).
+
+        ``row_offset`` shifts the batch-row coordinate of every cell: a
+        worker dispatching rows ``[lo, lo+B)`` of a logically fused batch
+        passes ``row_offset=lo`` so its draws are bit-identical to the same
+        rows' draws in the single fused dispatch (the overlapped/fused
+        placement equivalence contract of the replica plane).
+        """
         T, B = sched_T.shape
         waves = np.broadcast_to(np.arange(T, dtype=np.int64)[:, None], (T, B))
-        rows = np.broadcast_to(np.arange(B, dtype=np.int64)[None, :], (T, B))
+        rows = np.broadcast_to(
+            (np.arange(B, dtype=np.int64) + int(row_offset))[None, :], (T, B)
+        )
         return self._codes(sched_T, waves, rows)
 
     def row_codes(self, arm_ids: np.ndarray, rows: np.ndarray,
@@ -303,17 +312,20 @@ class FaultPolicy:
         return self._codes(arm_ids, np.full(arm_ids.shape, wave, np.int64),
                            np.asarray(rows, np.int64))
 
-    def corrupt_grid(self, sched_T: np.ndarray) -> np.ndarray:
+    def corrupt_grid(self, sched_T: np.ndarray, row_offset: int = 0) -> np.ndarray:
         """(T, B) hash-drawn class per cell — the degraded 'response'.
 
         Response-independent by design: both planes can overwrite a
         degraded cell with the same class without knowing what the arm
-        would have said.
+        would have said. ``row_offset`` shifts batch-row coordinates the
+        same way :meth:`grid_codes` does.
         """
         T, B = sched_T.shape
         safe = np.maximum(sched_T, 0)
         waves = np.broadcast_to(np.arange(T, dtype=np.int64)[:, None], (T, B))
-        rows = np.broadcast_to(np.arange(B, dtype=np.int64)[None, :], (T, B))
+        rows = np.broadcast_to(
+            (np.arange(B, dtype=np.int64) + int(row_offset))[None, :], (T, B)
+        )
         h = _hash_cells(self.seed, self.epoch, safe, waves, rows, 2)
         return (h % np.uint64(self.num_classes)).astype(np.int64)
 

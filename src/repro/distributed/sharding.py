@@ -258,12 +258,15 @@ def replica_devices(replicas: int) -> list:
     """Device assignment for an R-replica serving plane.
 
     With more than one local device, replicas round-robin over the device
-    list (each :class:`~repro.serving.replica.ReplicaWorker` pins its wave
-    dispatches with ``jax.default_device``); on a single device the
-    assignment is ``None`` everywhere — placement is a no-op and the
-    ReplicaSet instead *fuses* same-budget replica waves along the batch
-    axis, the single-device degenerate of sharding the wave program's
-    (T, B) tables over a batch-axis device slice.
+    list: under ``ReplicaSet(placement="overlapped")`` each
+    :class:`~repro.serving.replica.ReplicaWorker`'s router pins its wave
+    dispatches to its assigned device (``jax.device_put`` of the padded
+    wave tables + the per-device jit executable), so R wave programs from
+    one drive cycle run concurrently. On a single device the assignment
+    is ``None`` everywhere — placement is a no-op and the ReplicaSet
+    instead *fuses* same-budget replica waves along the batch axis, the
+    single-device degenerate of sharding the wave program's (T, B) tables
+    over a batch-axis device slice.
     """
     devs = jax.devices()
     if len(devs) <= 1:

@@ -33,6 +33,7 @@ estimator so flaky arms replan away (combine with ``--drift-after`` or
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -63,8 +64,19 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve through an R-replica ReplicaSet (sharded "
-                         "admission, fused same-budget waves, shard-merged "
-                         "feedback); 1 = the plain BatchScheduler path")
+                         "admission, per-device overlapped or fused waves, "
+                         "shard-merged feedback); 1 = the plain "
+                         "BatchScheduler path")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force this many host (CPU) XLA devices so the "
+                         "replica plane can overlap per-device wave "
+                         "programs; 0 = whatever the process already has. "
+                         "Must take effect before JAX initializes its "
+                         "backend, so it is applied at the top of main()")
+    ap.add_argument("--placement", type=str, default="auto",
+                    choices=["auto", "overlapped", "fused", "inline"],
+                    help="replica wave placement (auto: overlapped when "
+                         ">1 device, else fused; see ReplicaSet)")
     ap.add_argument("--qps", type=float, default=0.0,
                     help="Poisson arrival rate; 0 = open the floodgates")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -87,6 +99,15 @@ def main() -> None:
                     help="comma-separated arm indices the fault policy "
                          "targets (default: all arms)")
     args = ap.parse_args()
+
+    if args.devices > 0:
+        # must land before the first backend touch (jax.devices() inside
+        # ReplicaSet); module imports alone don't initialize the backend
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}"
+        ).strip()
 
     wl = OracleWorkload(
         num_classes=args.classes, num_clusters=args.clusters, num_arms=args.arms
@@ -120,6 +141,7 @@ def main() -> None:
         sched = ReplicaSet(
             router, replicas=args.replicas, max_batch=args.max_batch,
             max_wait_s=args.max_wait_ms / 1e3, feedback=feedback,
+            placement=None if args.placement == "auto" else args.placement,
         )
         stragglers = sched.stragglers
     else:
@@ -222,7 +244,10 @@ def main() -> None:
     )
     if args.replicas > 1:
         print(
-            f"replica plane: R={st['replicas']} fused dispatches "
+            f"replica plane: R={st['replicas']} on "
+            f"{st['replica_devices']} device(s) [{sched.placement}] | "
+            f"overlapped dispatches {st['replica_overlapped']} "
+            f"({st['replica_overlapped_rows']} rows) | fused dispatches "
             f"{st['replica_fused']} ({st['replica_fused_rows']} rows) | "
             f"affinity spills {st['replica_spills']}"
         )

@@ -146,18 +146,22 @@ class PoolEngine:
         the router's all-cells speculative gather)."""
         return self._workload is not None
 
-    def fault_grid(self, sched_T: np.ndarray):
+    def fault_grid(self, sched_T: np.ndarray, row_offset: int = 0):
         """(codes, failed) for a wave schedule, or (None, None) when no
         active fault policy is attached. ``codes`` is the (T, B) int8 fault
         grid (see FAULT_* in repro.distributed.fault); ``failed`` marks
         cells whose arm produced no usable response (timeout or error —
-        silently-degraded cells still answer, just wrongly)."""
+        silently-degraded cells still answer, just wrongly).
+
+        ``row_offset`` positions this schedule's rows inside a logically
+        fused batch (overlapped replica dispatch) so per-worker draws match
+        the fused dispatch cell for cell."""
         policy = self.fault_policy
         if policy is None or not policy.active:
             return None, None
         from repro.distributed.fault import FAULT_ERROR, FAULT_TIMEOUT
 
-        codes = policy.grid_codes(sched_T)
+        codes = policy.grid_codes(sched_T, row_offset=row_offset)
         return codes, (codes == FAULT_TIMEOUT) | (codes == FAULT_ERROR)
 
     def fingerprint(self) -> bytes:

@@ -4,20 +4,34 @@ Everything before this module is one scheduler, one device, one Python
 process. This module carves the serving stack into the split the ROADMAP
 north-star ("heavy traffic from millions of users") demands:
 
-* **Data plane — replicated.** A :class:`ReplicaWorker` is one
+* **Data plane — replicated, with three placements.** A
+  :class:`ReplicaWorker` is one
   :class:`~repro.serving.scheduler.BatchScheduler` over its own
   :class:`~repro.serving.router.ThriftRouter` clone: one jitted wave
-  program set and one hot per-replica plan read path each. With more than
-  one local device, workers round-robin over the device list
-  (:func:`~repro.distributed.sharding.replica_devices`) and pin their
-  fused dispatches with ``jax.default_device``; on a single device the
-  :class:`ReplicaSet` instead **fuses** same-budget staged groups from
-  several workers into ONE ``begin_route`` along the batch axis — the
-  single-device degenerate of sharding the wave program's (T, B) tables
-  over a batch-axis device slice (see
-  :func:`~repro.distributed.sharding.replica_mesh` for the mesh a
-  ``jax.shard_map`` lowering binds to), and each worker adopts a
-  :class:`_RouteView` slice of the fused route.
+  program set and one hot per-replica plan read path each. How the
+  workers' wave programs reach silicon is ``ReplicaSet(placement=...)``:
+
+  - ``"overlapped"`` (default with >1 local device) — each worker pins to
+    its own device (:func:`~repro.distributed.sharding.replica_devices`
+    round-robins the device list); every drive cycle launches each
+    worker's wave program asynchronously on its device
+    (``jax.device_put`` of the padded tables + the per-device jit
+    executable) and overlaps the dispatches — R device programs run
+    concurrently while the host finalizes in arrival order. Per-worker
+    fault draws carry the worker's fused-concatenation row offset, so
+    overlapped routes are bit-identical to the fused dispatch of the same
+    admission wave (``tests/test_replica_devices.py`` pins this, faults
+    included).
+  - ``"fused"`` (default with one device) — same-budget staged groups
+    from several workers concatenate into ONE ``begin_route`` along the
+    batch axis — the single-device degenerate of sharding the wave
+    program's (T, B) tables over a batch-axis device slice (see
+    :func:`~repro.distributed.sharding.replica_mesh` for the mesh a
+    ``jax.shard_map`` lowering binds to) — and each worker adopts a
+    :class:`_RouteView` slice of the fused route.
+  - ``"inline"`` (the R=1 default) — each worker launches its own groups
+    the instant they admit, exactly like a standalone scheduler; this is
+    the bit-identity anchor against :class:`BatchScheduler`.
 * **Admission — sharded by cluster affinity.** ``submit_many`` scatters a
   columnar block across workers by a splitmix hash of each query's
   cluster index, so one cluster's traffic keeps hitting one replica and
@@ -57,7 +71,18 @@ row index), so a fused route under an active
 :class:`~repro.distributed.fault.FaultPolicy` draws different (equally
 deterministic) faults than the same rows dispatched unfused. R=1 never
 fuses, so the equivalence contract is unaffected; at R>1 the fault plane
-remains deterministic given the admission layout.
+remains deterministic given the admission layout — and the overlapped
+placement passes each worker's concatenation offset as
+``fault_row_offset``, so fused and overlapped placements of the same
+admission wave draw the *same* faults cell for cell.
+
+**Overlapped ≡ fused equivalence caveat.** The per-request bit-identity
+between ``placement="fused"`` and ``placement="overlapped"`` holds for
+deterministic (tabular / self-hosted) arms, where a row's response is a
+function of the row alone. A *pooled* oracle engine draws responses from
+one shared rng stream that advances per engine call, so one fused call
+and R per-worker calls consume the stream differently — equally
+deterministic, but not cell-identical.
 """
 from __future__ import annotations
 
@@ -309,13 +334,21 @@ class ReplicaSet:
         1..R-1 get clones sharing its engine, estimator, selector and
         PlanService (the shared control plane).
       replicas: R. ``replicas=1`` is bit-identical to ``BatchScheduler``.
-      fuse_waves: fuse same-budget staged groups from several workers into
-        one wave program per drive cycle. Default: on when R > 1 and the
-        process has a single device (multi-device placement already
-        parallelizes; fusing across devices would serialize them).
+      placement: how worker wave programs reach devices —
+        ``"overlapped"`` (per-device async dispatch, overlapped across
+        workers), ``"fused"`` (same-budget groups concatenate into one
+        single-device dispatch), or ``"inline"`` (each worker launches
+        alone, the standalone-scheduler cadence). Default (None): R=1
+        picks ``"inline"`` (the bit-identity anchor), R>1 picks
+        ``"overlapped"`` when the process has more than one device and
+        ``"fused"`` otherwise.
+      fuse_waves: legacy boolean spelling of ``placement`` (True →
+        ``"fused"``, False → ``"inline"``); ignored when ``placement`` is
+        given. ``self.fuse_waves`` stays readable as "this set fuses".
       spill_factor: a replica may be assigned at most
         ``ceil(spill_factor * n / R)`` rows of one admitted block by
-        affinity; the excess spills to the least-loaded replica.
+        affinity; the excess spills row by row to the least-loaded other
+        replicas (never back to the over-cap home).
       feedback / ledger / remaining kwargs: as on :class:`BatchScheduler`
         (``max_batch`` etc. apply per worker; ``feedback``/``ledger``
         instances are shared set-wide).
@@ -337,6 +370,7 @@ class ReplicaSet:
         feedback=None,
         ledger=None,
         budget_tiers=None,
+        placement: Optional[str] = None,
         fuse_waves: Optional[bool] = None,
         spill_factor: float = 1.5,
     ):
@@ -353,19 +387,37 @@ class ReplicaSet:
         if ledger is True:
             ledger = CostLedger(num_arms=len(router.engine.arms))
         self.ledger: Optional[CostLedger] = ledger or None
-        if fuse_waves is None:
-            fuse_waves = replicas > 1 and len(jax.devices()) <= 1
-        self.fuse_waves = bool(fuse_waves)
+        if placement is None and fuse_waves is not None:
+            placement = "fused" if fuse_waves else "inline"
+        if placement is None:
+            if replicas == 1:
+                placement = "inline"
+            elif len(jax.devices()) > 1:
+                placement = "overlapped"
+            else:
+                placement = "fused"
+        if placement not in ("overlapped", "fused", "inline"):
+            raise ValueError(f"unknown placement {placement!r}")
+        self.placement = placement
+        self.fuse_waves = placement == "fused"
         self.spill_factor = float(spill_factor)
         self.speculation_threshold = float(speculation_threshold)
         self._next_id = 0
         self.spills = 0
         self.fused_dispatches = 0
         self.fused_rows = 0
+        self.overlapped_dispatches = 0
+        self.overlapped_rows = 0
         devices = replica_devices(replicas)
+        self.device_count = len({str(d) for d in devices if d is not None}) or 1
         self.workers: List[ReplicaWorker] = []
         for i in range(replicas):
             r = router if i == 0 else self._clone_router(router)
+            # per-worker device pin: in overlapped placement the worker's
+            # wave dispatches (and prewarm) land on its own device, so R
+            # device programs from one drive cycle run concurrently; other
+            # placements clear any pin a prior set left on a reused router
+            r.device = devices[i] if placement == "overlapped" else None
             local = (
                 _ShardLog(self.feedback, worker=i)
                 if self.feedback is not None else None
@@ -407,7 +459,15 @@ class ReplicaSet:
     def _assign(self, emb: np.ndarray, n: int) -> np.ndarray:
         """Replica id per row: cluster-affinity hash, with per-block spill
         of the overflow beyond ``spill_factor`` x fair share to the least
-        loaded replica (affinity keeps plan reads hot; spill caps skew)."""
+        loaded replicas (affinity keeps plan reads hot; spill caps skew).
+
+        Spill membership is decided once, from the pre-spill assignment:
+        each over-cap replica keeps its FIFO prefix and sheds its tail.
+        Spilled rows then place one at a time on the least-loaded *other*
+        replica (a row can never land back on an over-cap home, and a row
+        that already spilled is never re-spilled by a later overflow — the
+        double-count that used to inflate ``replica_spills`` when several
+        replicas overflowed into each other)."""
         R = self.replicas
         if R == 1:
             return np.zeros(n, np.int64)
@@ -415,14 +475,22 @@ class ReplicaSet:
         assign = _affinity_shard(idx, R)
         cap = int(np.ceil(self.spill_factor * n / R))
         counts = np.bincount(assign, minlength=R)
+        over = np.flatnonzero(counts > cap)
+        if over.size == 0:
+            return assign
         load = np.asarray([w.backlog for w in self.workers], np.int64)
-        for r in np.flatnonzero(counts > cap):
-            rows = np.flatnonzero(assign == r)
-            spill = rows[cap:]       # FIFO prefix stays home, tail spills
-            totals = load + np.bincount(assign, minlength=R)
-            totals[r] = np.iinfo(np.int64).max
-            tgt = int(np.argmin(totals))
-            assign[spill] = tgt
+        # spill sets fixed from the ORIGINAL assignment; homes settle at cap
+        spill_sets = [(r, np.flatnonzero(assign == r)[cap:]) for r in over]
+        totals = load + np.minimum(counts, cap)
+        big = np.iinfo(np.int64).max
+        for r, spill in spill_sets:
+            masked = totals.copy()
+            masked[r] = big                     # never spill to self
+            for row in spill:
+                tgt = int(np.argmin(masked))
+                assign[row] = tgt
+                masked[tgt] += 1
+                totals[tgt] += 1
             self.spills += int(spill.size)
         return assign
 
@@ -538,12 +606,15 @@ class ReplicaSet:
     # Gang driving
     # ------------------------------------------------------------------
     def _dispatch(self, due: List[ReplicaWorker]) -> None:
-        """Admit one batch on each due worker. Unfused: the worker
-        launches inline (bit-identical to a standalone scheduler). Fused:
-        workers stage their budget groups, then same-budget groups across
-        workers concatenate into one ``begin_route`` along the batch axis
-        and each worker adopts its row-slice view."""
-        if not self.fuse_waves:
+        """Admit one batch on each due worker. Inline placement: the
+        worker launches the moment it admits (bit-identical to a
+        standalone scheduler). Otherwise workers stage their budget
+        groups, then per budget either the staged groups concatenate into
+        one ``begin_route`` along the batch axis (fused) and each worker
+        adopts its row-slice view, or each worker's group launches
+        asynchronously on its own device (overlapped) with its
+        fused-concatenation row offset feeding the fault draws."""
+        if self.placement == "inline":
             for w in due:
                 w.sched._dispatch_batch()
             return
@@ -564,7 +635,9 @@ class ReplicaSet:
             # scheduler groups are uniform-budget by construction
             by_budget.setdefault(float(g.budgets[0]), []).append((w, g))
         for entries in by_budget.values():
-            if len(entries) == 1:
+            if self.placement == "overlapped":
+                self._launch_overlapped(entries)
+            elif len(entries) == 1:
                 w, g = entries[0]
                 w.sched._launch(
                     g.payloads, g.emb, g.budgets, g.arrival, g.part_sinks,
@@ -576,6 +649,33 @@ class ReplicaSet:
                 )
             else:
                 self._launch_fused(entries)
+
+    def _launch_overlapped(self, entries: List[tuple]) -> None:
+        """Per-device async dispatch of one budget's staged groups.
+
+        Walks the entries in the same order the fused placement would
+        concatenate them, launching each worker's wave program through its
+        *own* (device-pinned) router — all R device programs are in flight
+        before any result is consumed, so their device compute overlaps
+        while retirement stays in per-worker arrival order. Each launch
+        carries the worker's concatenation offset as ``fault_row_offset``:
+        under an active FaultPolicy the overlapped dispatch draws the same
+        fault grid, cell for cell, as the fused dispatch of the same
+        admission wave."""
+        launched = []
+        lo = 0
+        for w, g in entries:
+            pending = w.router.begin_route(
+                g.payloads, g.emb, g.budgets, mode=g.mode,
+                speculation_threshold=self.speculation_threshold,
+                fault_row_offset=lo,
+            )
+            launched.append((w, g, pending))
+            lo += g.n
+        self.overlapped_dispatches += len(entries)
+        self.overlapped_rows += lo
+        for w, g, pending in launched:
+            w.sched._adopt(pending, g)
 
     def _launch_fused(self, entries: List[tuple]) -> None:
         w0: ReplicaWorker = entries[0][0]
@@ -652,6 +752,23 @@ class ReplicaSet:
         if not fut.done():
             self.drain()
 
+    def reconcile_ledger(self) -> int:
+        """Set-wide restart reconciliation of the shared ledger: release
+        every id-tracked reservation no worker's queue or flight holds
+        (see :meth:`BatchScheduler.reconcile_ledger`). One ledger pass —
+        the live set is the union across workers."""
+        if self.ledger is None:
+            return 0
+        live: List[int] = []
+        for w in self.workers:
+            for seg in w.sched._queue:
+                if seg.ids is not None:
+                    live.extend(np.asarray(seg.ids, np.int64).ravel().tolist())
+            for group in w.sched._inflight:
+                if group.ids is not None:
+                    live.extend(np.asarray(group.ids, np.int64).ravel().tolist())
+        return self.ledger.release_orphans(live)
+
     # ------------------------------------------------------------------
     # Aggregated observability
     # ------------------------------------------------------------------
@@ -685,6 +802,9 @@ class ReplicaSet:
         out["replica_spills"] = self.spills
         out["replica_fused"] = self.fused_dispatches
         out["replica_fused_rows"] = self.fused_rows
+        out["replica_devices"] = self.device_count
+        out["replica_overlapped"] = self.overlapped_dispatches
+        out["replica_overlapped_rows"] = self.overlapped_rows
         return out
 
     @property
@@ -733,11 +853,28 @@ class ReplicaSet:
                         all_batch_buckets: bool = False) -> int:
         """Compile the wave-program buckets serving traffic will hit: the
         per-worker admission size, plus — under fusion — the fused batch
-        bucket (R workers' admissions concatenated). One shared program
-        cache serves every replica (module-level jit), so this counts each
-        bucket once."""
+        bucket (R workers' admissions concatenated). The jit cache holds
+        one executable per (bucket, device), so overlapped placement warms
+        every distinct pinned device (via each worker's own router);
+        single-device placements warm each bucket once through the shared
+        module-level cache. Overlapped dispatches are per (worker,
+        budget-group) — raggedness is intrinsic, not a flush corner case —
+        so that branch always warms every batch bucket up to the admission
+        size."""
         s0 = self.workers[0].sched
         per = s0.max_batch * s0.coalesce
+        if self.placement == "overlapped":
+            n = 0
+            seen = set()
+            for w in self.workers:
+                key = str(w.router.device)
+                if key in seen:
+                    continue
+                seen.add(key)
+                n += w.router.prewarm_compile(
+                    per, max_waves=max_waves, all_batch_buckets=True,
+                )
+            return n
         n = self.router.prewarm_compile(
             per, max_waves=max_waves, all_batch_buckets=all_batch_buckets
         )

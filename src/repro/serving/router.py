@@ -46,6 +46,7 @@ Serving pipeline per batch (Figure 1 of the paper, batched for TPU):
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, List, Optional
 
@@ -343,6 +344,9 @@ class PendingRoute:
         self.payloads = state.pop("payloads")
         self.stop_margin = state.pop("stop_margin")
         self.rng = state.pop("rng")
+        # batch-row offset of this group inside a logically fused batch —
+        # keeps per-worker fault draws identical to the fused dispatch's
+        self.fault_row_offset = int(state.pop("fault_row_offset", 0))
         assert not state, f"unknown PendingRoute state {sorted(state)}"
         self.B = int(self.budgets.shape[0])
         self.T = int(self.sched_T.shape[0])
@@ -358,7 +362,9 @@ class PendingRoute:
         router, T, B = self.router, self.T, self.B
         sched_T, payloads = self.sched_T, self.payloads
         engine = router.engine
-        codes, failed = engine.fault_grid(sched_T)
+        codes, failed = engine.fault_grid(
+            sched_T, row_offset=self.fault_row_offset
+        )
         self._orig_sched_T = sched_T
         self._codes, self._failed = codes, failed
         # Speculative response gather: one heterogeneous-arm engine call for
@@ -386,7 +392,11 @@ class PendingRoute:
                 # hash-drawn class — response-independent, so the reference
                 # plane corrupts the same cells to the same classes
                 resp_T = np.where(
-                    degr, engine.fault_policy.corrupt_grid(sched_T), resp_T
+                    degr,
+                    engine.fault_policy.corrupt_grid(
+                        sched_T, row_offset=self.fault_row_offset
+                    ),
+                    resp_T,
                 )
         self.resp_T = resp_T
 
@@ -424,7 +434,21 @@ class PendingRoute:
         empty_p = np.zeros(Bp, np.float64)
         empty_p[:B] = self.empty
 
-        with enable_x64():
+        # Device pinning rides jax.default_device, not an explicit
+        # jax.device_put: committing the seven padded tables per dispatch
+        # measures ~5x the whole dispatch cost on the CPU backend, while
+        # the context manager just steers where jit places the uncommitted
+        # numpy args (~free) and still caches one executable per (bucket,
+        # device). Placement stays inside the x64 context — materializing
+        # f64 arrays outside it would silently downcast to f32 and change
+        # the wave program's numerics. No host references to the staged
+        # buffers are retained (args are locals), so the carry is
+        # donation-safe — XLA may alias the input buffers freely.
+        ctx = (
+            jax.default_device(router.device)
+            if router.device is not None else contextlib.nullcontext()
+        )
+        with enable_x64(), ctx:
             self._dev = _wave_scan(
                 sched_p, resp_p, w_p, res_p, src_p, valid_p, empty_p,
                 self.stop_margin,
@@ -517,7 +541,9 @@ class PendingRoute:
         schedule is what keeps the two planes bit-identical under faults.
         """
         engine = self.router.engine
-        codes, failed = engine.fault_grid(self.sched_T)
+        codes, failed = engine.fault_grid(
+            self.sched_T, row_offset=self.fault_row_offset
+        )
         self._orig_sched_T = self.sched_T
         self._codes, self._failed = codes, failed
         self._rank = self._navail = None
@@ -529,7 +555,11 @@ class PendingRoute:
         corrupt = None
         if degr.any():
             corrupt = np.where(
-                degr, engine.fault_policy.corrupt_grid(self.sched_T), -1
+                degr,
+                engine.fault_policy.corrupt_grid(
+                    self.sched_T, row_offset=self.fault_row_offset
+                ),
+                -1,
             )
         if self.router.failover:
             src, valid, self._rank, self._navail = failover_gather(
@@ -722,6 +752,13 @@ class ThriftRouter:
         self.use_kernel = bool(use_kernel)
         self.jit_waves = bool(jit_waves)
         self.failover = bool(failover)
+        # Optional device pin for the wave program. None (default) leaves
+        # placement to JAX (the process default device). A ReplicaSet in
+        # overlapped placement sets this per worker so each worker's wave
+        # dispatches land on its own device and run concurrently; jit then
+        # holds one executable per (bucket, device) pair, so prewarming
+        # happens per pinned device (see ReplicaSet.prewarm_compile).
+        self.device = None
         self.selector = ThriftLLM(
             engine.costs, eps=eps, delta=delta, seed=seed, use_kernel=use_kernel
         )
@@ -854,6 +891,7 @@ class ThriftRouter:
         rng: Optional[np.random.Generator] = None,
         mode: str = "auto",
         speculation_threshold: float = 0.0,
+        fault_row_offset: int = 0,
     ) -> "PendingRoute":
         """Start routing a batch and return a :class:`PendingRoute` handle.
 
@@ -878,6 +916,11 @@ class ThriftRouter:
             speculative metered invocations. The default 0.0 speculates
             only when speculation is entirely free (no metered arm is
             scheduled).
+          fault_row_offset: this batch's starting row inside a logically
+            fused batch. A ReplicaSet dispatching the same admission wave
+            as R overlapped per-device programs passes each worker's
+            concatenation offset so fault draws (keyed on batch row) are
+            bit-identical to the single fused dispatch.
         """
         B = len(queries)
         budgets = np.broadcast_to(np.asarray(budget, np.float64), (B,))
@@ -907,6 +950,7 @@ class ThriftRouter:
             payloads=self.engine.prepare_payloads(queries),
             stop_margin=float(stop_margin), rng=rng, spec_cost=spec_cost,
             plan_version=getattr(self.estimator, "plan_version", 0),
+            fault_row_offset=fault_row_offset,
         )
         if kind == "jit":
             pending._dispatch_jit()
@@ -941,9 +985,20 @@ class ThriftRouter:
             b_buckets = [_bucket(int(max_batch), base=8)]
         waves = int(max_waves) if max_waves is not None else len(self.engine.arms)
         t_buckets = sorted({_bucket(t, base=4) for t in range(1, max(1, waves) + 1)})
+        # jit caches one executable per (bucket, device): a router pinned
+        # to a device must warm that device's cache entries, not the
+        # default device's — same jax.default_device placement as the
+        # dispatch seam (_dispatch_jit), so the warmed entry is exactly
+        # the one traffic hits (the context is single-use: built per
+        # bucket pair)
         for Bp in b_buckets:
             for Tp in t_buckets:
-                with enable_x64():
+                ctx = (
+                    jax.default_device(self.device)
+                    if self.device is not None
+                    else contextlib.nullcontext()
+                )
+                with enable_x64(), ctx:
                     _wave_scan(
                         np.full((Tp, Bp), -1, np.int32),
                         np.full((Tp, Bp), -1, np.int32),

@@ -119,7 +119,12 @@ class CostLedger:
     Outstanding admission reservations are carried across (conservative:
     the restarted process may never settle them, but ``spent + reserved <=
     limit`` keeps holding, which is the invariant that matters); token
-    buckets restart full (a restart is a quiet period).
+    buckets restart full (a restart is a quiet period). Reservations are
+    tracked per request id, so the restarted scheduler then reconciles —
+    :meth:`release_orphans` (or the scheduler-level
+    ``reconcile_ledger()``) releases every carried reservation whose
+    request is not in the live queue, restoring the tenant's headroom
+    instead of holding it hostage forever.
     """
 
     def __init__(
@@ -163,6 +168,9 @@ class CostLedger:
                 "tokens": self._default_burst(qps),
                 "stamp": None,
                 "by_arm": np.zeros(self.num_arms, np.float64),
+                # outstanding reservations by request id — what lets a
+                # restarted scheduler release orphans it will never settle
+                "resv": {},
             }
         return ent
 
@@ -213,30 +221,40 @@ class CostLedger:
         ent = self._tenant(tenant)
         return ent["limit"] - ent["spent"] - ent["reserved"]
 
-    def try_reserve(self, tenant: str, amount: float) -> bool:
+    def try_reserve(self, tenant: str, amount: float,
+                    request_id: Optional[int] = None) -> bool:
         """Reserve ``amount`` against the tenant's remaining headroom;
-        False (nothing reserved) when it does not fit."""
+        False (nothing reserved) when it does not fit. With a
+        ``request_id`` the reservation is tracked by id, so a restart can
+        reconcile it against a live queue (:meth:`release_orphans`)."""
         ent = self._tenant(tenant)
         if amount > ent["limit"] - ent["spent"] - ent["reserved"]:
             return False
         ent["reserved"] += float(amount)
         ent["reserved_n"] += 1
+        if request_id is not None:
+            ent["resv"][int(request_id)] = float(amount)
         self.admitted += 1
         return True
 
     def settle(self, tenant: str, reserved: float, charged: float,
                arm_spend: Optional[np.ndarray] = None,
-               requests: int = 1) -> None:
+               requests: int = 1, request_ids=None) -> None:
         """Release an admission reservation and commit the realized charge
-        (with its exact per-arm attribution)."""
+        (with its exact per-arm attribution). ``request_ids`` retires the
+        matching id-tracked reservations (ids never tracked are ignored)."""
         ent = self._tenant(tenant)
         ent["reserved"] -= float(reserved)
         ent["reserved_n"] -= int(requests)
+        if request_ids is not None and ent["resv"]:
+            for rid in np.asarray(request_ids, np.int64).ravel().tolist():
+                ent["resv"].pop(int(rid), None)
         if ent["reserved_n"] <= 0:
             # no reservation outstanding: snap the float residue of the
             # add-one-by-one / release-as-a-sum asymmetry to an exact zero
             ent["reserved"] = 0.0
             ent["reserved_n"] = 0
+            ent["resv"].clear()
         ent["spent"] += float(charged)
         ent["requests"] += int(requests)
         if arm_spend is not None:
@@ -244,6 +262,36 @@ class CostLedger:
                 ent["by_arm"] = np.zeros(np.asarray(arm_spend).size, np.float64)
             ent["by_arm"] += arm_spend
         self.admitted -= int(requests)
+
+    def release_orphans(self, active_request_ids) -> int:
+        """Release id-tracked reservations whose request is not alive.
+
+        The restart reconciliation: :meth:`restore` conservatively carries
+        the dead process's outstanding reservations (so ``spent + reserved
+        <= limit`` cannot be violated by the handoff), but nothing will
+        ever settle them — without reconciliation they shrink the tenant's
+        budget forever. A restarted scheduler passes the request ids it
+        actually holds (queued + in flight); every tracked reservation
+        outside that set is released exactly (amounts were recorded per
+        id, so no float residue leaks into ``reserved``). Returns the
+        number of reservations released."""
+        ids = list(active_request_ids)
+        active = {
+            int(r) for r in np.asarray(ids, np.int64).ravel().tolist()
+        } if ids else set()
+        released = 0
+        for ent in self._t.values():
+            orphans = [rid for rid in ent["resv"] if rid not in active]
+            for rid in orphans:
+                ent["reserved"] -= ent["resv"].pop(rid)
+                ent["reserved_n"] -= 1
+                self.admitted -= 1
+                released += 1
+            if ent["reserved_n"] <= 0:
+                ent["reserved"] = 0.0
+                ent["reserved_n"] = 0
+                ent["resv"].clear()
+        return released
 
     def note_rejected(self, tenant: str) -> None:
         self._tenant(tenant)["rejected"] += 1
@@ -258,6 +306,7 @@ class CostLedger:
         ent = self._tenant(tenant)
         out = dict(ent)
         out["by_arm"] = ent["by_arm"].copy()
+        out["resv"] = dict(ent["resv"])
         return out
 
     def tenants(self) -> Dict[str, Dict[str, Any]]:
@@ -323,6 +372,8 @@ class CostLedger:
                     "rate_limit": enc(ent["rate_limit"]),
                     "burst": enc(ent["burst"]),
                     "by_arm": ent["by_arm"].tolist(),
+                    # JSON object keys must be strings; restore re-ints them
+                    "resv": {str(rid): amt for rid, amt in ent["resv"].items()},
                 }
                 for name, ent in self._t.items()
             },
@@ -361,6 +412,10 @@ class CostLedger:
             ent["burst"] = dec(row.get("burst"))
             ent["tokens"] = ent["burst"]
             ent["stamp"] = None
+            ent["resv"] = {
+                int(rid): float(amt)
+                for rid, amt in row.get("resv", {}).items()
+            }
             by_arm = np.asarray(row.get("by_arm", []), np.float64)
             if by_arm.size:
                 ent["by_arm"] = by_arm
@@ -975,7 +1030,7 @@ class BatchScheduler:
         return best
 
     def _admit_ledger(self, budgets, tenants, arrival, part_sinks, part_id,
-                      part_pos):
+                      part_pos, ids=None):
         """Hard budget enforcement at the admission boundary.
 
         Sequentially (arrival order — admission must not depend on how rows
@@ -995,15 +1050,17 @@ class BatchScheduler:
         for i in range(n):
             tenant = tenants[i]
             amount = float(budgets[i])
+            rid = int(ids[i]) if ids is not None else None
             if not led.allow_request(tenant):
                 keep[i] = False
                 led.note_rate_limited(tenant)
                 continue
-            if led.try_reserve(tenant, amount):
+            if led.try_reserve(tenant, amount, request_id=rid):
                 reserved[i] = amount
                 continue
             down = self._downgrade_budget(tenant, amount)
-            if down is not None and led.try_reserve(tenant, down):
+            if down is not None and led.try_reserve(tenant, down,
+                                                    request_id=rid):
                 budgets[i] = reserved[i] = down
                 led.note_downgraded(tenant)
                 continue
@@ -1040,6 +1097,7 @@ class BatchScheduler:
         if self.ledger is not None:
             admitted, budgets, reserved = self._admit_ledger(
                 budgets, tenants, arrival, part_sinks, part_id, part_pos,
+                ids=ids,
             )
             if admitted.size < budgets.shape[0]:
                 if admitted.size == 0:
@@ -1241,7 +1299,30 @@ class BatchScheduler:
                 charged=float(res.costs[sel].sum()),
                 arm_spend=arm_spend,
                 requests=int(rows.size),
+                request_ids=group.ids[rows] if group.ids is not None else None,
             )
+
+    def reconcile_ledger(self) -> int:
+        """Release ledger reservations no live request backs.
+
+        The restart handshake: after ``CostLedger.restore()`` the dead
+        process's admission reservations are still held (conservatively —
+        the invariant ``spent + reserved <= limit`` must survive the
+        handoff). A scheduler bound to the restored ledger calls this once
+        to reconcile: every id-tracked reservation not matching a request
+        this scheduler actually holds (queued or in flight) is released
+        exactly. Returns the number of reservations released; 0 without a
+        ledger."""
+        if self.ledger is None:
+            return 0
+        live: List[int] = []
+        for seg in self._queue:
+            if seg.ids is not None:
+                live.extend(np.asarray(seg.ids, np.int64).ravel().tolist())
+        for group in self._inflight:
+            if group.ids is not None:
+                live.extend(np.asarray(group.ids, np.int64).ravel().tolist())
+        return self.ledger.release_orphans(live)
 
     # ------------------------------------------------------------------
     # Driving
@@ -1335,6 +1416,7 @@ class BatchScheduler:
         if self.ledger is not None:
             admitted, budgets, reserved = self._admit_ledger(
                 budgets, tenants, arrival, part_sinks, part_id, part_pos,
+                ids=ids,
             )
             if admitted.size < budgets.shape[0]:
                 if admitted.size == 0:

@@ -35,3 +35,12 @@ def caller(x):
 
 def churny(x):
     return windowed(x, dims=(len(x), 1))  # FIRES: recompile-risk
+
+
+def _stage_on(v):
+    return jax.device_put(v, None)  # FIRES: recompile-risk
+
+
+@jax.jit
+def pinned(x):
+    return _stage_on(x) * 2.0

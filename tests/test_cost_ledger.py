@@ -384,3 +384,113 @@ def test_replica_set_settles_shared_ledger():
         assert np.isclose(ent["by_arm"].sum(), ent["spent"],
                           rtol=1e-12, atol=1e-18)
     assert rset.stats["ledger_rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Restart reconciliation: restore -> release_orphans -> settle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10**6), st.integers(8, 48))
+def test_restore_release_orphans_settle_invariant(seed, n):
+    """The restart-reconciliation property: snapshot a ledger with
+    reservations in flight, restore it in a fresh process, release the
+    orphans via ``reconcile_ledger`` BEFORE admitting new traffic, then
+    serve and settle a full stream. ``spent + reserved <= limit`` holds
+    per tenant at every boundary, every id-tracked reservation is either
+    settled by its own scheduler or released by the reconcile pass, and
+    the reclaimed headroom is actually usable (the re-run stream admits)."""
+    import json
+
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, _QEMB.shape[0], size=n)
+    budgets = rng.choice(_TIERS, size=n)
+    tenants = rng.choice(_TENANTS, size=n)
+    limit = float(_TIERS[-1]) * n
+    ledger = CostLedger(num_arms=len(_ENGINE.arms))
+    for t in _TENANTS:
+        ledger.set_limit(str(t), limit)
+    sched = _sched(ledger=ledger, max_batch=8)
+    sched.submit_many(rows, _QEMB[rows], budgets, tenant=tenants)
+    sched._dispatch_batch()                    # reservations outstanding
+    orphaned = 0
+    for ent in ledger.tenants().values():
+        assert ent["spent"] + ent["reserved"] <= limit + 1e-12
+        # id-tracked ledger: the resv map tiles the reserved total exactly
+        assert len(ent["resv"]) == ent["reserved_n"]
+        assert np.isclose(sum(ent["resv"].values()), ent["reserved"],
+                          rtol=1e-12, atol=1e-18)
+        orphaned += ent["reserved_n"]
+
+    # process dies; the snapshot (resv map included) crosses the boundary
+    payload = json.loads(json.dumps(ledger.snapshot(), allow_nan=False))
+    led2 = CostLedger.restore(payload)
+    sched2 = _sched(ledger=led2, max_batch=8)
+    released = sched2.reconcile_ledger()       # before any new traffic
+    assert released == orphaned
+    for ent in led2.tenants().values():
+        assert ent["reserved"] == 0.0 and ent["reserved_n"] == 0
+        assert not ent["resv"]
+        assert ent["spent"] + ent["reserved"] <= limit + 1e-12
+
+    blk = sched2.submit_many(rows, _QEMB[rows], budgets, tenant=tenants)
+    sched2.drain()
+    assert blk.done()
+    for ent in led2.tenants().values():
+        assert ent["spent"] + ent["reserved"] <= limit + 1e-12
+        assert ent["reserved"] == 0.0 and not ent["resv"]
+    # a second reconcile on a settled, idle ledger is a no-op
+    assert sched2.reconcile_ledger() == 0
+
+
+def test_reconcile_keeps_live_reservations():
+    """reconcile_ledger on a scheduler whose own batches are in flight
+    releases nothing: every reservation is id-tracked to a queued or
+    in-flight request, so the live set covers them all."""
+    rng = np.random.default_rng(29)
+    rows = rng.integers(0, _QEMB.shape[0], size=40)
+    budgets = rng.choice(_TIERS, size=40)
+    ledger = CostLedger(num_arms=len(_ENGINE.arms))
+    ledger.set_limit("acme", float(_TIERS[-1]) * 40)
+    sched = _sched(ledger=ledger, max_batch=8)
+    sched.submit_many(rows, _QEMB[rows], budgets, tenant="acme")
+    sched._dispatch_batch()
+    held = ledger.tenant("acme")["reserved"]
+    assert held > 0.0
+    assert sched.reconcile_ledger() == 0       # everything is live
+    assert ledger.tenant("acme")["reserved"] == held
+    sched.drain()
+    assert ledger.tenant("acme")["reserved"] == 0.0
+
+
+def test_replica_set_reconcile_releases_restored_orphans():
+    """The set-wide reconcile: a ReplicaSet restarted onto a restored
+    ledger releases the dead process's reservations in one pass and then
+    serves the stream inside the reclaimed headroom."""
+    import json
+
+    from repro.serving import ReplicaSet
+
+    rng = np.random.default_rng(31)
+    rows = rng.integers(0, _QEMB.shape[0], size=48)
+    budgets = rng.choice(_TIERS, size=48)
+    limit = float(_TIERS[-1]) * 48
+    ledger = CostLedger(num_arms=len(_ENGINE.arms))
+    ledger.set_limit("acme", limit)
+    sched = _sched(ledger=ledger, max_batch=16)
+    sched.submit_many(rows, _QEMB[rows], budgets, tenant="acme")
+    sched._dispatch_batch()
+    assert ledger.tenant("acme")["reserved"] > 0.0
+
+    led2 = CostLedger.restore(json.loads(json.dumps(ledger.snapshot())))
+    rset = ReplicaSet(_ROUTER, replicas=3, max_batch=16, max_wait_s=0.0,
+                      ledger=led2, budget_tiers=_TIERS.tolist())
+    assert rset.reconcile_ledger() > 0
+    assert led2.tenant("acme")["reserved"] == 0.0
+    blk = rset.submit_many(rows, _QEMB[rows], budgets, tenant="acme")
+    rset.drain()
+    assert blk.done()
+    ent = led2.tenant("acme")
+    assert ent["spent"] + ent["reserved"] <= limit + 1e-12
+    assert ent["reserved"] == 0.0

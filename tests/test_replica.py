@@ -268,6 +268,36 @@ def test_affinity_is_sticky_and_spill_caps_skew():
     assert blk.done() and (blk.predictions >= 0).all()
 
 
+def test_spill_multi_overflow_no_double_count_never_self_spill():
+    """Regression: when SEVERAL replicas overflow in one block, each sheds
+    exactly its own tail once — the spill counter equals the true excess
+    (it used to double-count rows that landed on another over-cap home and
+    were then re-spilled), every over-cap home ends exactly at cap, and no
+    spilled row lands back on its own home."""
+    engine, router, qemb, _ = _make_pool()
+    rset = ReplicaSet(router, replicas=4, max_batch=16, max_wait_s=0.0,
+                      spill_factor=1.0)
+    # two embeddings with DISTINCT affinity homes, 32 rows each: both
+    # homes overflow the cap = ceil(1.0 * 64 / 4) = 16 simultaneously
+    homes = {int(rset._assign(qemb[i:i + 1], 1)[0]): i
+             for i in range(qemb.shape[0])}
+    (h1, i1), (h2, i2) = list(homes.items())[:2]
+    assert h1 != h2
+    emb = np.concatenate([np.repeat(qemb[i1:i1 + 1], 32, axis=0),
+                          np.repeat(qemb[i2:i2 + 1], 32, axis=0)])
+    before = rset.spills
+    assign = rset._assign(emb, 64)
+    cap = int(np.ceil(rset.spill_factor * 64 / 4))
+    counts = np.bincount(assign, minlength=4)
+    assert counts[h1] == cap and counts[h2] == cap   # prefixes stay home
+    assert rset.spills - before == 64 - 2 * cap      # counted once each
+    # the shed tails went to the two idle replicas, not each other's home
+    tails = np.concatenate([assign[:32][assign[:32] != h1],
+                            assign[32:][assign[32:] != h2]])
+    assert not np.isin(tails, [h1, h2]).any()
+    assert counts.sum() == 64
+
+
 # ---------------------------------------------------------------------------
 # Shard-merged feedback: replica-plane folds == single-log folds
 # ---------------------------------------------------------------------------

@@ -1,0 +1,260 @@
+"""Multi-device replica placement (repro/serving/replica.py, overlapped).
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+device stage does) to exercise the real multi-device plane; on a plain
+single-device process the multi-device cases skip and only the fallback
+contracts run. The contracts pinned here:
+
+* **Device assignment.** ``replica_devices(R)`` round-robins R replicas
+  over the local devices; ``replica_mesh(R)`` is a 1-D ``("replica",)``
+  mesh over ``min(R, devices)``. Both degrade to None/None-list on one
+  device.
+* **Overlapped is the multi-device default** — and it bit-matches both
+  the fused single-dispatch placement and a plain BatchScheduler, per
+  request, on a fault-free deterministic pool.
+* **Fault-grid equivalence.** Per-launch ``fault_row_offset`` makes the
+  overlapped placement draw the fused dispatch's fault grid cell for
+  cell: fused and overlapped streams bit-match *under an active
+  FaultPolicy* too.
+* **Compile budgets.** ``prewarm_compile`` warms every (batch bucket,
+  wave bucket) pair on every distinct worker device; a subsequent
+  overlapped stream — homogeneous or split across budget tiers — causes
+  zero timed wave-program compiles.
+* **Graceful single-device fallback.** ``placement="overlapped"`` on one
+  device still completes correctly (no pins, no overlap), and the
+  default placement picks fused there.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.distributed.sharding import replica_devices, replica_mesh
+from repro.analysis import CompileSentinel
+from repro.serving import (
+    BatchScheduler,
+    FaultPolicy,
+    ReplicaSet,
+)
+from repro.serving import router as router_mod
+
+from tests.test_replica import _make_pool, _budget
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4",
+)
+
+
+# ---------------------------------------------------------------------------
+# Device assignment
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_replica_devices_round_robin():
+    devs = jax.devices()
+    got = replica_devices(len(devs) + 2)
+    assert got[: len(devs)] == devs
+    assert got[len(devs)] == devs[0] and got[len(devs) + 1] == devs[1]
+    mesh = replica_mesh(len(devs))
+    assert mesh is not None and mesh.axis_names == ("replica",)
+    assert mesh.devices.size == len(devs)
+    # R smaller than the device count only spans R devices
+    m2 = replica_mesh(2)
+    assert m2.devices.size == 2
+
+
+@multi_device
+def test_workers_are_pinned_one_router_per_device():
+    _, router, _, _ = _make_pool()
+    R = len(jax.devices())
+    rset = ReplicaSet(router, replicas=R, max_batch=16, max_wait_s=0.0)
+    assert rset.placement == "overlapped"
+    assert rset.device_count == R
+    pins = [w.router.device for w in rset.workers]
+    assert pins == jax.devices()[:R]
+    # distinct router clones — a shared router object would serialise the
+    # per-device dispatches through one pin
+    assert len({id(w.router) for w in rset.workers}) == R
+    # a later non-overlapped set on the same (reused) template router
+    # clears the stale pin
+    rf = ReplicaSet(router, replicas=R, max_batch=16, max_wait_s=0.0,
+                    placement="fused")
+    assert all(w.router.device is None for w in rf.workers)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: overlapped == fused == plain scheduler (fault-free)
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_overlapped_r4_bitmatches_fused_and_baseline():
+    engine_a, router_a, qemb, _ = _make_pool()
+    engine_b, router_b, _, _ = _make_pool()
+    engine_c, router_c, _, _ = _make_pool()
+    budget = _budget(engine_a)
+    B = qemb.shape[0]
+
+    ro = ReplicaSet(router_a, replicas=4, max_batch=16, max_wait_s=0.0)
+    assert ro.placement == "overlapped"
+    blk_o = ro.submit_many(np.arange(B), qemb, budget)
+    ro.drain()
+
+    rf = ReplicaSet(router_b, replicas=4, max_batch=16, max_wait_s=0.0,
+                    placement="fused")
+    blk_f = rf.submit_many(np.arange(B), qemb, budget)
+    rf.drain()
+
+    base = BatchScheduler(router_c, max_batch=B, max_wait_s=0.0)
+    ref = base.submit_many(np.arange(B), qemb, budget)
+    base.drain()
+
+    for blk in (blk_o, blk_f):
+        np.testing.assert_array_equal(blk.predictions, ref.predictions)
+        np.testing.assert_array_equal(blk.costs, ref.costs)
+        np.testing.assert_array_equal(blk.stop_waves, ref.stop_waves)
+    np.testing.assert_array_equal(ro.arm_query_totals, base.arm_query_totals)
+    st = ro.stats
+    assert st["replica_overlapped"] >= 1
+    assert st["replica_overlapped_rows"] == B
+    assert st["replica_fused"] == 0
+    assert st["replica_devices"] == min(4, len(jax.devices()))
+    assert rf.stats["replica_fused"] >= 1
+
+
+@multi_device
+def test_overlapped_r1_bitmatches_plain_scheduler():
+    """The R=1 anchor holds with an explicit overlapped placement: one
+    worker, offset 0, dispatch-per-group — the standalone cadence."""
+    engine_a, router_a, qemb, _ = _make_pool()
+    engine_b, router_b, _, _ = _make_pool()
+    budget = _budget(engine_a)
+    B = qemb.shape[0]
+    rset = ReplicaSet(router_a, replicas=1, max_batch=16, max_wait_s=0.0,
+                      placement="overlapped")
+    blk = rset.submit_many(np.arange(B), qemb, budget)
+    rset.drain()
+    base = BatchScheduler(router_b, max_batch=16, max_wait_s=0.0)
+    ref = base.submit_many(np.arange(B), qemb, budget)
+    base.drain()
+    np.testing.assert_array_equal(blk.predictions, ref.predictions)
+    np.testing.assert_array_equal(blk.costs, ref.costs)
+    np.testing.assert_array_equal(blk.stop_waves, ref.stop_waves)
+
+
+# ---------------------------------------------------------------------------
+# Fault-grid equivalence through fault_row_offset
+# ---------------------------------------------------------------------------
+
+
+def _run_with_faults(placement, seed=7):
+    engine, router, qemb, _ = _make_pool()
+    budget = _budget(engine)
+    B = qemb.shape[0]
+    policy = FaultPolicy(len(engine.arms), 4, seed=seed)
+    hot = int(np.argmin(engine.costs))
+    policy.set_arm(hot, timeout=0.4, error=0.3)
+    engine.fault_policy = policy
+    try:
+        rset = ReplicaSet(router, replicas=3, max_batch=16, max_wait_s=0.0,
+                          placement=placement)
+        blk = rset.submit_many(np.arange(B), qemb, budget)
+        rset.drain()
+    finally:
+        engine.fault_policy = None
+    return blk, rset.stats
+
+
+@multi_device
+@pytest.mark.parametrize("seed", [7, 13])
+def test_fault_grid_overlapped_bitmatches_fused(seed):
+    """Same FaultPolicy seed, same admission wave: the overlapped R=3
+    stream draws the identical fault grid as the fused one (per-launch
+    row offsets reproduce the concatenation positions), so every output
+    — predictions, costs, stop waves, degrade modes — bit-matches."""
+    blk_o, st_o = _run_with_faults("overlapped", seed=seed)
+    blk_f, st_f = _run_with_faults("fused", seed=seed)
+    np.testing.assert_array_equal(blk_o.predictions, blk_f.predictions)
+    np.testing.assert_array_equal(blk_o.costs, blk_f.costs)
+    np.testing.assert_array_equal(blk_o.stop_waves, blk_f.stop_waves)
+    np.testing.assert_array_equal(blk_o.modes, blk_f.modes)
+    assert st_o.get("degradation_failures") == st_f.get("degradation_failures")
+
+
+# ---------------------------------------------------------------------------
+# Compile budgets on the device plane
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_overlapped_stream_zero_recompiles_after_prewarm():
+    """prewarm_compile walks every distinct worker device and warms all
+    ragged (B, T) buckets there — a homogeneous stream then a budget-tier
+    split stream both run with zero timed wave compiles."""
+    engine, router, qemb, _ = _make_pool()
+    budget = _budget(engine)
+    rset = ReplicaSet(router, replicas=4, max_batch=16, max_wait_s=0.0)
+    assert rset.placement == "overlapped"
+    rset.prewarm(budgets=[budget])
+    rset.prewarm_compile()
+    sentinel = CompileSentinel({"wave": router_mod._wave_scan})
+    sentinel.snapshot()
+    for _ in range(3):
+        blk = rset.submit_many(np.arange(qemb.shape[0]), qemb, budget)
+        rset.drain()
+        assert blk.done()
+    sentinel.assert_no_new_compiles(
+        detail="overlapped R=4 homogeneous stream after prewarm_compile"
+    )
+
+    rng = np.random.default_rng(11)
+    levels = np.quantile(engine.costs, [0.4, 0.8]) * 2.5
+    budgets = rng.choice(levels, size=qemb.shape[0])
+    rset2 = ReplicaSet(router, replicas=4, max_batch=16, max_wait_s=0.0)
+    rset2.prewarm(budgets=[float(v) for v in levels])
+    rset2.prewarm_compile()
+    sentinel.snapshot()
+    blk = rset2.submit_many(np.arange(qemb.shape[0]), qemb, budgets)
+    rset2.drain()
+    assert blk.done()
+    sentinel.assert_no_new_compiles(
+        detail="overlapped R=4 split-budget stream after prewarm_compile"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-device fallback (runs everywhere, including plain tier-1)
+# ---------------------------------------------------------------------------
+
+
+def test_single_device_defaults_and_overlapped_fallback():
+    engine_a, router_a, qemb, _ = _make_pool()
+    engine_b, router_b, _, _ = _make_pool()
+    budget = _budget(engine_a)
+    B = qemb.shape[0]
+    single = len(jax.devices()) == 1
+    if single:
+        assert replica_devices(3) == [None, None, None]
+        assert replica_mesh(3) is None
+
+    # explicit overlapped on however many devices exist: completes and
+    # bit-matches the baseline (on one device the pins are None and the
+    # dispatches simply serialise)
+    rset = ReplicaSet(router_a, replicas=4, max_batch=16, max_wait_s=0.0,
+                      placement="overlapped")
+    if single:
+        assert all(w.router.device is None for w in rset.workers)
+        assert rset.device_count == 1
+    blk = rset.submit_many(np.arange(B), qemb, budget)
+    rset.drain()
+    base = BatchScheduler(router_b, max_batch=B, max_wait_s=0.0)
+    ref = base.submit_many(np.arange(B), qemb, budget)
+    base.drain()
+    np.testing.assert_array_equal(blk.predictions, ref.predictions)
+    np.testing.assert_array_equal(blk.costs, ref.costs)
+
+    # default placement: fused on one device, overlapped on several
+    r2 = ReplicaSet(router_a, replicas=4, max_batch=16, max_wait_s=0.0)
+    assert r2.placement == ("fused" if single else "overlapped")
