@@ -38,6 +38,15 @@ once, with bit-identical plans asserted across the two paths (the
 committed full-size report carries the >= 3x speedup acceptance bar at
 G = 64).
 
+The ``raw_speed`` section is the PR 10 pass: the fully on-device planner
+(greedy-on-gamma, l* and candidate scoring fused into the scan program,
+``sur_greedy_many``) against the retained PR 9 host-gamma plane at G in
+{1, 8, 64} with bit-identical plans asserted (the committed report carries
+the >= 1.3x bar at G = 64); donated vs non-donated wave dispatch with the
+routes bit-checked; and cold-*process* first-plan latency twice against a
+shared ``REPRO_COMPILE_CACHE_DIR`` (second process deserializes instead of
+compiling), with honesty fields when the backend lacks cache support.
+
 Finally the ``feedback`` section measures the online estimation loop on
 synthetic *drifted* traffic: the arms the served plans rely on degrade
 mid-stream, and three pipelines route the same post-drift request stream —
@@ -60,9 +69,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 from typing import List
 
+import jax
 import numpy as np
 
 from repro.analysis import CompileSentinel, compile_cache_size
@@ -482,13 +496,14 @@ def cross_device(router, wl, budget: float, per_batch: int, make_router,
         return (sched, resp, w, res, src, valid, empty)
 
     def run_wave(args_list):
-        outs = [
-            router_mod._wave_scan(
-                *a, router_mod.STOP_MARGIN,
-                num_classes=K, use_kernel=router.use_kernel,
-            )
-            for a in args_list
-        ]
+        with router_mod._quiet_donation():
+            outs = [
+                router_mod._wave_scan(
+                    *a, router_mod.STOP_MARGIN,
+                    num_classes=K, use_kernel=router.use_kernel,
+                )
+                for a in args_list
+            ]
         for o in outs:
             jax.block_until_ready(o)
 
@@ -941,6 +956,252 @@ def selection_replan(num_arms: int, classes: int, history: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# raw_speed: the PR 10 section — fully on-device planner vs the PR 9
+# host-gamma plane, donation on/off wave-loop timings, and cold-start
+# replan latency with/without the persistent compilation cache.
+# ---------------------------------------------------------------------------
+
+
+def _same_plan(a, b) -> bool:
+    """Bitwise equality of two SelectionResults (everything derived)."""
+    if not np.array_equal(a.chosen, b.chosen):
+        return False
+    if not (a.xi_est == b.xi_est and a.cost == b.cost):
+        return False
+    if (a.s1 is None) != (b.s1 is None):
+        return False
+    if a.s1 is not None:
+        return bool(
+            np.array_equal(a.s1, b.s1) and np.array_equal(a.s2, b.s2)
+            and a.l_star == b.l_star and a.xi_s1 == b.xi_s1
+            and a.xi_s2 == b.xi_s2
+        )
+    return True
+
+
+_COLD_START_CHILD = r"""
+import json, sys, time
+import numpy as np
+t_import0 = time.perf_counter()
+import jax
+from repro.core import sur_greedy_many
+from repro.serving.compile_cache import cache_supported, configure_compile_cache
+t_import = time.perf_counter() - t_import0
+info = configure_compile_cache()          # reads REPRO_COMPILE_CACHE_DIR
+rng = np.random.default_rng(0)
+t0 = time.perf_counter()
+sur_greedy_many(
+    rng.uniform(0.2, 0.98, (8, 12)), rng.uniform(0.05, 1.0, 12),
+    rng.uniform(0.5, 2.0, 8), 4, jax.random.key(0), np.full(8, 300),
+)
+dt = time.perf_counter() - t0
+print(json.dumps({"first_plan_s": dt, "import_s": t_import,
+                  "cache": info, "supported": cache_supported()}))
+"""
+
+
+def _cold_start_cache(repo_root: str) -> dict:
+    """Cold-process replan latency, twice against one shared persistent
+    compile-cache dir: the first process pays the XLA compile and seeds the
+    cache, the second deserializes the executable instead of compiling.
+    Honesty fields: skipped (+reason) when the backend has no cache
+    serialization support, and the raw child payloads either way."""
+    from repro.serving.compile_cache import cache_supported
+
+    if not cache_supported():
+        return {"skipped": True, "reason": "backend lacks persistent-cache "
+                "support", "supported": False}
+    out = {"skipped": False, "supported": True}
+    with tempfile.TemporaryDirectory(prefix="repro-cache-") as cache_dir:
+        env = dict(os.environ)
+        env["REPRO_COMPILE_CACHE_DIR"] = cache_dir
+        env["PYTHONPATH"] = os.path.join(repo_root, "src")
+        runs = []
+        for label in ("first", "second"):
+            proc = subprocess.run(
+                [sys.executable, "-c", _COLD_START_CHILD],
+                capture_output=True, text=True, env=env, cwd=repo_root,
+            )
+            if proc.returncode != 0:
+                return {"skipped": True, "supported": True,
+                        "reason": f"{label} child failed",
+                        "stderr": proc.stderr[-2000:]}
+            runs.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+        cache_entries = len(
+            [p for p in os.listdir(cache_dir) if not p.startswith(".")]
+        )
+    out["first_plan_s"] = runs[0]["first_plan_s"]
+    out["second_plan_s"] = runs[1]["first_plan_s"]
+    out["speedup"] = out["first_plan_s"] / out["second_plan_s"]
+    out["improved"] = bool(out["second_plan_s"] < out["first_plan_s"])
+    out["cache_entries"] = cache_entries
+    out["children"] = runs
+    return out
+
+
+def raw_speed(num_arms: int, classes: int, groups=(1, 8, 64),
+              repeats: int = 5, wave_batch: int = 256,
+              wave_repeats: int = 10, seed: int = 47,
+              cold_start: bool = True) -> dict:
+    """The PR 10 measurements, three blocks:
+
+    * ``planner`` — the fully on-device plane (``sur_greedy_many``: greedy-
+      on-gamma, l*, and candidate scoring fused into the scan program) vs
+      the retained PR 9 plane (``_sur_greedy_many_hostgamma``: device xi
+      greedy + per-group host loop + separate final-xi dispatch) at G
+      drifted groups, bit-identical plans asserted per pair;
+    * ``donation`` — the serving wave loop with donated staged tables
+      (``donate_buffers=True``, the default) vs the nodonate twin, outputs
+      bit-checked (donation is a storage contract, not a numerics knob; on
+      backends where the reduction outputs can't alias the staged tables
+      the timing delta is expected to be noise);
+    * ``cold_start`` — cold-*process* first-plan latency twice against one
+      shared ``REPRO_COMPILE_CACHE_DIR``, second process cache-warmed.
+
+    All timed loops run strictly after per-bucket warm-ups; a local
+    CompileSentinel records ``timed_recompiles`` for the section.
+    """
+    from repro.core.selection import _sur_greedy_many_hostgamma, sur_greedy_many
+
+    K, L = classes, num_arms
+    rng = np.random.default_rng(seed)
+    b = rng.uniform(0.05, 1.0, L)
+    key = jax.random.key(9)
+    theta = 200                      # pins one theta bucket for every G
+
+    sentinel = CompileSentinel({
+        "plan": selection_mod._sur_greedy_scan,
+        "plan_nodonate": selection_mod._sur_greedy_scan_nodonate,
+        "wave": router_mod._wave_scan,
+        "wave_nodonate": router_mod._wave_scan_nodonate,
+    })
+
+    cases = {}
+    for G in groups:
+        ps = rng.uniform(0.2, 0.98, (G, L))
+        budgets = rng.uniform(0.4, 2.5, G)
+        thetas = np.full(G, theta)
+        cases[G] = (ps, budgets, thetas)
+        # warm both planes' (G-bucket, L, theta-bucket, K) programs
+        sur_greedy_many(ps, b, budgets, K, key, thetas)
+        _sur_greedy_many_hostgamma(ps, b, budgets, K, key, thetas)
+
+    sentinel.snapshot()          # planner warm-ups done: timed loops start
+    plan_rows = []
+    plans_match = True
+    for G in groups:
+        ps, budgets, thetas = cases[G]
+        t_host, t_fused = _time_all(
+            [
+                lambda: _sur_greedy_many_hostgamma(
+                    ps, b, budgets, K, key, thetas
+                ),
+                lambda: sur_greedy_many(ps, b, budgets, K, key, thetas),
+            ],
+            repeats,
+        )
+        fused = sur_greedy_many(ps, b, budgets, K, key, thetas)
+        host = _sur_greedy_many_hostgamma(ps, b, budgets, K, key, thetas)
+        for f_r, h_r in zip(fused, host):
+            plans_match &= _same_plan(f_r, h_r)
+        row = {
+            "groups": int(G),
+            "hostgamma_s": t_host,
+            "fused_s": t_fused,
+            "speedup": t_host / t_fused,
+        }
+        plan_rows.append(row)
+        print(
+            f"raw speed planner G={G:3d}: hostgamma "
+            f"{1e3 * t_host:7.1f}ms | fused {1e3 * t_fused:7.1f}ms | "
+            f"{row['speedup']:5.2f}x"
+        )
+    timed_recompiles = sentinel.total()
+
+    # -- donation on/off wave-loop timings -------------------------------
+    wl = OracleWorkload(
+        num_classes=K, num_clusters=5, num_arms=L, seed=seed + 1
+    )
+    T, emb, cid_h = wl.response_table(60 * 5, seed=seed + 2)
+    assign, _ = kmeans(emb, 5, seed=0)
+    est = SuccessProbEstimator(T, emb, assign)
+
+    def mk(donate: bool):
+        engine = PoolEngine(
+            [OracleArm(f"d{i}", wl, i, seed=33) for i in range(L)]
+        )
+        return ThriftRouter(
+            engine, est, num_classes=K, donate_buffers=donate
+        )
+
+    router_d, router_nd = mk(True), mk(False)
+    budget = float(np.quantile(router_d.engine.costs, 0.6)) * 2
+    qrng = np.random.default_rng(seed + 3)
+    cid, qemb, lab = wl.sample_queries(wave_batch, qrng)
+    queries = np.column_stack([cid, lab])
+    res_d = router_d.route_batch(queries, qemb, budget)     # warm + result
+    res_nd = router_nd.route_batch(queries, qemb, budget)   # (nodonate twin
+    # owns a separate jit cache: this warm-up is its first-ever compile)
+    donation_match = bool(
+        np.array_equal(res_d.predictions, res_nd.predictions)
+        and np.array_equal(res_d.costs, res_nd.costs)
+        and np.array_equal(res_d.planned_costs, res_nd.planned_costs)
+        and res_d.arms_used == res_nd.arms_used
+    )
+    sentinel.snapshot()          # donation warm-ups done: timed loop starts
+    t_d, t_nd = _time_all(
+        [
+            lambda: router_d.route_batch(queries, qemb, budget),
+            lambda: router_nd.route_batch(queries, qemb, budget),
+        ],
+        wave_repeats,
+    )
+    donation = {
+        "batch": int(wave_batch),
+        "donate_s": t_d,
+        "nodonate_s": t_nd,
+        "nodonate_over_donate": t_nd / t_d,
+        "bit_identical": donation_match,
+    }
+    print(
+        f"raw speed donation B={wave_batch}: donate {1e3 * t_d:7.2f}ms | "
+        f"nodonate {1e3 * t_nd:7.2f}ms ({donation['nodonate_over_donate']:.2f}x)"
+        f" | bit-identical {donation_match}"
+    )
+    timed_recompiles += sentinel.total()
+
+    # -- cold-start replan latency vs the persistent compile cache -------
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cold = _cold_start_cache(repo_root) if cold_start else {
+        "skipped": True, "reason": "disabled"
+    }
+    if cold.get("skipped"):
+        print(f"raw speed cold-start: skipped ({cold.get('reason')})")
+    else:
+        print(
+            f"raw speed cold-start: first {cold['first_plan_s']:6.2f}s | "
+            f"cache-warmed {cold['second_plan_s']:6.2f}s "
+            f"({cold['speedup']:.2f}x, {cold['cache_entries']} cache entries)"
+        )
+
+    from repro.kernels.ops import kernel_compile_probe
+
+    return {
+        "planner": {
+            "rows": plan_rows,
+            "groups_max": int(max(groups)),
+            "speedup_at_max": plan_rows[-1]["speedup"],
+            "plans_match": plans_match,
+            "theta": theta,
+        },
+        "donation": donation,
+        "cold_start": cold,
+        "kernel_compile": kernel_compile_probe(),
+        "timed_recompiles": int(timed_recompiles),
+    }
+
+
 def _time_all(fns, repeats: int):
     """Best-of-``repeats`` wall time per engine, *interleaved* round-robin
     so a load spike on the shared host penalizes every engine equally
@@ -1097,6 +1358,23 @@ def run(args) -> dict:
         f"(plans match: {selection['plans_match']})"
     )
 
+    # raw-speed pass: fused on-device planner vs PR 9 host-gamma plane,
+    # donated vs non-donated wave dispatch, cold-start compile cache
+    raw = raw_speed(
+        args.arms, args.classes,
+        repeats=args.raw_repeats,
+        wave_batch=min(256, max(batches)),
+        wave_repeats=max(4, args.repeats // 2),
+        cold_start=not args.no_cold_start,
+    )
+    print(
+        f"raw speed: planner {raw['planner']['speedup_at_max']:.2f}x fused "
+        f"over hostgamma at G={raw['planner']['groups_max']} (plans match: "
+        f"{raw['planner']['plans_match']}) | donation bit-identical "
+        f"{raw['donation']['bit_identical']} | timed recompiles "
+        f"{raw['timed_recompiles']}"
+    )
+
     # online estimation feedback on drifted traffic
     feedback = feedback_drift(
         args.classes, args.arms, history=args.feedback_history,
@@ -1147,6 +1425,7 @@ def run(args) -> dict:
     # the jit cache keys executables by (bucket, device): a multi-device
     # process may legitimately hold one copy of a bucket program per device
     n_devices = max(1, int(cd.get("devices", 1)))
+    timed_recompiles += raw["timed_recompiles"]   # raw_speed's own sentinel
     compile_sentinel = {
         "timed_recompiles": timed_recompiles,
         "wave_compiles": compile_cache_size(sentinel.entries["wave"]),
@@ -1183,6 +1462,7 @@ def run(args) -> dict:
         "steady_state": steady,
         "replica_scaling": replica,
         "selection": selection,
+        "raw_speed": raw,
         "feedback": feedback,
         "fault_tolerance": fault,
         "compile_sentinel": compile_sentinel,
@@ -1268,6 +1548,25 @@ def _load_history(path: str) -> list:
             for k in ("groups_max", "speedup_at_max", "plans_match")
             if k in selection
         }
+    raw = prev.get("raw_speed")
+    if raw:
+        planner = raw.get("planner", {})
+        entry["raw_speed"] = {
+            k: planner[k]
+            for k in ("groups_max", "speedup_at_max", "plans_match")
+            if k in planner
+        }
+        donation = raw.get("donation", {})
+        if donation:
+            entry["raw_speed"]["donation_bit_identical"] = donation.get(
+                "bit_identical"
+            )
+            entry["raw_speed"]["nodonate_over_donate"] = donation.get(
+                "nodonate_over_donate"
+            )
+        cold = raw.get("cold_start", {})
+        if cold and not cold.get("skipped"):
+            entry["raw_speed"]["cold_start_speedup"] = cold.get("speedup")
     fault = prev.get("fault_tolerance")
     if fault:
         entry["fault_tolerance"] = {
@@ -1325,6 +1624,14 @@ def main() -> None:
         help="best-of rounds for the serial-vs-batched replan timing",
     )
     ap.add_argument(
+        "--raw-repeats", type=int, default=5,
+        help="best-of rounds for the raw-speed planner timings",
+    )
+    ap.add_argument(
+        "--no-cold-start", action="store_true",
+        help="skip the two-subprocess persistent-compile-cache measurement",
+    )
+    ap.add_argument(
         "--smoke", action="store_true",
         help="tiny sweep for CI: small batches, few repeats",
     )
@@ -1342,6 +1649,7 @@ def main() -> None:
         args.feedback_history = min(args.feedback_history, 80)
         args.selection_history = min(args.selection_history, 60)
         args.selection_repeats = min(args.selection_repeats, 2)
+        args.raw_repeats = min(args.raw_repeats, 2)
     run(args)
 
 

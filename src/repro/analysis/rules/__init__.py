@@ -4,6 +4,7 @@ Every rule module exposes ``RULE`` (the id used in CLI ``--rule`` filters
 and ``# thriftlint: ignore[...]`` comments) and ``check(project)``.
 """
 from . import (
+    donation_contract,
     f64_reduction,
     jit_purity,
     pallas_contract,
@@ -19,6 +20,7 @@ ALL_RULES = {
         f64_reduction,
         recompile_risk,
         pallas_contract,
+        donation_contract,
     )
 }
 

@@ -1,0 +1,180 @@
+"""donation-contract: callers of donating jit wrappers must not keep the
+donated buffers alive.
+
+``donate_argnums`` hands a buffer's storage to XLA: after the call the
+input array is deleted (device inputs) and any host-side re-read of a
+donated *device* array raises ``RuntimeError: Array has been deleted``.
+The contract is caller-side and purely conventional — nothing in jax
+checks it statically — so this rule does:
+
+* a call site of a donating wrapper whose caller *re-reads* a donated
+  argument after the call (same enclosing function, no intervening
+  re-assignment) is one refactor away from a runtime crash;
+* donating an argument that aliases a *cached* buffer — a module-level
+  table, an ``self.<attr>`` instance cache, or a subscript of a
+  module-level container — donates storage the caller does not own for
+  this call; the next caller reads a deleted array.
+
+Passing throwaway locals (the ``_dispatch_jit`` / ``sur_greedy_many``
+idiom: staged numpy tables that die at the call) is the sanctioned
+pattern and never fires.  Calls routed through a local alias
+(``scan_fn = _wave_scan if ... else ...``) are not resolved — the rule
+only matches direct calls by wrapper or decorated-function name.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..walker import JitEntry, Project
+
+RULE = "donation-contract"
+
+
+def _donate_spec(entry: JitEntry) -> tuple[int, ...]:
+    """Donated positional indices declared on a jit entry, () if none."""
+    kw_nodes: list[ast.keyword] = []
+    if entry.site is not None:
+        node = entry.site.node
+        if isinstance(node.func, ast.Call):      # partial(jax.jit, ...)(fn)
+            kw_nodes = node.func.keywords
+        else:                                    # jax.jit(fn, ...)
+            kw_nodes = node.keywords
+    elif entry.fn is not None:                   # decorator form
+        for dec in entry.fn.node.decorator_list:
+            if isinstance(dec, ast.Call):
+                kw_nodes = dec.keywords
+                break
+    for kw in kw_nodes:
+        if kw.arg != "donate_argnums":
+            continue
+        try:
+            val = ast.literal_eval(kw.value)
+        except (ValueError, SyntaxError):
+            return ()
+        if isinstance(val, int):
+            return (val,)
+        if isinstance(val, (tuple, list)):
+            return tuple(int(v) for v in val)
+    return ()
+
+
+def _donating_symbols(project: Project) -> dict[str, tuple[JitEntry, tuple[int, ...]]]:
+    """Callable names whose direct calls donate: wrapper aliases for the
+    assignment idiom, the function's own name for the decorator form.
+    The bare core-function name of a wrapper idiom is *not* donating —
+    calling the core directly bypasses the jit and its donation."""
+    out: dict[str, tuple[JitEntry, tuple[int, ...]]] = {}
+    for entry in project.jit_entries:
+        spec = _donate_spec(entry)
+        if not spec:
+            continue
+        if entry.wrapper_name:
+            out[entry.wrapper_name] = (entry, spec)
+        elif entry.site is None and entry.fn is not None:
+            out[entry.fn.name] = (entry, spec)
+    return out
+
+
+def _is_cached_buffer(arg: ast.expr, module_globals: set[str]) -> str | None:
+    """Human-readable description if `arg` aliases storage that outlives
+    the call; None for throwaway locals / fresh expressions."""
+    if isinstance(arg, ast.Name) and arg.id in module_globals:
+        return f"module-level buffer `{arg.id}`"
+    if (
+        isinstance(arg, ast.Attribute)
+        and isinstance(arg.value, ast.Name)
+        and arg.value.id in ("self", "cls")
+    ):
+        return f"instance-cached buffer `self.{arg.attr}`"
+    if isinstance(arg, ast.Subscript):
+        base = arg.value
+        if isinstance(base, ast.Name) and base.id in module_globals:
+            return f"entry of module-level container `{base.id}`"
+    return None
+
+
+def _reread_line(
+    scope: ast.AST, name: str, after_line: int
+) -> int | None:
+    """First Load of `name` in `scope` strictly after `after_line` that is
+    not preceded by a re-assignment (Store) of the same name."""
+    first_store = None
+    loads: list[int] = []
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Name) and node.id == name:
+            if node.lineno <= after_line:
+                continue
+            if isinstance(node.ctx, ast.Store):
+                if first_store is None or node.lineno < first_store:
+                    first_store = node.lineno
+            elif isinstance(node.ctx, ast.Load):
+                loads.append(node.lineno)
+    for line in sorted(loads):
+        if first_store is None or line < first_store:
+            return line
+    return None
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    donating = _donating_symbols(project)
+    if not donating:
+        return findings
+
+    for mod in project.modules.values():
+        module_globals = set(mod.scan.top_assign_counts)
+        for site in mod.scan.calls:
+            f = site.node.func
+            name = None
+            if isinstance(f, ast.Name):
+                name = f.id
+            elif isinstance(f, ast.Attribute):
+                name = f.attr
+            hit = donating.get(name or "")
+            if hit is None:
+                continue
+            _entry, spec = hit
+            caller = site.enclosing.qualname if site.enclosing else "<module>"
+            for idx in spec:
+                if idx >= len(site.node.args):
+                    continue
+                arg = site.node.args[idx]
+                cached = _is_cached_buffer(arg, module_globals)
+                if cached is not None:
+                    findings.append(
+                        Finding(
+                            rule=RULE,
+                            path=site.path,
+                            line=site.node.lineno,
+                            symbol=caller,
+                            message=f"`{name}` donates {cached} "
+                            f"(argnum {idx}): donation hands its storage "
+                            "to XLA, so the cached alias is deleted for "
+                            "every later reader — stage a throwaway copy "
+                            "at the call instead",
+                        )
+                    )
+                    continue
+                if not isinstance(arg, ast.Name) or site.enclosing is None:
+                    continue
+                boundary = site.node.end_lineno or site.node.lineno
+                reread = _reread_line(
+                    site.enclosing.node, arg.id, boundary
+                )
+                if reread is not None:
+                    findings.append(
+                        Finding(
+                            rule=RULE,
+                            path=site.path,
+                            line=site.node.lineno,
+                            symbol=caller,
+                            message=f"`{arg.id}` is donated to `{name}` "
+                            f"(argnum {idx}) but re-read on line "
+                            f"{reread}: a donated device array is "
+                            "deleted by the call — re-reading it raises "
+                            "at runtime; copy it first or drop the "
+                            "donation",
+                        )
+                    )
+    return findings

@@ -443,15 +443,17 @@ class GroupedXiEstimator:
         self.responses_t = np.ascontiguousarray(
             self.responses.transpose(0, 2, 1)
         )
-        self.log_weights = np.stack(
-            [log_weight(ps[g], self.num_classes) for g in range(G)]
-        ).astype(np.float32)
+        # vectorized over groups: `log_weight` is elementwise and the empty
+        # belief is a row-min chain, so these are the exact per-group
+        # `log_weight(ps[g], K)` / `empty_log_belief(base[g])` bits
+        self.log_weights = log_weight(ps, self.num_classes).astype(np.float32)
         base = ps if p_all is None else clip_probs(
             np.broadcast_to(np.atleast_2d(np.asarray(p_all, np.float64)), (G, L))
         )
-        self.empty = np.asarray(
-            [empty_log_belief(base[g]) for g in range(G)], np.float32
-        )
+        p_min = np.min(clip_probs(base), axis=1)
+        self.empty = (
+            np.log(p_min) - np.log(2.0) - np.log1p(-p_min)
+        ).astype(np.float32)
         self.theta_f = thetas.astype(np.float64)
 
     def __call__(self, masks: np.ndarray) -> np.ndarray:

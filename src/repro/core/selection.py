@@ -19,8 +19,10 @@ spend — the contract ``tests/test_selection_batched.py`` pins bitwise.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -39,6 +41,7 @@ from .correctness import gamma
 from .mc import (
     GroupedXiEstimator,
     _marginal_xi_core,
+    _tables_xi_core,
     bucket_size,
     theta_for,
 )
@@ -105,6 +108,49 @@ def gamma_value_batch(p: np.ndarray) -> Callable[[np.ndarray], np.ndarray]:
         return 1.0 - np.exp(masks @ log1m)
 
     return fn
+
+
+def _greedy_gamma(
+    p: np.ndarray, b: np.ndarray, budget: float
+) -> Tuple[List[int], float]:
+    """Greedy-on-gamma (Alg. 1 on the closed-form gamma), serial plane.
+
+    Carries the chosen set's survival product ``q = prod(1 - p_l)`` instead
+    of re-exponentiating mask sums: each round's candidate values are
+    ``1 - q * m`` with the per-arm factors ``m = exp(log1p(-p))`` computed
+    once up front.  The loop body is then pure IEEE-f64 multiply/subtract —
+    no transcendentals — so :func:`_sur_greedy_scan_core` can run the exact
+    same statements on device and bit-match this function round for round.
+    Control flow (tie window, p/b tie-break) mirrors :func:`_greedy_xi`.
+    """
+    p = np.asarray(clip_probs(p), np.float64)
+    b = np.asarray(b, np.float64)
+    L = p.size
+    m = np.exp(np.log1p(-p))                  # per-arm survival factor
+    in_pool = np.ones(L, bool)
+    q = 1.0                                   # survival of the chosen set
+    spent = 0.0
+    current = 0.0                             # gamma(empty) = 0
+    chosen: List[int] = []
+    while True:
+        afford = in_pool & (b <= budget - spent + 1e-15)
+        if not afford.any():
+            break
+        vals = 1.0 - q * m                    # gamma(chosen ∪ {l}) for all l
+        ratios = np.where(afford, (vals - current) / b, -np.inf)
+        best = ratios.max()
+        tied = afford & (
+            (ratios == best)
+            | (np.abs(ratios - best) <= 1e-15 + RATIO_TIE_RTOL * abs(best))
+        )
+        pb = np.where(tied, p / b, -np.inf)
+        pick = int(np.argmax(pb))
+        chosen.append(pick)
+        in_pool[pick] = False
+        spent += float(b[pick])
+        current = float(vals[pick])
+        q = q * float(m[pick])
+    return chosen, current
 
 
 def _greedy_xi(
@@ -218,7 +264,7 @@ def sur_greedy(
     l_star = int(afford[np.argmax(p[afford])])
 
     s1, _, s1_raw, s1_cnt = _greedy_xi(p, b, budget, est)
-    s2, _ = greedy(p, b, budget, gamma_value_batch(p), empty_value=0.0)
+    s2, _ = _greedy_gamma(p, b, budget)
 
     # Evaluate the three candidates with the *same* CRN draws.
     xi_vals = est.final_xi([l_star], [s1], [s2], s1_raw, s1_cnt)[0]
@@ -230,8 +276,7 @@ def sur_greedy(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes",))
-def _sur_greedy_scan(
+def _sur_greedy_scan_core(
     resp_t: jnp.ndarray,      # (G, L, T) int32, -1 past each group's theta
     valid: jnp.ndarray,       # (G, T) f32 0/1 draw mask
     log_weights: jnp.ndarray, # (G, L) f32
@@ -240,23 +285,42 @@ def _sur_greedy_scan(
     p: jnp.ndarray,           # (G, L) f64 clipped success probs
     b: jnp.ndarray,           # (G, L) f64 pool costs
     budgets: jnp.ndarray,     # (G,) f64
+    m: jnp.ndarray,           # (G, L) f64 survival factors exp(log1p(-p))
     *,
     num_classes: int,
+    full: bool = True,
 ):
-    """Greedy-on-xi for all G groups as one ``lax.while`` program.
+    """The whole Alg. 2 planner for all G groups as one device program.
 
-    Each round evaluates the masked candidate expansion of *every* group
-    simultaneously (`_marginal_xi_core` over the stacked CRN draws), then
-    runs Alg. 1's round logic — affordability, gain/cost ratios, the
-    near-tie window and the p/b tie-break — as f64 elementwise ops that
-    mirror :func:`_greedy_xi`'s numpy statements one for one. Groups whose
-    affordable set empties freeze in place; the loop ends when every group
-    is done. Runs under ``enable_x64``.
+    Four fused phases:
 
-    Returns ``(picks (G, L) int32 in pick order (-1 pad), npick (G,),
-    value (G,) f64, spent (G,) f64, base_raw (G, T, K) f32,
-    base_cnt (G, T, K) int32)`` — the final belief tables are the chosen
-    sets' xi tables, reused by the Alg. 2 candidate scoring.
+    1. **greedy-on-xi** — a ``lax.while`` whose rounds evaluate the masked
+       candidate expansion of *every* group simultaneously
+       (`_marginal_xi_core` over the stacked CRN draws), then run Alg. 1's
+       round logic — affordability, gain/cost ratios, the near-tie window
+       and the p/b tie-break — as f64 elementwise ops that mirror
+       :func:`_greedy_xi`'s numpy statements one for one;
+    2. **greedy-on-gamma** — a second ``lax.while`` mirroring
+       :func:`_greedy_gamma` (survival-product carry, pure multiply /
+       subtract — the serial plane precomputes the same ``m`` factors so
+       neither plane exponentiates inside the loop);
+    3. **l***— the best affordable single arm, a masked first-max argmax
+       identical to the serial compressed ``afford[argmax(p[afford])]``;
+    4. **candidate scoring** — the l*/s1/s2 belief tables accumulated in
+       ascending arm order (the exact f32 operand sequence of
+       :meth:`GroupedXiEstimator._accumulate`) and scored by
+       :func:`_tables_xi_core` in-program: ``final_xi`` without leaving
+       the device.
+
+    Groups whose affordable set empties freeze in place; padded groups
+    (budget < 0) never pick and stay inert. Runs under ``enable_x64``.
+
+    With ``full=False`` only phase 1 runs and the return is the PR 9
+    planner surface ``(picks, npick, value, spent, base_raw, base_cnt)``
+    (kept as the bench baseline / reference plane). With ``full=True``
+    the return is ``(picks (G, L) int32 in pick order (-1 pad),
+    npick (G,), g_picks (G, L), g_npick (G,), l_star (G,) int32,
+    xi_vals (G, 3) f64)``.
     """
     G, L, T = resp_t.shape
     K = num_classes
@@ -329,8 +393,234 @@ def _sur_greedy_scan(
         "alive": jnp.ones(G, bool),
     }
     st = jax.lax.while_loop(cond, body, init)
-    return (st["picks"], st["npick"], st["current"], st["spent"],
-            st["base_raw"], st["base_cnt"])
+    if not full:
+        return (st["picks"], st["npick"], st["current"], st["spent"],
+                st["base_raw"], st["base_cnt"])
+
+    # -- phase 2: greedy-on-gamma (mirrors `_greedy_gamma` statement for
+    # statement; the survival-product carry keeps the loop transcendental-
+    # free, so both planes run identical IEEE multiply/subtract chains) --
+    def gcond(st2):
+        return st2["alive"].any()
+
+    def gbody(st2):
+        afford = st2["in_pool"] & (
+            b <= budgets[:, None] - st2["spent"][:, None] + 1e-15
+        )
+        has = afford.any(axis=1)
+        vals = 1.0 - st2["q"][:, None] * m                    # (G, L) f64
+        ratios = jnp.where(
+            afford, (vals - st2["current"][:, None]) / b, -jnp.inf
+        )
+        best = jnp.max(ratios, axis=1)
+        tied = afford & (
+            (ratios == best[:, None])
+            | (jnp.abs(ratios - best[:, None])
+               <= 1e-15 + RATIO_TIE_RTOL * jnp.abs(best[:, None]))
+        )
+        pb = jnp.where(tied, p / b, -jnp.inf)
+        pick = jnp.argmax(pb, axis=1).astype(jnp.int32)       # first max
+        oh_pick = arange_l[None, :] == pick[:, None]
+        upd = has[:, None] & oh_pick
+        b_pick = jnp.take_along_axis(
+            b, pick[:, None].astype(jnp.int64), 1
+        )[:, 0]
+        v_pick = jnp.take_along_axis(
+            vals, pick[:, None].astype(jnp.int64), 1
+        )[:, 0]
+        m_pick = jnp.take_along_axis(
+            m, pick[:, None].astype(jnp.int64), 1
+        )[:, 0]
+        return {
+            "in_pool": st2["in_pool"] & ~upd,
+            "spent": jnp.where(has, st2["spent"] + b_pick, st2["spent"]),
+            "current": jnp.where(has, v_pick, st2["current"]),
+            "q": jnp.where(has, st2["q"] * m_pick, st2["q"]),
+            "picks": jnp.where(
+                has[:, None] & (arange_l[None, :] == st2["npick"][:, None]),
+                pick[:, None], st2["picks"],
+            ),
+            "npick": st2["npick"] + has.astype(jnp.int32),
+            "alive": has,
+        }
+
+    ginit = {
+        "in_pool": jnp.ones((G, L), bool),
+        "spent": jnp.zeros(G, jnp.float64),
+        "current": jnp.zeros(G, jnp.float64),
+        "q": jnp.ones(G, jnp.float64),
+        "picks": jnp.full((G, L), -1, jnp.int32),
+        "npick": jnp.zeros(G, jnp.int32),
+        "alive": jnp.ones(G, bool),
+    }
+    st2 = jax.lax.while_loop(gcond, gbody, ginit)
+
+    # -- phase 3: l* — first-max argmax over the affordable arms, the
+    # device form of the serial `afford[argmax(p[afford])]` (non-afforded
+    # arms at -inf lose to any affordable one; padded groups afford
+    # nothing and resolve to arm 0, discarded by the caller) --
+    afford0 = b <= budgets[:, None] + 1e-15
+    l_star = jnp.argmax(
+        jnp.where(afford0, p, -jnp.inf), axis=1
+    ).astype(jnp.int32)
+
+    # -- phase 4: Alg. 2 candidate scoring in-program. The l* and s2
+    # belief tables are folded in ascending arm order — one f32 add per
+    # draw per arm, the same operand sequence as
+    # `GroupedXiEstimator._accumulate` — and scored by the same
+    # `_tables_xi_core` the host path jits, so xi comes back bit-identical
+    # to `est.final_xi(...)` without a host round-trip. --
+    arange_k = jnp.arange(K, dtype=resp_t.dtype)
+    resp_l = jnp.take_along_axis(
+        resp_t, l_star[:, None, None].astype(jnp.int64), 1
+    )[:, 0, :]                                                # (G, T)
+    w_l = jnp.take_along_axis(
+        log_weights, l_star[:, None].astype(jnp.int64), 1
+    )                                                         # (G, 1)
+    oh_l = resp_l[..., None] == arange_k                      # (G, T, K)
+    raw_star = jnp.where(oh_l, w_l[:, :, None], jnp.float32(0.0))
+    cnt_star = oh_l.astype(jnp.int32)
+
+    chosen2 = ~st2["in_pool"]                                 # the s2 set
+
+    def fold(l, carry):
+        raw, cnt = carry
+        sel = jax.lax.dynamic_index_in_dim(
+            chosen2, l, axis=1, keepdims=False
+        )                                                     # (G,)
+        col = jax.lax.dynamic_index_in_dim(
+            resp_t, l, axis=1, keepdims=False
+        )                                                     # (G, T)
+        w_arm = jax.lax.dynamic_index_in_dim(
+            log_weights, l, axis=1, keepdims=False
+        )                                                     # (G,)
+        add = sel[:, None, None] & (col[..., None] == arange_k)
+        raw = jnp.where(add, raw + w_arm[:, None, None], raw)
+        cnt = cnt + jnp.where(add, 1, 0).astype(jnp.int32)
+        return (raw, cnt)
+
+    raw_s2, cnt_s2 = jax.lax.fori_loop(
+        0, L, fold,
+        (jnp.zeros((G, T, K), jnp.float32), jnp.zeros((G, T, K), jnp.int32)),
+    )
+
+    raw3 = jnp.stack([raw_star, st["base_raw"], raw_s2], axis=1)
+    cnt3 = jnp.stack([cnt_star, st["base_cnt"], cnt_s2], axis=1)
+    xi_vals = _tables_xi_core(raw3, cnt3, empty, valid, theta, K)
+
+    return (st["picks"], st["npick"], st2["picks"], st2["npick"],
+            l_star, xi_vals)
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Donation is declarative — XLA aliases what it can and (on backends/
+    shapes where an input can't be reused) warns once at compile time about
+    the rest. The contract we assert is the caller-side one ("this buffer
+    is dead after the call"), so the partial-use warning is expected noise;
+    dispatch seams of donating wrappers run under this context."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        yield
+
+
+# Donating wrapper (the serving default) and its no-donation twin. The
+# donated positions are the staged response/valid/weight tables: every
+# caller in the tree stages them from host numpy (jit transfers a fresh
+# device copy and donates *that* copy, never the host buffer), or hands
+# over throwaway device arrays — after the call the argument is dead, so
+# XLA may reuse its memory for loop carries and outputs. Donation changes
+# buffer lifetimes only, never arithmetic: on/off is bit-identical, and
+# each wrapper owns one compile per bucket (CompileSentinel-clean).
+_sur_greedy_scan = functools.partial(
+    jax.jit, static_argnames=("num_classes", "full"), donate_argnums=(0, 1, 2),
+)(_sur_greedy_scan_core)
+
+_sur_greedy_scan_nodonate = functools.partial(
+    jax.jit, static_argnames=("num_classes", "full"),
+)(_sur_greedy_scan_core)
+
+
+# Reusable staging buffers for the batched planner, keyed by padded shape
+# (Gp, L, T): warm replans hit the same compile bucket over and over, so
+# re-allocating ~13 MB of padded tables per call is pure churn. The scratch
+# is *host numpy* — the jit transfers a fresh device copy per call (and the
+# donating wrapper donates that copy, never these buffers), so reuse is
+# safe even with donation on. Planning is control-plane work serialized by
+# the PlanService; the scratch is not thread-safe by itself.
+_PLAN_SCRATCH: dict = {}
+
+
+def _plan_scratch(Gp: int, L: int, T: int) -> dict:
+    key = (Gp, L, T)
+    scr = _PLAN_SCRATCH.get(key)
+    if scr is None:
+        scr = {
+            "resp": np.empty((Gp, L, T), np.int32),
+            "valid": np.empty((Gp, T), np.float32),
+            "w": np.empty((Gp, L), np.float32),
+            "empty": np.empty(Gp, np.float32),
+            "theta": np.empty(Gp, np.float64),
+            "p": np.empty((Gp, L), np.float64),
+            "m": np.empty((Gp, L), np.float64),
+            "budgets": np.empty(Gp, np.float64),
+        }
+        _PLAN_SCRATCH[key] = scr
+    return scr
+
+
+def _stage_groups(est: GroupedXiEstimator, b: np.ndarray,
+                  budgets_live: np.ndarray, group_bucket: int):
+    """Fill the bucket-keyed scratch with the padded planner tables.
+
+    Rows past ``n`` get the inert pad values every call (a previous call on
+    the same bucket may have staged more live groups).  Returns
+    ``(scratch, b_p, n, Gp)``; ``b_p`` is a broadcast view, never written.
+    """
+    n = est.num_groups
+    L = est.num_arms
+    Gp = bucket_size(n, group_bucket)
+    T = est.responses.shape[1]
+    scr = _plan_scratch(Gp, L, T)
+    scr["resp"][:n] = est.responses_t
+    scr["resp"][n:] = -1
+    scr["valid"][:n] = est.valid
+    scr["valid"][n:] = 0.0
+    scr["w"][:n] = est.log_weights
+    scr["w"][n:] = 0.0
+    scr["empty"][:n] = est.empty
+    scr["empty"][n:] = 0.0
+    scr["theta"][:n] = est.theta_f
+    scr["theta"][n:] = 1.0
+    scr["p"][:n] = est.ps
+    scr["p"][n:] = 0.5
+    # the gamma survival factors, elementwise in-place (the same
+    # `np.exp(np.log1p(-p))` values `_greedy_gamma` precomputes serially)
+    np.negative(scr["p"], out=scr["m"])
+    np.log1p(scr["m"], out=scr["m"])
+    np.exp(scr["m"], out=scr["m"])
+    scr["budgets"][:n] = budgets_live
+    scr["budgets"][n:] = -1.0               # pad groups afford nothing
+    b_p = np.broadcast_to(b, (Gp, L))
+    return scr, b_p, n, Gp
+
+
+def _live_split(ps, b, budgets, K):
+    """Serial early-return for groups that afford nothing; the rest plan."""
+    G = ps.shape[0]
+    results: List[Optional[SelectionResult]] = [None] * G
+    live: List[int] = []
+    for g in range(G):
+        if (b <= budgets[g] + 1e-15).any():
+            live.append(g)
+        else:
+            results[g] = SelectionResult(
+                chosen=np.zeros(0, np.int64), xi_est=1.0 / K, cost=0.0,
+                budget=float(budgets[g]),
+            )
+    return results, live
 
 
 def sur_greedy_many(
@@ -342,24 +632,29 @@ def sur_greedy_many(
     thetas,
     use_kernel: bool = False,
     group_bucket: int = 8,
+    donate: bool = True,
 ) -> List[SelectionResult]:
     """SurGreedyLLM over G stacked (p-vector, budget) groups — the batched
     planner plane.
 
-    One :class:`GroupedXiEstimator` shares the CRN draws, one
-    :func:`_sur_greedy_scan` dispatch runs every group's greedy-on-xi, one
-    grouped evaluation scores the three Alg. 2 candidates of all groups.
-    The cheap closed-form pieces (greedy-on-gamma, the best affordable
-    single arm) run on the host with the exact serial code. Under the same
-    ``key`` the results bit-match ``[sur_greedy(ps[g], b, budgets[g], ...)
-    for g]``; groups are padded to ``group_bucket`` multiples so serving
-    replans reuse a handful of compiled programs.
+    One :class:`GroupedXiEstimator` shares the CRN draws and ONE
+    :func:`_sur_greedy_scan` dispatch runs everything: every group's
+    greedy-on-xi, greedy-on-gamma, the best affordable single arm, and the
+    Alg. 2 candidate scoring (``final_xi``) — there is no per-group Python
+    work between staging the tables and reading back the planned sets.
+    Under the same ``key`` the results bit-match ``[sur_greedy(ps[g], b,
+    budgets[g], ...) for g]``; groups are padded to ``group_bucket``
+    multiples so serving replans reuse a handful of compiled programs, and
+    the padded staging buffers are reused from bucket-keyed scratch.
 
     Args:
       ps: (G, L) per-group success probabilities.
       b: (L,) shared pool costs.
       budgets: (G,) per-group budgets.
       thetas: scalar or (G,) Monte-Carlo sample counts.
+      donate: donate the staged response/valid/weight tables to XLA
+        (bit-identical either way; ``False`` keeps the transferred device
+        copies alive for callers that want to inspect them).
     """
     ps = clip_probs(np.atleast_2d(np.asarray(ps, np.float64)))
     G, L = ps.shape
@@ -368,16 +663,59 @@ def sur_greedy_many(
     thetas = np.broadcast_to(np.asarray(thetas, np.int64), (G,))
     K = int(num_classes)
 
-    results: List[Optional[SelectionResult]] = [None] * G
-    live: List[int] = []
-    for g in range(G):
-        if (b <= budgets[g] + 1e-15).any():
-            live.append(g)
-        else:  # serial early return: nothing affordable
-            results[g] = SelectionResult(
-                chosen=np.zeros(0, np.int64), xi_est=1.0 / K, cost=0.0,
-                budget=float(budgets[g]),
-            )
+    results, live = _live_split(ps, b, budgets, K)
+    if not live:
+        return results
+
+    est = GroupedXiEstimator(
+        key, ps[live], K, thetas[live], use_kernel=use_kernel
+    )
+    scr, b_p, n, _ = _stage_groups(est, b, budgets[live], group_bucket)
+    scan_fn = _sur_greedy_scan if donate else _sur_greedy_scan_nodonate
+    with enable_x64(), _quiet_donation():
+        out = scan_fn(
+            scr["resp"], scr["valid"], scr["w"], scr["empty"], scr["theta"],
+            scr["p"], b_p, scr["budgets"], scr["m"],
+            num_classes=K, full=True,
+        )
+    picks, npick, g_picks, g_npick, l_star, xi_vals = (
+        np.asarray(o) for o in out
+    )
+
+    for i, g in enumerate(live):
+        s1 = [int(a) for a in picks[i, : npick[i]]]
+        s2 = [int(a) for a in g_picks[i, : g_npick[i]]]
+        results[g] = _assemble_result(
+            est.ps[i], b, float(budgets[g]), int(l_star[i]), s1, s2,
+            xi_vals[i],
+        )
+    return results
+
+
+def _sur_greedy_many_hostgamma(
+    ps: np.ndarray,
+    b: np.ndarray,
+    budgets: np.ndarray,
+    num_classes: int,
+    key: jax.Array,
+    thetas,
+    use_kernel: bool = False,
+    group_bucket: int = 8,
+) -> List[SelectionResult]:
+    """The PR 9 planner plane, kept verbatim as reference and bench
+    baseline: the device scan runs greedy-on-xi only (``full=False``, no
+    donation), then a per-group host loop runs greedy-on-gamma / l* and
+    ``est.final_xi`` stages the candidate tables back through a separate
+    dispatch. Bit-identical to :func:`sur_greedy_many`; strictly more
+    host work per group."""
+    ps = clip_probs(np.atleast_2d(np.asarray(ps, np.float64)))
+    G, L = ps.shape
+    b = np.asarray(b, np.float64)
+    budgets = np.broadcast_to(np.asarray(budgets, np.float64), (G,))
+    thetas = np.broadcast_to(np.asarray(thetas, np.int64), (G,))
+    K = int(num_classes)
+
+    results, live = _live_split(ps, b, budgets, K)
     if not live:
         return results
 
@@ -400,13 +738,14 @@ def sur_greedy_many(
     p_p = np.full((Gp, L), 0.5, np.float64)
     p_p[:n] = est.ps
     b_p = np.broadcast_to(b, (Gp, L))
-    budgets_p = np.full(Gp, -1.0, np.float64)   # pad groups afford nothing
+    budgets_p = np.full(Gp, -1.0, np.float64)
     budgets_p[:n] = budgets[live]
+    m_p = np.exp(np.log1p(-p_p))
 
     with enable_x64():
-        picks, npick, _, _, s1_raw, s1_cnt = _sur_greedy_scan(
+        picks, npick, _, _, s1_raw, s1_cnt = _sur_greedy_scan_nodonate(
             resp_p, valid_p, w_p, empty_p, theta_p, p_p, b_p, budgets_p,
-            num_classes=K,
+            m_p, num_classes=K, full=False,
         )
     picks = np.asarray(picks)
     npick = np.asarray(npick)
@@ -419,14 +758,9 @@ def sur_greedy_many(
     for i, g in enumerate(live):
         p_g = est.ps[i]
         afford = np.flatnonzero(b <= budgets[g] + 1e-15)
-        l_star = int(afford[np.argmax(p_g[afford])])
-        s1 = [int(a) for a in picks[i, : npick[i]]]
-        s2, _ = greedy(
-            p_g, b, budgets[g], gamma_value_batch(p_g), empty_value=0.0
-        )
-        l_stars.append(l_star)
-        s1s.append(s1)
-        s2s.append(s2)
+        l_stars.append(int(afford[np.argmax(p_g[afford])]))
+        s1s.append([int(a) for a in picks[i, : npick[i]]])
+        s2s.append(_greedy_gamma(p_g, b, budgets[g])[0])
 
     xi_vals = est.final_xi(l_stars, s1s, s2s, s1_raw, s1_cnt)  # (n, 3) f64
     for i, g in enumerate(live):

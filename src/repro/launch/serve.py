@@ -49,6 +49,7 @@ from repro.serving import (
     PoolEngine,
     ReplicaSet,
     ThriftRouter,
+    configure_compile_cache,
 )
 
 
@@ -98,7 +99,20 @@ def main() -> None:
     ap.add_argument("--fault-arms", type=str, default="",
                     help="comma-separated arm indices the fault policy "
                          "targets (default: all arms)")
+    ap.add_argument("--compile-cache-dir", type=str, default=None,
+                    help="persist XLA executables to this directory so a "
+                         "restarted process loads its wave/planner compile "
+                         "buckets from disk instead of re-lowering "
+                         "(default: $REPRO_COMPILE_CACHE_DIR, else off)")
     args = ap.parse_args()
+
+    cache_info = configure_compile_cache(args.compile_cache_dir)
+    if cache_info["cache_dir"] is not None:
+        print(
+            f"compile cache: enabled={cache_info['enabled']} "
+            f"dir={cache_info['cache_dir']} backend={cache_info['backend']} "
+            f"supported={cache_info['supported']} — {cache_info['detail']}"
+        )
 
     if args.devices > 0:
         # must land before the first backend touch (jax.devices() inside

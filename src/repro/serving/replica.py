@@ -442,6 +442,7 @@ class ReplicaSet:
             router.engine, router.estimator, router.num_classes,
             use_kernel=router.use_kernel, jit_waves=router.jit_waves,
             failover=router.failover, plan_service=router.plans,
+            donate_buffers=router.donate_buffers,
         )
         clone.selector = router.selector
         return clone

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import warnings
 from typing import Any, List, Optional
 
 import jax
@@ -67,6 +68,7 @@ from repro.distributed.fault import (
 )
 from repro.kernels import ops
 
+from .compile_cache import configure_compile_cache
 from .engine import PoolEngine
 from .plans import GroupPlan, PlanService, stack_plans
 
@@ -179,8 +181,7 @@ def _bucket(n: int, *, base: int) -> int:
     return bucket_size(n, base)
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes", "use_kernel"))
-def _wave_scan(
+def _wave_scan_core(
     schedule: jnp.ndarray,    # (T, B) int32 arm ids, -1 = none (wave-major)
     responses: jnp.ndarray,   # (T, B) int32 precomputed responses, -1 = none
     weights: jnp.ndarray,     # (T, B) f64 log belief weight per wave
@@ -296,6 +297,36 @@ def _wave_scan(
     # first-max argmax, identical to the host path's deterministic tie-break
     preds = jnp.argmax(beliefs, axis=-1)
     return s, preds, beliefs
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Donation is declarative — XLA aliases the donated inputs it can use
+    and warns once at compile time about the rest; the caller-side contract
+    ("the staged tables are dead after dispatch") is what the wrappers and
+    the `donation-contract` lint rule enforce, so the partial-use warning
+    is expected noise at the dispatch seams."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        yield
+
+# The serving default donates the staged response/weight/residual wave
+# tables: `_dispatch_jit` builds them as throwaway locals (host numpy —
+# the jit transfers a fresh device copy per call and donates that copy),
+# re-reads nothing after the call, and `prewarm_compile` passes dummies.
+# `_wave_scan_nodonate` is the bit-identical twin for callers that keep
+# the staged device buffers alive (`ThriftRouter(donate_buffers=False)`).
+# Each wrapper owns one compile per (T, B, K) bucket.
+_wave_scan = functools.partial(
+    jax.jit, static_argnames=("num_classes", "use_kernel"),
+    donate_argnums=(1, 2, 3),
+)(_wave_scan_core)
+
+_wave_scan_nodonate = functools.partial(
+    jax.jit, static_argnames=("num_classes", "use_kernel"),
+)(_wave_scan_core)
 
 
 class PendingRoute:
@@ -448,8 +479,9 @@ class PendingRoute:
             jax.default_device(router.device)
             if router.device is not None else contextlib.nullcontext()
         )
-        with enable_x64(), ctx:
-            self._dev = _wave_scan(
+        scan_fn = _wave_scan if router.donate_buffers else _wave_scan_nodonate
+        with enable_x64(), ctx, _quiet_donation():
+            self._dev = scan_fn(
                 sched_p, resp_p, w_p, res_p, src_p, valid_p, empty_p,
                 self.stop_margin,
                 num_classes=router.num_classes, use_kernel=router.use_kernel,
@@ -745,6 +777,7 @@ class ThriftRouter:
         jit_waves: bool = True,
         failover: bool = True,
         plan_service: Optional[PlanService] = None,
+        donate_buffers: bool = True,
     ):
         self.engine = engine
         self.estimator = estimator
@@ -752,6 +785,10 @@ class ThriftRouter:
         self.use_kernel = bool(use_kernel)
         self.jit_waves = bool(jit_waves)
         self.failover = bool(failover)
+        # Donate the staged wave tables to XLA (`_wave_scan` vs its
+        # `_nodonate` twin): bit-identical either way; off keeps the
+        # transferred device buffers readable after dispatch (debugging).
+        self.donate_buffers = bool(donate_buffers)
         # Optional device pin for the wave program. None (default) leaves
         # placement to JAX (the process default device). A ReplicaSet in
         # overlapped placement sets this per worker so each worker's wave
@@ -974,9 +1011,16 @@ class ThriftRouter:
         as a serving replica taking ragged traffic should. ``max_waves``
         defaults to the pool size (no plan can schedule more arms than
         exist). Returns the number of bucket programs visited; no-op for
-        routers pinned to the reference plane."""
+        routers pinned to the reference plane.
+
+        When ``REPRO_COMPILE_CACHE_DIR`` is set (see
+        :func:`repro.serving.compile_cache.configure_compile_cache`) the
+        executables compiled here are written to the persistent cache, so
+        the *next* process's prewarm loads them instead of re-lowering —
+        cold-start latency survives restarts."""
         if not self.jit_waves:
             return 0
+        configure_compile_cache()    # no-op unless the env var opts in
         if all_batch_buckets:
             b_buckets = sorted({
                 _bucket(b, base=8) for b in range(1, max(1, int(max_batch)) + 1)
@@ -998,8 +1042,11 @@ class ThriftRouter:
                     if self.device is not None
                     else contextlib.nullcontext()
                 )
-                with enable_x64(), ctx:
-                    _wave_scan(
+                scan_fn = (
+                    _wave_scan if self.donate_buffers else _wave_scan_nodonate
+                )
+                with enable_x64(), ctx, _quiet_donation():
+                    scan_fn(
                         np.full((Tp, Bp), -1, np.int32),
                         np.full((Tp, Bp), -1, np.int32),
                         np.zeros((Tp, Bp), np.float64),

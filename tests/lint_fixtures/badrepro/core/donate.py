@@ -1,0 +1,59 @@
+"""Seeded donation-contract violations (never imported; parsed only)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STAGED = np.zeros((8, 8))
+_SCRATCH = {"resp": np.zeros((8, 8))}
+
+
+def _wave_core(sched, resp, w):
+    return resp * w
+
+
+wave = functools.partial(jax.jit, donate_argnums=(1, 2))(_wave_core)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def fused_step(state, delta):
+    return state + delta
+
+
+def reread_after_donation(sched, resp, w):
+    out = wave(sched, resp, w)  # FIRES: donation-contract
+    return out + resp.sum()
+
+
+def donates_module_buffer(sched, w):
+    return wave(sched, _STAGED, w)  # FIRES: donation-contract
+
+
+def donates_scratch_entry(sched, w):
+    return wave(sched, _SCRATCH["resp"], w)  # FIRES: donation-contract
+
+
+class Engine:
+    def __init__(self):
+        self._table = jnp.zeros((4, 4))
+
+    def step(self, sched, w):
+        return wave(sched, self._table, w)  # FIRES: donation-contract
+
+
+def caller_keeps_state(state, delta):
+    new = fused_step(state, delta)  # FIRES: donation-contract
+    return new - state
+
+
+def safe_throwaway_locals(sched):
+    resp = jnp.ones((8, 8))
+    w = jnp.ones((8, 8))
+    return wave(sched, resp, w)
+
+
+def safe_reassigned_before_read(sched, resp, w):
+    out = wave(sched, resp, w)
+    resp = jnp.zeros((8, 8))
+    return out + resp

@@ -151,6 +151,29 @@ def test_jit_waves_false_dispatches_to_reference():
     assert res.arms_used == res_ref.arms_used
 
 
+def test_donate_buffers_off_is_bit_identical():
+    """PR 10: the serving default donates the staged wave tables
+    (`_wave_scan`); `donate_buffers=False` routes through the nodonate
+    twin. Both must produce bitwise the same routes — donation is a
+    storage contract, never a numerics knob."""
+    K, L, clusters, B, seed = 4, 8, 5, 64, 3
+    wl, est, engine, router, qemb, R = _make_pool(K, L, clusters, B, seed)
+    assert router.donate_buffers            # serving default
+    router_nd = ThriftRouter(
+        engine, est, num_classes=K, donate_buffers=False
+    )
+    rng = np.random.default_rng(seed + 5)
+    budgets = rng.choice(np.quantile(engine.costs, [0.3, 0.8]) * 2.5, size=B)
+    res = router.route_batch(np.arange(B), qemb, budgets)
+    res_nd = router_nd.route_batch(np.arange(B), qemb, budgets)
+    np.testing.assert_array_equal(res.predictions, res_nd.predictions)
+    np.testing.assert_allclose(res.costs, res_nd.costs, rtol=0, atol=0)
+    np.testing.assert_allclose(
+        res.planned_costs, res_nd.planned_costs, rtol=0, atol=0
+    )
+    assert res.arms_used == res_nd.arms_used
+
+
 def test_kernel_backend_matches_on_jitted_and_reference_paths():
     """use_kernel=True: the Pallas kernel dispatched from inside the jitted
     scan agrees with the kernel-backed compacting loop and the numpy path."""

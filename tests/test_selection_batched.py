@@ -201,6 +201,180 @@ class TestCompileBudget:
         )
 
 
+class TestFusedGammaPlane:
+    """PR 10: the greedy-on-gamma / l* / candidate-scoring stages moved
+    into the device program — the fused plane must stay bitwise the serial
+    one everywhere, including exact gamma ties and padding."""
+
+    @pytest.mark.parametrize(
+        "seed,G,L,budget_lo,budget_hi",
+        [
+            (20, 1, 4, 0.3, 1.0),
+            (21, 3, 8, 0.2, 0.8),    # tight budgets: ragged affordability
+            (22, 8, 6, 0.5, 2.5),
+            (23, 9, 10, 0.3, 3.5),   # ragged G, generous budgets
+            (24, 5, 12, 0.1, 0.6),
+        ],
+    )
+    def test_equivalence_grid(self, seed, G, L, budget_lo, budget_hi):
+        K = 4
+        ps, b, budgets, thetas = _case(seed, G, L, K, budget_lo, budget_hi)
+        key = jax.random.key(5)
+        serial = [
+            sur_greedy(ps[g], b, float(budgets[g]), K, key, int(thetas[g]))
+            for g in range(G)
+        ]
+        batched = sur_greedy_many(ps, b, budgets, K, key, thetas)
+        for s, m in zip(serial, batched):
+            _assert_same(s, m)
+
+    def test_exact_gamma_ties(self):
+        """Duplicated (p, b) columns make every gamma-plane round an exact
+        ratio tie; the device argmax must reproduce the serial p/b-then-
+        first-index tie-break bit for bit."""
+        rng = np.random.default_rng(30)
+        G, half = 4, 5
+        ps_half = rng.uniform(0.3, 0.9, (G, half))
+        ps = np.concatenate([ps_half, ps_half], axis=1)
+        b_half = rng.uniform(0.1, 0.8, half)
+        b = np.concatenate([b_half, b_half])
+        budgets = rng.uniform(0.5, 3.0, G)
+        thetas = rng.integers(150, 500, G)
+        key = jax.random.key(8)
+        serial = [
+            sur_greedy(ps[g], b, float(budgets[g]), 3, key, int(thetas[g]))
+            for g in range(G)
+        ]
+        batched = sur_greedy_many(ps, b, budgets, 3, key, thetas)
+        for s, m in zip(serial, batched):
+            _assert_same(s, m)
+
+    def test_nothing_affordable_groups_are_inert(self):
+        """Zero-budget groups take the serial early return and do not
+        perturb the live groups sharing their dispatch."""
+        ps, b, budgets, thetas = _case(31, 5, 7, 4, 0.5, 2.0)
+        budgets[0] = 0.0
+        budgets[3] = float(b.min()) * 0.25
+        key = jax.random.key(9)
+        serial = [
+            sur_greedy(ps[g], b, float(budgets[g]), 4, key, int(thetas[g]))
+            for g in range(5)
+        ]
+        batched = sur_greedy_many(ps, b, budgets, 4, key, thetas)
+        for s, m in zip(serial, batched):
+            _assert_same(s, m)
+        assert batched[0].s1 is None and batched[3].s1 is None
+
+    def test_padded_bucket_invariance(self):
+        """The same groups planned under group_bucket=8 (G=5 pads to 8)
+        and group_bucket=64 (pads to 64) are bitwise identical — padded
+        rows are inert."""
+        ps, b, budgets, thetas = _case(32, 5, 9, 4, 0.3, 2.0)
+        key = jax.random.key(12)
+        small = sur_greedy_many(
+            ps, b, budgets, 4, key, thetas, group_bucket=8
+        )
+        large = sur_greedy_many(
+            ps, b, budgets, 4, key, thetas, group_bucket=64
+        )
+        for s, m in zip(small, large):
+            _assert_same(s, m)
+
+    def test_hostgamma_baseline_equivalence(self):
+        """The retained PR 9 plane (host gamma/l* loop + separate final_xi
+        dispatch) and the fused plane agree bitwise — the bench baseline
+        measures speed, not drift."""
+        from repro.core.selection import _sur_greedy_many_hostgamma
+
+        ps, b, budgets, thetas = _case(33, 7, 8, 4, 0.3, 2.5)
+        key = jax.random.key(21)
+        fused = sur_greedy_many(ps, b, budgets, 4, key, thetas)
+        host = _sur_greedy_many_hostgamma(ps, b, budgets, 4, key, thetas)
+        for s, m in zip(host, fused):
+            _assert_same(s, m)
+
+
+class TestDonationSafety:
+    """`donate_argnums` on the planner scan: bit-identical results, and
+    the donated device buffers really are handed over (deleted)."""
+
+    def test_donate_on_off_bit_identical(self):
+        ps, b, budgets, thetas = _case(40, 6, 8, 4, 0.3, 2.0)
+        key = jax.random.key(31)
+        on = sur_greedy_many(ps, b, budgets, 4, key, thetas, donate=True)
+        off = sur_greedy_many(ps, b, budgets, 4, key, thetas, donate=False)
+        for s, m in zip(on, off):
+            _assert_same(s, m)
+
+    def test_donation_semantics_delete_usable_buffers(self):
+        """The contract the `donation-contract` lint rule guards: when a
+        donated input CAN alias an output, XLA deletes it and a host
+        re-read raises. (Demonstrated on a minimal wrapper whose output
+        shape matches — the planner/wave programs return reductions, see
+        the companion test below.)"""
+        import functools
+
+        import jax.numpy as jnp
+
+        donating = functools.partial(jax.jit, donate_argnums=(0,))(
+            lambda x, y: x * 2.0 + y
+        )
+        x = jnp.ones((16, 16))
+        y = jnp.ones((16, 16))
+        out = donating(x, y)
+        jax.block_until_ready(out)
+        assert x.is_deleted() and not y.is_deleted()
+        with pytest.raises(RuntimeError, match="deleted"):
+            np.asarray(x)
+
+    def test_planner_donation_is_declarative_on_reduction_outputs(self):
+        """`_sur_greedy_scan` returns reductions (picks, counts, xi), so
+        none of its donated staging tables can alias an output: XLA
+        records them unusable at compile time and leaves the host-visible
+        device arrays alive. Donation on this program is a declarative
+        forward-compatible no-op — callers must still honor the contract,
+        but committed inputs stay readable on this backend."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        from repro.core import selection as selection_mod
+        from repro.core.mc import GroupedXiEstimator as GXE
+
+        ps, b, budgets, thetas = _case(41, 2, 5, 3, 0.5, 1.5)
+        key = jax.random.key(2)
+        est = GXE(key, ps, 3, thetas)
+        scr, b_p, _, _ = selection_mod._stage_groups(est, b, budgets, 8)
+        for wrapper in (
+            selection_mod._sur_greedy_scan,
+            selection_mod._sur_greedy_scan_nodonate,
+        ):
+            with enable_x64(), selection_mod._quiet_donation():
+                dev = {k: jnp.asarray(v) for k, v in scr.items()}
+                dev_b = jnp.asarray(b_p)
+                out = wrapper(
+                    dev["resp"], dev["valid"], dev["w"], dev["empty"],
+                    dev["theta"], dev["p"], dev_b, dev["budgets"],
+                    dev["m"], num_classes=3, full=True,
+                )
+                jax.block_until_ready(out)
+            # donate_argnums=(0, 1, 2) == (resp, valid, w): unusable for
+            # aliasing here, so they survive either wrapper
+            for name in ("resp", "valid", "w", "budgets"):
+                assert not dev[name].is_deleted(), name
+                np.asarray(dev[name])
+
+    def test_host_scratch_survives_donation(self):
+        """The serving path passes the module-level staging scratch as
+        numpy: back-to-back plans reusing the same scratch buffers must
+        stay correct (the jit donates its own transfer, not our arrays)."""
+        ps, b, budgets, thetas = _case(42, 4, 6, 4, 0.4, 2.0)
+        key = jax.random.key(13)
+        first = sur_greedy_many(ps, b, budgets, 4, key, thetas)
+        again = sur_greedy_many(ps, b, budgets, 4, key, thetas)
+        for s, m in zip(first, again):
+            _assert_same(s, m)
+
+
 # ---------------------------------------------------------------------------
 # Property: the batched greedy is invariant to group permutation
 # ---------------------------------------------------------------------------

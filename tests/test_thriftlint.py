@@ -116,8 +116,8 @@ class TestWalker:
 
     def test_finds_the_declared_entry_points(self, project):
         entries = {e.fn.qualname for e in project.jit_entries if e.fn}
-        assert {"_wave_scan", "_sur_greedy_scan", "xi_from_responses",
-                "sample_pool_responses"} <= entries
+        assert {"_wave_scan_core", "_sur_greedy_scan_core",
+                "xi_from_responses", "sample_pool_responses"} <= entries
 
     def test_wrapper_assignment_idiom_resolves(self, project):
         # mc.py: `xi_from_responses_grouped = partial(jax.jit, ...)(core)`
@@ -132,8 +132,8 @@ class TestWalker:
 
     def test_nested_scan_bodies_are_reachable(self, project):
         names = {f.qualname for f in project.reachable}
-        assert "_sur_greedy_scan.<locals>.body" in names
-        assert "_sur_greedy_scan.<locals>.cond" in names
+        assert "_sur_greedy_scan_core.<locals>.body" in names
+        assert "_sur_greedy_scan_core.<locals>.cond" in names
 
     def test_pallas_kernels_are_roots(self, project):
         assert len(project.pallas_sites) >= 5
